@@ -1,0 +1,67 @@
+"""Paper Table 3 analog: ablation over spectral embedding, encoder
+architecture and loss function."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.data import make_test_set
+
+from benchmarks.bench_fillin import evaluate_method, train_pfm
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+
+VARIANTS = [
+    # (name, kwargs) — mirrors Table 3 rows
+    ("randinit+MgGNN+FactLoss", dict(use_se=False, encoder="mggnn",
+                                     loss_mode="factloss")),
+    ("Se+MgGNN+PCE", dict(use_se=True, encoder="mggnn",
+                          loss_mode="pce")),
+    ("Se+MgGNN+UDNO", dict(use_se=True, encoder="mggnn",
+                           loss_mode="udno")),
+    ("Se+GUnet+FactLoss", dict(use_se=True, encoder="gunet",
+                               loss_mode="factloss")),
+    ("Se+MgGNN+FactLoss(PFM)", dict(use_se=True, encoder="mggnn",
+                                    loss_mode="factloss")),
+]
+
+
+def run(quick: bool = False):
+    # evaluate INSIDE the training size regime (n<=600): beyond it the
+    # exact-Fiedler fallback + residual anchor dominates and all learned
+    # variants converge (see EXPERIMENTS.md §Paper) — the ablation is
+    # about the learned components, so hold out same-family matrices at
+    # training scale instead (paper Table 3 uses SP/CFD categories).
+    from repro.data import delaunay_like, fem_like
+    cases = [("CFD", delaunay_like(450, "hole6", seed=201)),
+             ("CFD", delaunay_like(380, "hole3", seed=202)),
+             ("SP", fem_like(420, "gradel", seed=203)),
+             ("SP", fem_like(500, "hole3", seed=204))]
+    if quick:
+        cases = cases[:2]
+    rows = []
+    for name, kw in VARIANTS:
+        pfm = train_pfm(epochs=2 if quick else 3,
+                        n_train=4 if quick else 8, **kw)
+        row = evaluate_method(name, pfm.permutation, cases)
+        rows.append(row)
+    OUT.mkdir(exist_ok=True)
+    (OUT / "table3_ablation.json").write_text(json.dumps(rows, indent=2))
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    cats = sorted(set(k for r in rows for k in r
+                      if k not in ("method",) and not k.endswith("_ms")))
+    print("variant," + ",".join(cats))
+    for r in rows:
+        print(r["method"] + "," + ",".join(
+            f"{r.get(c, float('nan')):.2f}" for c in cats))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Paper Table 2 analog: fill-in ratio and LU factorization time across
+ordering methods on the benchmark test set (synthetic SuiteSparse
+stand-ins, categories matching the paper's SP/CFD/2D3D/TP/MRP/Other)."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core import baselines, fillin
+from repro.core.admm import PFMConfig
+from repro.core.pfm import PFM
+from repro.data import make_test_set, make_training_set
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+
+
+def train_pfm(seed: int = 0, epochs: int = 3, loss_mode: str = "factloss",
+              encoder: str = "mggnn", use_se: bool = True,
+              n_train: int = 8, verbose: bool = False) -> PFM:
+    train = make_training_set(n_matrices=n_train, n_min=100, n_max=320,
+                              seed=seed)
+    cfg = PFMConfig(n_admm=4, n_sinkhorn=10, sigma=0.02, encoder=encoder,
+                    score_residual=1.0 if use_se else 0.0)
+    pfm = PFM(cfg, seed=seed, x_mode="se" if use_se else "random")
+    if use_se:
+        pfm.pretrain_se([A for _, A in train[:4]], steps=120,
+                        verbose=verbose)
+    if loss_mode == "factloss":
+        pfm.fit(train, epochs=epochs, verbose=verbose)
+    elif loss_mode == "pce":
+        targets = [min((baselines.min_degree(A), baselines.rcm(A)),
+                       key=lambda p: fillin.cholesky_fillin_ratio(A, p))
+                   for _, A in train]
+        pfm.fit_pce(train, targets, steps=60 * epochs, verbose=verbose)
+    elif loss_mode == "udno":
+        pfm.fit_udno(train, steps=60 * epochs, verbose=verbose)
+    return pfm
+
+
+def evaluate_method(name, perm_fn, cases):
+    per_cat = defaultdict(list)
+    times = defaultdict(list)
+    order_times = defaultdict(list)
+    for cat, A in cases:
+        t0 = time.perf_counter()
+        perm = perm_fn(A)
+        order_times[cat].append(time.perf_counter() - t0)
+        res = fillin.lu_fillin_splu(A, perm)
+        per_cat[cat].append(res["fillin_ratio"])
+        times[cat].append(res["lu_time_s"])
+    cats = sorted(per_cat)
+    row = {"method": name}
+    for c in cats:
+        row[c] = float(np.mean(per_cat[c]))
+        row[c + "_lu_ms"] = float(np.mean(times[c]) * 1e3)
+    row["All"] = float(np.mean([r for c in cats for r in per_cat[c]]))
+    row["All_lu_ms"] = float(np.mean(
+        [t for c in cats for t in times[c]]) * 1e3)
+    row["All_order_ms"] = float(np.mean(
+        [t for c in cats for t in order_times[c]]) * 1e3)
+    return row
+
+
+def load_trained_pfm() -> PFM | None:
+    """Reuse the full-budget trained model (experiments/pfm_trained.pkl,
+    produced by experiments/train_pfm_full.py) when present."""
+    import pickle
+    path = OUT / "pfm_trained.pkl"
+    if not path.exists():
+        return None
+    with open(path, "rb") as f:
+        state = pickle.load(f)
+    pfm = PFM(PFMConfig(n_admm=4, n_sinkhorn=10, sigma=0.02), seed=0)
+    pfm.load_state_dict(state)
+    return pfm
+
+
+def run(pfm: PFM | None = None, quick: bool = False):
+    cases = make_test_set()
+    if quick:
+        cases = cases[:4]
+    methods = {
+        "natural": baselines.natural,
+        "rcm": baselines.rcm,
+        "min_degree": baselines.min_degree,
+        "fiedler": baselines.fiedler,
+        "spectral_nd": baselines.spectral_nd,
+    }
+    rows = []
+    for name, fn in methods.items():
+        rows.append(evaluate_method(name, fn, cases))
+    if pfm is None:
+        pfm = load_trained_pfm()
+    if pfm is None:
+        pfm = train_pfm(epochs=2 if quick else 3,
+                        n_train=4 if quick else 8)
+    rows.append(evaluate_method("pfm", pfm.permutation, cases))
+
+    OUT.mkdir(exist_ok=True)
+    (OUT / "table2_fillin.json").write_text(json.dumps(rows, indent=2))
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    cats = [k for k in rows[0] if k not in ("method",)
+            and not k.endswith("_ms")]
+    print("method," + ",".join(cats) + ",All_lu_ms,All_order_ms")
+    for r in rows:
+        print(r["method"] + "," + ",".join(
+            f"{r[c]:.2f}" for c in cats)
+            + f",{r['All_lu_ms']:.1f},{r['All_order_ms']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Paper Fig. 4 analog: fill-in ratio, LU time and ordering time as the
+matrix size grows — demonstrates the O(GNN) inference scalability claim
+(Table 1) vs the spectral/graph-theoretic baselines."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import baselines, fillin
+from repro.data import delaunay_like, grid_2d
+
+from benchmarks.bench_fillin import train_pfm
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+
+SIZES = [400, 900, 2500, 6400, 10000]
+
+
+def run(quick: bool = False):
+    from benchmarks.bench_fillin import load_trained_pfm
+    sizes = SIZES[:3] if quick else SIZES
+    pfm = load_trained_pfm()
+    if pfm is None:
+        pfm = train_pfm(epochs=2, n_train=4 if quick else 6)
+    methods = {
+        "rcm": baselines.rcm,
+        "min_degree": baselines.min_degree,
+        "fiedler": baselines.fiedler,
+        "pfm": pfm.permutation,
+    }
+    rows = []
+    for n in sizes:
+        side = int(np.sqrt(n))
+        mats = [("grid", grid_2d(side, seed=1)),
+                ("delaunay", delaunay_like(n, "gradel", seed=2))]
+        for name, fn in methods.items():
+            ratios, lu_ms, ord_ms = [], [], []
+            for _, A in mats:
+                t0 = time.perf_counter()
+                perm = fn(A)
+                ord_ms.append((time.perf_counter() - t0) * 1e3)
+                res = fillin.lu_fillin_splu(A, perm)
+                ratios.append(res["fillin_ratio"])
+                lu_ms.append(res["lu_time_s"] * 1e3)
+            rows.append({
+                "n": int(A.shape[0]), "method": name,
+                "fillin_ratio": float(np.mean(ratios)),
+                "lu_ms": float(np.mean(lu_ms)),
+                "order_ms": float(np.mean(ord_ms)),
+            })
+    OUT.mkdir(exist_ok=True)
+    (OUT / "fig4_scaling.json").write_text(json.dumps(rows, indent=2))
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    print("n,method,fillin_ratio,lu_ms,order_ms")
+    for r in rows:
+        print(f"{r['n']},{r['method']},{r['fillin_ratio']:.2f},"
+              f"{r['lu_ms']:.1f},{r['order_ms']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

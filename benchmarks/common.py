@@ -1,0 +1,20 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt
+
+
+def emit(rows, header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,69 @@
+"""Roofline table: reads experiments/dryrun/*.json (produced by
+repro.launch.dryrun) and renders the per-(arch x shape x mesh) roofline
+terms + bottleneck + useful-flops ratios for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" \
+    / "dryrun"
+
+
+def load():
+    recs = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def render(recs, mesh="single"):
+    lines = []
+    header = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} "
+              f"{'memory_s':>10s} {'coll_s':>10s} {'bottleneck':>12s} "
+              f"{'useful%':>8s} {'roofline%':>9s}")
+    lines.append(header)
+    lines.append("-" * len(header))
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} "
+                         f"{'skipped: ' + r['reason']}")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} ERROR")
+            continue
+        ro = r["roofline"]
+        uf = ro.get("useful_flops_frac")
+        rf = ro.get("roofline_frac")
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} "
+            f"{ro['compute_s']:10.3e} {ro['memory_s']:10.3e} "
+            f"{ro['collective_s']:10.3e} "
+            f"{ro['bottleneck'].replace('_s', ''):>12s} "
+            f"{(100 * uf if uf else float('nan')):8.1f} "
+            f"{(100 * rf if rf else float('nan')):9.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("no dry-run records found — run "
+              "`python -m repro.launch.dryrun` first")
+        return []
+    for mesh in ("single", "multi"):
+        n = sum(1 for r in recs if r.get("mesh") == mesh)
+        if n:
+            print(f"\n== mesh: {mesh} ({n} cells) ==")
+            print(render(recs, mesh))
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_err = len(recs) - n_ok - n_skip
+    print(f"\ncells: {n_ok} ok / {n_skip} skipped / {n_err} error")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

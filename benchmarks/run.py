@@ -1,0 +1,49 @@
+"""Benchmark runner: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Emits per-table CSV blocks and writes JSON artifacts to experiments/.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes / fewer epochs")
+    ap.add_argument("--only", default=None,
+                    help="kernels|fillin|ablation|scaling|roofline")
+    args = ap.parse_args()
+
+    benches = []
+    if args.only in (None, "kernels"):
+        benches.append(("kernels (microbench)", "bench_kernels", {}))
+    if args.only in (None, "fillin"):
+        benches.append(("Table 2: fill-in ratio + LU time",
+                        "bench_fillin", {"quick": args.quick}))
+    if args.only in (None, "ablation"):
+        benches.append(("Table 3: ablation", "bench_ablation",
+                        {"quick": args.quick}))
+    if args.only in (None, "scaling"):
+        benches.append(("Fig 4: scalability", "bench_scaling",
+                        {"quick": args.quick}))
+    if args.only in (None, "roofline"):
+        benches.append(("Roofline (from dry-run)", "roofline", {}))
+
+    for title, mod_name, kw in benches:
+        print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+        t0 = time.perf_counter()
+        mod = __import__(f"benchmarks.{mod_name}",
+                         fromlist=["main"])
+        try:
+            mod.main(**kw)
+        except TypeError:
+            mod.main()
+        print(f"-- {title}: {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

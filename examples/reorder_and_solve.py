@@ -1,0 +1,67 @@
+"""End-to-end direct-solver scenario: Ax=b with and without PFM
+reordering — shows the memory (nnz of factors) and factorization-time
+win that motivates the paper.
+
+  PYTHONPATH=src python examples/reorder_and_solve.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np                                  # noqa: E402
+import scipy.sparse.linalg as spla                  # noqa: E402
+
+from repro.core import fillin                       # noqa: E402
+from repro.core.admm import PFMConfig               # noqa: E402
+from repro.core.pfm import PFM                      # noqa: E402
+from repro.data import fem_like, make_training_set  # noqa: E402
+
+
+def solve(A, b, perm=None):
+    if perm is not None:
+        A = fillin.apply_perm(A, perm)
+        b = b[perm]
+    t0 = time.perf_counter()
+    lu = spla.splu(A.tocsc(), permc_spec="NATURAL",
+                   options=dict(SymmetricMode=True))
+    t_fact = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    x = lu.solve(b)
+    t_solve = time.perf_counter() - t0
+    if perm is not None:  # undo the permutation on the solution
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(len(perm))
+        x = x[inv]
+    return x, lu.L.nnz + lu.U.nnz, t_fact, t_solve
+
+
+def main():
+    train = make_training_set(n_matrices=6, n_min=100, n_max=300, seed=1)
+    pfm = PFM(PFMConfig(n_admm=4, n_sinkhorn=10, sigma=0.02), seed=0)
+    pfm.fit(train, epochs=3)
+
+    A = fem_like(1500, "gradel", seed=42)
+    rng = np.random.default_rng(0)
+    b = rng.normal(size=A.shape[0])
+
+    x0, nnz0, tf0, ts0 = solve(A, b)
+    perm = pfm.permutation(A)
+    x1, nnz1, tf1, ts1 = solve(A, b, perm)
+
+    resid0 = np.linalg.norm(A @ x0 - b)
+    resid1 = np.linalg.norm(A @ x1 - b)
+    print(f"system: n={A.shape[0]} nnz(A)={A.nnz}")
+    print(f"{'ordering':10s} {'nnz(L+U)':>10s} {'factor ms':>10s} "
+          f"{'solve ms':>9s} {'residual':>10s}")
+    print(f"{'natural':10s} {nnz0:10d} {tf0 * 1e3:10.1f} "
+          f"{ts0 * 1e3:9.1f} {resid0:10.2e}")
+    print(f"{'pfm':10s} {nnz1:10d} {tf1 * 1e3:10.1f} "
+          f"{ts1 * 1e3:9.1f} {resid1:10.2e}")
+    print(f"\nfactor-memory saved: {100 * (1 - nnz1 / nnz0):.1f}%  "
+          f"(solutions agree: "
+          f"{np.allclose(x0, x1, rtol=1e-6, atol=1e-8)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Sharded, atomic, mesh-elastic checkpointing (msgpack + zstd).
+
+Production posture:
+  * ATOMIC two-phase commit: write to step_<n>.tmp/, fsync, rename.
+    A crash mid-write never corrupts the latest checkpoint.
+  * MESH-ELASTIC: arrays are stored unsharded-logical (gathered per
+    leaf) with their pytree structure; restore re-shards onto whatever
+    mesh/sharding the new job supplies — restarts may change pod count
+    or parallelism layout (tested in tests/test_checkpoint.py).
+    At true 1000-node scale each host would write its shard slice; the
+    wire format (one blob per leaf, path-keyed) already supports that
+    split — see `leaf_paths`.
+  * SELF-DESCRIBING: dtype/shape recorded per leaf; step + user metadata
+    in a JSON sidecar; integrity via per-leaf crc32.
+  * RETENTION: keep-last-k garbage collection.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import time
+import zlib
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def leaf_paths(tree):
+    return list(_flatten(tree)[0].keys())
+
+
+def save_checkpoint(ckpt_dir, step: int, tree, metadata: dict | None = None,
+                    keep: int = 3):
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"step_{step:010d}.tmp"
+    final = ckpt_dir / f"step_{step:010d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    flat, _ = _flatten(tree)
+    cctx = zstandard.ZstdCompressor(level=3)
+    index = {}
+    with open(tmp / "data.bin", "wb") as f:
+        for key, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            raw = arr.tobytes()
+            comp = cctx.compress(raw)
+            off = f.tell()
+            f.write(comp)
+            index[key] = {
+                "offset": off, "nbytes": len(comp),
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(raw) & 0xFFFFFFFF,
+            }
+        f.flush()
+        os.fsync(f.fileno())
+    meta = {"step": step, "time": time.time(), "index": index,
+            "user": metadata or {}}
+    with open(tmp / "meta.json", "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+
+    # retention
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
+                   if p.is_dir() and p.name.startswith("step_")
+                   and not p.name.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:010d}", ignore_errors=True)
+    return final
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
+             if p.is_dir() and p.name.startswith("step_")
+             and not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir, step: int, target_tree,
+                       shardings=None) -> Any:
+    """target_tree: pytree of arrays/ShapeDtypeStructs giving structure.
+    shardings: optional matching pytree of NamedSharding — restore
+    re-shards onto it (elastic restart on a different mesh)."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:010d}"
+    meta = json.loads((final / "meta.json").read_text())
+    index = meta["index"]
+    dctx = zstandard.ZstdDecompressor()
+
+    flat_target, treedef = _flatten(target_tree)
+    flat_shard = None
+    if shardings is not None:
+        flat_shard, _ = _flatten(shardings)
+
+    out = {}
+    with open(final / "data.bin", "rb") as f:
+        for key, spec in flat_target.items():
+            ent = index[key]
+            f.seek(ent["offset"])
+            raw = dctx.decompress(f.read(ent["nbytes"]))
+            assert zlib.crc32(raw) & 0xFFFFFFFF == ent["crc32"], \
+                f"checksum mismatch for {key}"
+            arr = np.frombuffer(raw, dtype=ent["dtype"]).reshape(
+                ent["shape"])
+            if flat_shard is not None:
+                out[key] = jax.device_put(arr, flat_shard[key])
+            else:
+                out[key] = jax.numpy.asarray(arr)
+    leaves = [out[k] for k in flat_target.keys()]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Step-loop integration: periodic saves, auto-resume, preemption."""
+
+    def __init__(self, ckpt_dir, interval: int = 100, keep: int = 3):
+        self.dir = pathlib.Path(ckpt_dir)
+        self.interval = interval
+        self.keep = keep
+        self._preempted = False
+
+    def maybe_save(self, step: int, tree, metadata=None, force=False):
+        if force or self._preempted or (self.interval > 0
+                                        and step % self.interval == 0):
+            return save_checkpoint(self.dir, step, tree, metadata,
+                                   self.keep)
+        return None
+
+    def signal_preemption(self):
+        """Hook for SIGTERM handlers: save at the next step boundary."""
+        self._preempted = True
+
+    def restore_latest(self, target_tree, shardings=None):
+        step = latest_step(self.dir)
+        if step is None:
+            return None, None
+        return step, restore_checkpoint(self.dir, step, target_tree,
+                                        shardings)

@@ -1,0 +1,2 @@
+"""One config module per assigned architecture (+ the paper's own PFM
+training step as an 11th 'architecture' for the dry-run/roofline)."""

@@ -1,0 +1,10 @@
+"""InternVL2-1B backbone: InternLM2-chat-1.8B-ish LM with ViT patch
+embeddings stubbed [arXiv:2404.16821; hf]. Qwen2-tokenizer vocab."""
+from repro.models.registry import ArchConfig
+
+ARCH = ArchConfig(
+    name="internvl2-1b", family="vlm",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_ff=4864, vocab=151655, head_dim=64,
+    n_patches=256,
+)

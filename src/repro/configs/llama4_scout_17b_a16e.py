@@ -1,0 +1,11 @@
+"""Llama-4-Scout-17B-16E backbone: MoE 16 experts top-1 + shared expert
+(early-fusion frontend out of scope; text backbone)
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]."""
+from repro.models.registry import ArchConfig
+
+ARCH = ArchConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=8192, vocab=202048, head_dim=128,
+    n_experts=16, top_k=1, moe_shared_ff=8192,
+)

@@ -1,0 +1,10 @@
+"""The paper's own technique as a dry-run 'architecture': one PFM ADMM
+training step (GNN + SoftRank + Gumbel-Sinkhorn + factorization-in-loop)
+at production matrix size. Handled specially by the launcher."""
+from repro.models.registry import ArchConfig
+
+ARCH = ArchConfig(
+    name="pfm-paper", family="pfm",
+    n_layers=0, d_model=16, n_heads=1, n_kv_heads=1,
+    d_ff=16, vocab=0,
+)

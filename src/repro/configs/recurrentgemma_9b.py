@@ -1,0 +1,12 @@
+"""RecurrentGemma-9B (Griffin): RG-LRU + local attention 1:2, MQA
+[arXiv:2402.19427; unverified]."""
+from repro.models.registry import ArchConfig
+
+ARCH = ArchConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1,
+    d_ff=12288, vocab=256000, head_dim=256,
+    window=2048, lru_width=4096,
+    block_pattern=("rec", "rec", "attn"),
+    subquadratic=True,   # RG-LRU state + windowed local attention
+)

@@ -1,0 +1,10 @@
+"""RWKV-6 Finch 1.6B: attention-free, data-dependent decay
+[arXiv:2404.05892; unverified]."""
+from repro.models.registry import ArchConfig
+
+ARCH = ArchConfig(
+    name="rwkv6-1.6b", family="ssm",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=7168, vocab=65536, rwkv_head_dim=64,
+    subquadratic=True,   # O(1) state -> runs long_500k
+)

@@ -1,0 +1,11 @@
+"""SeamlessM4T-medium: encoder-decoder, audio frontend stubbed
+(input_specs provides precomputed frame embeddings)
+[arXiv:2308.11596; hf]."""
+from repro.models.registry import ArchConfig
+
+ARCH = ArchConfig(
+    name="seamless-m4t-medium", family="encdec",
+    n_layers=0, enc_layers=12, dec_layers=12,
+    d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=256206, head_dim=64,
+)

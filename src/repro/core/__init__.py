@@ -1,0 +1,4 @@
+"""PFM core: the paper's contribution as a composable JAX module."""
+from repro.core.admm import PFMConfig  # noqa: F401
+from repro.core.pfm import PFM  # noqa: F401
+from repro.core import baselines, fillin, graph, reorder, spectral  # noqa: F401

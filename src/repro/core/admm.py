@@ -1,0 +1,217 @@
+"""Factorization-enhanced loss + ADMM optimization (paper Algorithm 1).
+
+The constrained problem  min ||L||_1  s.t.  P_theta A P_theta^T = L L^T
+is optimized via its augmented Lagrangian
+
+  L_rho(L, theta, Gamma) = ||L||_1 + tr(Gamma^T (A_theta - L L^T))
+                           + rho/2 ||A_theta - L L^T||_F^2
+
+with alternating updates:
+  * L:      gradient step on the smooth terms, then the l1 proximal
+            operator (soft-threshold) + tril — fused into one Pallas
+            kernel (kernels/prox_tril.py). This inner iteration *is* an
+            incomplete-Cholesky-like factorization-in-loop.
+  * theta:  one Adam step through GNN -> SoftRank -> Gumbel-Sinkhorn.
+  * Gamma:  dual ascent.
+
+Everything is a single jitted function; the ADMM loop is lax.fori_loop
+with (L, Gamma, params, opt_state, P) carried, so one XLA program per
+matrix-size bucket.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoder as enc
+from repro.core import reorder
+from repro.core.reorder import _ndtr
+from repro.kernels import ops as kops
+from repro.optim import apply_updates
+
+
+class PFMConfig(NamedTuple):
+    encoder: str = "mggnn"
+    sigma: float = 1e-3        # SoftRank noise std (paper: 0.001)
+    tau: float = 0.3           # Gumbel-Sinkhorn temperature
+    n_sinkhorn: int = 20
+    n_admm: int = 8
+    rho: float = 1.0           # paper: 1
+    eta: float = 0.01          # L-step size == prox threshold (paper: 0.01)
+    lr: float = 0.01           # theta Adam lr (paper: 0.01)
+    noise_scale: float = 1.0   # Gumbel noise scale (0 = deterministic)
+    use_kernels: bool = True
+    # residual scoring: Y = w*x_G + f_theta(x_G). Anchors the ordering
+    # at spectral (Fiedler) quality on out-of-distribution sizes while
+    # the encoder learns the fill-in-specific correction — the encoder
+    # "refines the task-specific information from X_G" (paper §Network)
+    # without being able to destroy it far from the training sizes.
+    score_residual: float = 1.0
+    # ---- beyond-paper perf levers (EXPERIMENTS.md §Perf):
+    reuse_m: bool = False      # reuse M = P A P^T between the theta-loss
+    #                            forward and the Gamma dual update
+    matmul_dtype: str = "f32"  # "bf16": n^3 matmuls in bf16, f32 accum
+
+
+def _mm(a, b, cfg: "PFMConfig"):
+    """n^3 matmul honouring the matmul_dtype lever (f32 accumulation)."""
+    if cfg.matmul_dtype == "bf16":
+        return jnp.dot(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    return a @ b
+
+
+def reordered(P, A, cfg: "PFMConfig"):
+    return _mm(_mm(P, A, cfg), P.T, cfg)
+
+
+def smooth_terms(L, P, A, Gamma, rho, cfg: "PFMConfig" = PFMConfig(),
+                 M=None):
+    """dual + l2 terms of Eq. (12) (the ||L||_1 term is handled by the
+    proximal operator, not by gradients). M, when given, short-circuits
+    the P A P^T recomputation (valid wherever P is not differentiated)."""
+    if M is None:
+        M = reordered(P, A, cfg)
+    R = M - _mm(L, L.T, cfg)
+    return jnp.sum(Gamma * R) + 0.5 * rho * jnp.sum(R * R)
+
+
+def predict_scores(params, cfg: PFMConfig, levels, x_g):
+    init_fn, apply_fn = enc.ENCODERS[cfg.encoder]
+    del init_fn
+    y = apply_fn(params, levels, x_g)[:, 0]
+    if cfg.score_residual:
+        spec = x_g[:, 0]
+        spec = spec / (jnp.std(spec) + 1e-6)
+        y = cfg.score_residual * spec + y
+    return y
+
+
+def _theta_loss(params, cfg: PFMConfig, levels, x_g, node_mask, A, L,
+                Gamma, key):
+    y = predict_scores(params, cfg, levels, x_g)
+    P = reorder.soft_permutation(
+        y, key, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
+        node_mask=node_mask, noise_scale=cfg.noise_scale,
+        use_kernel=cfg.use_kernels)
+    M = reordered(P, A, cfg)
+    loss = smooth_terms(L, P, A, Gamma, cfg.rho, cfg, M=M)
+    return loss, (P, M)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt"))
+def admm_train_matrix(params, opt_state, A, levels_tuple, x_g, node_mask,
+                      key, *, cfg: PFMConfig, opt):
+    """Run the full inner ADMM loop (Algorithm 1 lines 3-20) on one
+    matrix. levels_tuple: tuple of level dicts (hashable-static shapes).
+    Returns (params, opt_state, metrics)."""
+    levels = list(levels_tuple)
+    n = A.shape[0]
+
+    k_init, k_L, k_loop = jax.random.split(key, 3)
+    y0 = predict_scores(params, cfg, levels, x_g)
+    P0 = reorder.soft_permutation(
+        y0, k_init, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
+        node_mask=node_mask, noise_scale=cfg.noise_scale,
+        use_kernel=cfg.use_kernels)
+    # Warm-start: L0 = chol(diag(M)), Gamma0 = 0 — the paper's
+    # tril(randn) init diverges under the quartic l2 term at n>=128, see
+    # DESIGN.md §6; the diagonal warm start preserves the algorithm while
+    # keeping the smooth term in its stable basin.
+    M0 = reordered(P0, A, cfg)
+    L0 = jnp.diag(jnp.sqrt(jnp.maximum(jnp.diag(M0), 1e-3)))
+    L0 = L0 + 1e-3 * jnp.tril(jax.random.normal(k_L, (n, n)), -1)
+    G0 = jnp.zeros((n, n))
+    from repro.distributed.constrain import constrain, pfm_2d
+    if pfm_2d():
+        L0 = constrain(L0, "data", "model")
+        G0 = constrain(G0, "data", "model")
+        M0 = constrain(M0, "data", "model")
+
+    grad_L = jax.grad(smooth_terms, argnums=0)
+    grad_theta = jax.grad(_theta_loss, argnums=0, has_aux=True)
+
+    def _step_size(L, A):
+        """Lipschitz-scaled step: curvature of the l2 term grows with
+        ||L||^2 and ||M||, so scale eta down accordingly (keeps the
+        fixed-eta prox stable at any n)."""
+        lip = 1.0 + cfg.rho * (2.0 * jnp.sum(L * L) / n
+                               + jnp.sqrt(jnp.sum(A * A)))
+        return cfg.eta / lip
+
+    def body(k, carry):
+        L, Gamma, P, M, params, opt_state = carry
+        kk = jax.random.fold_in(k_loop, k)
+
+        # ---- L-update: gradient step + fused prox/tril (lines 9-13)
+        # reuse_m: M = P A P^T was already computed when P was (line 17
+        # of the previous iteration / init) — P is not differentiated
+        # here, so reusing the value is exact (§Perf lever 6).
+        gL = grad_L(L, P, A, Gamma, cfg.rho, cfg,
+                    M if cfg.reuse_m else None)
+        t = _step_size(L, A)
+        if cfg.use_kernels:
+            L = kops.prox_tril(L, gL, t, t)
+        else:
+            X = L - t * gL
+            L = jnp.tril(jnp.sign(X) * jnp.maximum(jnp.abs(X) - t, 0.0))
+
+        # ---- theta-update: one Adam step (lines 14-15)
+        gT, _ = grad_theta(params, cfg, levels, x_g, node_mask, A, L,
+                           Gamma, kk)
+        updates, opt_state = opt.update(gT, opt_state, params)
+        params = apply_updates(params, updates)
+
+        # ---- recompute scores / permutation (lines 16-17)
+        y = predict_scores(params, cfg, levels, x_g)
+        P = reorder.soft_permutation(
+            y, jax.random.fold_in(kk, 1), sigma=cfg.sigma, tau=cfg.tau,
+            n_iters=cfg.n_sinkhorn, node_mask=node_mask,
+            noise_scale=cfg.noise_scale, use_kernel=cfg.use_kernels)
+        M = reordered(P, A, cfg)
+
+        # ---- dual update (lines 18-19) — shares M with the carry
+        Gamma = Gamma + cfg.rho * (M - _mm(L, L.T, cfg))
+        return (L, Gamma, P, M, params, opt_state)
+
+    L, Gamma, P, M, params, opt_state = jax.lax.fori_loop(
+        0, cfg.n_admm, body, (L0, G0, P0, M0, params, opt_state))
+
+    R = M - L @ L.T
+    metrics = {
+        "l1": jnp.sum(jnp.abs(L)),
+        "residual": jnp.sqrt(jnp.sum(R * R)),
+        "loss": jnp.sum(jnp.abs(L)) + jnp.sum(Gamma * R)
+                + 0.5 * cfg.rho * jnp.sum(R * R),
+    }
+    return params, opt_state, metrics
+
+
+# ------------------------- alternative losses (ablation baselines) ------
+def pce_loss(params, cfg: PFMConfig, levels, x_g, node_mask, target_rank,
+             pair_u, pair_v):
+    """GPCE: pairwise cross entropy against a reference ordering.
+    pair_u/pair_v index sampled node pairs with rank[u] < rank[v]
+    (u should be eliminated earlier => higher score)."""
+    y = predict_scores(params, cfg, levels, x_g)
+    diff = y[pair_u] - y[pair_v]
+    return jnp.mean(jax.nn.softplus(-diff))
+
+
+def udno_loss(params, cfg: PFMConfig, levels, x_g, node_mask, senders,
+              receivers, edge_mask):
+    """UDNO-style expected-envelope loss: sum over edges of the expected
+    rank distance |mu_u - mu_v| under the SoftRank rank distribution."""
+    y = predict_scores(params, cfg, levels, x_g)
+    n = y.shape[0]
+    if node_mask is not None:
+        y = jnp.where(node_mask > 0, y, jnp.min(y) - 10.0)
+    diff = y[:, None] - y[None, :]
+    p_win = _ndtr(-diff / (jnp.sqrt(2.0) * cfg.sigma))
+    p_win = p_win * (1.0 - jnp.eye(n))
+    mu = jnp.sum(p_win, axis=1)
+    d = jnp.abs(mu[senders] - mu[receivers]) * edge_mask
+    return jnp.sum(d) / jnp.maximum(jnp.sum(edge_mask), 1.0)

@@ -1,0 +1,157 @@
+"""Graph node encoders.
+
+MgGNN: the multigrid SAGEConv U-net from the paper's appendix — two
+SAGEConv layers per level on the way down, Graclus pooling until <=2 real
+nodes, one SAGEConv at the coarsest level, interpolate+two SAGEConvs on
+the way up, then a 4-linear-layer score head. Weights are shared across
+levels (beyond the input level) so one parameter set serves any hierarchy
+depth — this is what lets a network trained on n<=500 run on n>=100k.
+
+GraphUNet: lighter alternative used in the paper's ablation.
+
+All padded sizes are derived from array shapes (never int leaves), so
+every function here jits cleanly with the level pytrees as arguments.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.layers import dense, dense_init
+
+HIDDEN = 16
+
+
+# ---------------------------------------------------------------- SAGEConv
+def sage_init(key, in_dim, out_dim):
+    k1, k2 = jax.random.split(key)
+    return {
+        "self": dense_init(k1, in_dim, out_dim,
+                           init=initializers.glorot_uniform),
+        "neigh": dense_init(k2, in_dim, out_dim, use_bias=False,
+                            init=initializers.glorot_uniform),
+    }
+
+
+def sage_conv(params, x, senders, receivers, edge_mask):
+    """x' = W1 x + W2 * mean_{j in N(i)} x_j  (masked, padded edges)."""
+    n_pad = x.shape[0]
+    msg = x[senders] * edge_mask[:, None]
+    agg = jax.ops.segment_sum(msg, receivers, num_segments=n_pad)
+    deg = jax.ops.segment_sum(edge_mask, receivers, num_segments=n_pad)
+    agg = agg / jnp.maximum(deg, 1.0)[:, None]
+    return dense(params["self"], x) + dense(params["neigh"], agg)
+
+
+def _double_sage(params_pair, x, lvl):
+    h = jnp.tanh(sage_conv(params_pair[0], x, lvl["senders"],
+                           lvl["receivers"], lvl["edge_mask"]))
+    h = jnp.tanh(sage_conv(params_pair[1], h, lvl["senders"],
+                           lvl["receivers"], lvl["edge_mask"]))
+    return h
+
+
+# ------------------------------------------------------------------ MgGNN
+def mggnn_init(key, in_dim: int = 1) -> Dict[str, Any]:
+    keys = jax.random.split(key, 12)
+    return {
+        # level-0 down pair maps in_dim -> 16 -> 16
+        "down0": [sage_init(keys[0], in_dim, HIDDEN),
+                  sage_init(keys[1], HIDDEN, HIDDEN)],
+        # shared deeper down pair 16 -> 16
+        "down": [sage_init(keys[2], HIDDEN, HIDDEN),
+                 sage_init(keys[3], HIDDEN, HIDDEN)],
+        "coarsest": sage_init(keys[4], HIDDEN, HIDDEN),
+        # shared up pair
+        "up": [sage_init(keys[5], HIDDEN, HIDDEN),
+               sage_init(keys[6], HIDDEN, HIDDEN)],
+        "head": [dense_init(keys[7], HIDDEN, HIDDEN),
+                 dense_init(keys[8], HIDDEN, HIDDEN),
+                 dense_init(keys[9], HIDDEN, HIDDEN),
+                 dense_init(keys[10], HIDDEN, 1)],
+    }
+
+
+def _pool(x, cluster, n_coarse_pad):
+    """Graclus pooling: mean of cluster members."""
+    summed = jax.ops.segment_sum(x, cluster, num_segments=n_coarse_pad)
+    cnt = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype), cluster,
+                              num_segments=n_coarse_pad)
+    return summed / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def mggnn_apply(params, levels: List[dict], x) -> jnp.ndarray:
+    """x: (n_pad, in_dim) node features on the finest level.
+    Returns (n_pad, 1) node scores."""
+    stack_x = []
+    h = x
+    depth = len(levels)
+    for li in range(depth - 1):
+        lvl = levels[li]
+        pair = params["down0"] if li == 0 else params["down"]
+        h = _double_sage(pair, h, lvl)
+        stack_x.append(h)
+        h = _pool(h, lvl["cluster"], lvl["coarse"].shape[0])
+
+    lvl = levels[depth - 1]
+    h = jnp.tanh(sage_conv(params["coarsest"], h, lvl["senders"],
+                           lvl["receivers"], lvl["edge_mask"]))
+
+    for li in range(depth - 2, -1, -1):
+        lvl = levels[li]
+        h = (h[lvl["cluster"]] + stack_x.pop()) / 2.0  # unpool + interp
+        h = _double_sage(params["up"], h, lvl)
+
+    for i, lin in enumerate(params["head"]):
+        h = dense(lin, h)
+        if i < len(params["head"]) - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+# -------------------------------------------------------------- GraphUNet
+def gunet_init(key, in_dim: int = 1, depth: int = 3) -> Dict[str, Any]:
+    keys = jax.random.split(key, 2 * depth + 6)
+    return {
+        "in": sage_init(keys[0], in_dim, HIDDEN),
+        "down": [sage_init(keys[1 + i], HIDDEN, HIDDEN)
+                 for i in range(depth)],
+        "pool_w": [initializers.glorot_uniform(keys[1 + depth + i],
+                                               (HIDDEN, 1))
+                   for i in range(depth)],
+        "up": [sage_init(keys[1 + 2 * depth + i], HIDDEN, HIDDEN)
+               for i in range(depth)],
+        "head": [dense_init(keys[-2], HIDDEN, HIDDEN),
+                 dense_init(keys[-1], HIDDEN, 1)],
+    }
+
+
+def gunet_apply(params, levels: List[dict], x) -> jnp.ndarray:
+    """GraphUNet on the finest graph (soft top-k gating keeps shapes
+    static under padding)."""
+    lvl = levels[0]
+    depth = len(params["down"])
+    h = jnp.tanh(sage_conv(params["in"], x, lvl["senders"],
+                           lvl["receivers"], lvl["edge_mask"]))
+    skips = []
+    for i in range(depth):
+        h = jnp.tanh(sage_conv(params["down"][i], h, lvl["senders"],
+                               lvl["receivers"], lvl["edge_mask"]))
+        gate = jnp.tanh(h @ params["pool_w"][i])  # (n,1) soft top-k gate
+        skips.append(h)
+        h = h * gate
+    for i in range(depth - 1, -1, -1):
+        h = (h + skips[i]) / 2.0
+        h = jnp.tanh(sage_conv(params["up"][i], h, lvl["senders"],
+                               lvl["receivers"], lvl["edge_mask"]))
+    h = jnp.tanh(dense(params["head"][0], h))
+    return dense(params["head"][1], h)
+
+
+ENCODERS = {
+    "mggnn": (mggnn_init, mggnn_apply),
+    "gunet": (gunet_init, gunet_apply),
+}

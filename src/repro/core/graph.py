@@ -1,0 +1,189 @@
+"""Matrix <-> graph transformation layer.
+
+A sparse symmetric matrix A becomes a graph G=(V,E): node per row/column,
+edge per off-diagonal nonzero. For jit-friendliness all edge lists are
+padded to a bucket size; padded edges point at a dedicated dummy slot and
+carry mask 0. The Graclus-style coarsening hierarchy (heavy-edge matching)
+is precomputed host-side in numpy — it is pure pattern preprocessing, the
+differentiable path only consumes the resulting index arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+import jax.numpy as jnp
+import scipy.sparse as sp
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass
+class GraphLevel:
+    """One level of the multigrid hierarchy (padded, jit-ready)."""
+    n: int                 # real node count
+    n_pad: int             # padded node count
+    senders: np.ndarray    # (e_pad,) int32
+    receivers: np.ndarray  # (e_pad,) int32
+    edge_mask: np.ndarray  # (e_pad,) float32
+    cluster: np.ndarray    # (n_pad,) int32 map to next-coarser level
+    n_coarse: int          # real node count of next level (0 at coarsest)
+    n_coarse_pad: int
+
+
+@dataclasses.dataclass
+class GraphData:
+    """Full padded multigrid graph for one matrix."""
+    n: int
+    n_pad: int
+    levels: List[GraphLevel]
+
+    def as_jnp(self):
+        """jit-friendly pytree: every leaf is an array; padded sizes are
+        conveyed through array *shapes* (coarse template / node template)
+        so they stay static under jit."""
+        return tuple(
+            dict(senders=jnp.asarray(l.senders),
+                 receivers=jnp.asarray(l.receivers),
+                 edge_mask=jnp.asarray(l.edge_mask),
+                 cluster=jnp.asarray(l.cluster),
+                 coarse=jnp.zeros((max(l.n_coarse_pad, 1),), jnp.float32))
+            for l in self.levels
+        )
+
+
+def symmetrize_pattern(A: sp.spmatrix) -> sp.csr_matrix:
+    A = sp.csr_matrix(A)
+    S = (abs(A) + abs(A).T)
+    S.setdiag(0)
+    S.eliminate_zeros()
+    return S.tocsr()
+
+
+def matrix_to_edges(A: sp.spmatrix):
+    """Off-diagonal symmetric pattern as (senders, receivers) incl. both
+    directions, with |a_ij| weights (used only for heavy-edge matching)."""
+    S = symmetrize_pattern(A).tocoo()
+    return (S.row.astype(np.int32), S.col.astype(np.int32),
+            np.abs(S.data).astype(np.float64))
+
+
+def heavy_edge_matching(n, rows, cols, w, rng: np.random.Generator):
+    """Graclus-style heavy-edge matching: each node matches its heaviest
+    unmatched neighbour. Returns cluster ids in [0, n_coarse)."""
+    order = rng.permutation(n)
+    match = np.full(n, -1, dtype=np.int64)
+    # adjacency in CSR for fast neighbour scan
+    adj = sp.csr_matrix((w, (rows, cols)), shape=(n, n))
+    indptr, indices, data = adj.indptr, adj.indices, adj.data
+    for u in order:
+        if match[u] != -1:
+            continue
+        best, best_w = -1, -1.0
+        for p in range(indptr[u], indptr[u + 1]):
+            v = indices[p]
+            if v != u and match[v] == -1 and data[p] > best_w:
+                best, best_w = v, data[p]
+        if best == -1:
+            match[u] = u
+        else:
+            match[u] = best
+            match[best] = u
+    cluster = np.full(n, -1, dtype=np.int64)
+    nxt = 0
+    for u in range(n):
+        if cluster[u] == -1:
+            cluster[u] = nxt
+            if match[u] != u and match[u] != -1:
+                cluster[match[u]] = nxt
+            nxt += 1
+    return cluster, nxt
+
+
+def build_hierarchy(A: sp.spmatrix, *, max_levels: int = 12,
+                    min_nodes: int = 2, edge_bucket: int | None = None,
+                    seed: int = 0) -> GraphData:
+    """Precompute the padded multigrid hierarchy for one matrix."""
+    rng = np.random.default_rng(seed)
+    rows, cols, w = matrix_to_edges(A)
+    n = A.shape[0]
+    n_pad = _next_pow2(max(n, 4))
+    levels: List[GraphLevel] = []
+
+    cur_n, cur_rows, cur_cols, cur_w = n, rows, cols, w
+    cur_pad = n_pad
+    for _ in range(max_levels):
+        e_pad = edge_bucket or _next_pow2(max(len(cur_rows), 4))
+        if len(cur_rows) > e_pad:
+            e_pad = _next_pow2(len(cur_rows))
+        s = np.full(e_pad, cur_pad - 1, dtype=np.int32)
+        r = np.full(e_pad, cur_pad - 1, dtype=np.int32)
+        m = np.zeros(e_pad, dtype=np.float32)
+        s[:len(cur_rows)] = cur_rows
+        r[:len(cur_cols)] = cur_cols
+        m[:len(cur_rows)] = 1.0
+
+        if cur_n <= min_nodes:
+            levels.append(GraphLevel(cur_n, cur_pad, s, r, m,
+                                     np.arange(cur_pad, dtype=np.int32),
+                                     0, 0))
+            break
+
+        cluster, n_coarse = heavy_edge_matching(cur_n, cur_rows, cur_cols,
+                                                cur_w, rng)
+        n_coarse_pad = _next_pow2(max(n_coarse, 4))
+        cl = np.full(cur_pad, n_coarse_pad - 1, dtype=np.int32)
+        cl[:cur_n] = cluster
+        levels.append(GraphLevel(cur_n, cur_pad, s, r, m, cl,
+                                 n_coarse, n_coarse_pad))
+
+        # coarse graph: contract edges, drop self-loops, merge duplicates
+        cr, cc = cluster[cur_rows], cluster[cur_cols]
+        keep = cr != cc
+        coarse = sp.csr_matrix((cur_w[keep], (cr[keep], cc[keep])),
+                               shape=(n_coarse, n_coarse))
+        coarse.sum_duplicates()
+        coo = coarse.tocoo()
+        cur_n, cur_rows, cur_cols, cur_w = (
+            n_coarse, coo.row.astype(np.int32), coo.col.astype(np.int32),
+            coo.data)
+        cur_pad = n_coarse_pad
+        if n_coarse <= min_nodes:
+            e_pad2 = _next_pow2(max(len(cur_rows), 4))
+            s2 = np.full(e_pad2, cur_pad - 1, dtype=np.int32)
+            r2 = np.full(e_pad2, cur_pad - 1, dtype=np.int32)
+            m2 = np.zeros(e_pad2, dtype=np.float32)
+            s2[:len(cur_rows)] = cur_rows
+            r2[:len(cur_cols)] = cur_cols
+            m2[:len(cur_rows)] = 1.0
+            levels.append(GraphLevel(cur_n, cur_pad, s2, r2, m2,
+                                     np.arange(cur_pad, dtype=np.int32),
+                                     0, 0))
+            break
+
+    return GraphData(n=n, n_pad=n_pad, levels=levels)
+
+
+def laplacian_dense(A: sp.spmatrix) -> np.ndarray:
+    S = symmetrize_pattern(A)
+    S.data = np.ones_like(S.data)
+    d = np.asarray(S.sum(axis=1)).ravel()
+    return np.diag(d) - S.toarray()
+
+
+def dense_padded(A: sp.spmatrix, n_pad: int) -> np.ndarray:
+    """Dense (n_pad, n_pad) copy of A with identity on padded diagonal so
+    the padded system stays SPD and factorization-in-loop is well posed."""
+    n = A.shape[0]
+    out = np.zeros((n_pad, n_pad), dtype=np.float64)
+    out[:n, :n] = A.toarray()
+    if n_pad > n:
+        idx = np.arange(n, n_pad)
+        out[idx, idx] = 1.0
+    return out

@@ -1,0 +1,189 @@
+"""PFM: user-facing Proximal Fill-in Minimization module.
+
+Usage:
+    pfm = PFM(PFMConfig())
+    pfm.pretrain_se(train_matrices)        # or pass se_params / use power
+    pfm.fit(train_matrices, epochs=M)      # Algorithm 1
+    perm = pfm.permutation(A)              # inference: GNN + argsort
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import scipy.sparse as sp
+
+from repro.core import admm as admm_mod
+from repro.core import encoder as enc
+from repro.core import reorder
+from repro.core.admm import PFMConfig, admm_train_matrix, predict_scores
+from repro.core.graph import GraphData, build_hierarchy, dense_padded
+from repro.core.spectral import (pretrain_spectral_net, spectral_embedding)
+from repro.optim import adam, apply_updates
+
+
+@dataclasses.dataclass
+class PreparedMatrix:
+    name: str
+    A: sp.csr_matrix
+    gd: GraphData
+    levels: tuple
+    A_dense: jnp.ndarray
+    x_g: jnp.ndarray
+    node_mask: jnp.ndarray
+
+
+class PFM:
+    def __init__(self, cfg: PFMConfig | None = None, seed: int = 0,
+                 se_max_n: int = 600, x_mode: str = "se"):
+        self.cfg = cfg or PFMConfig()
+        self.seed = seed
+        # beyond se_max_n the learned S_e is out of its training regime;
+        # fall back to the exact Fiedler estimate (the quantity S_e
+        # approximates) for the spectral embedding
+        self.se_max_n = se_max_n
+        # x_mode="random": ablation variant — node features are random,
+        # no spectral embedding at all (paper Table 3 row 2)
+        self.x_mode = x_mode
+        key = jax.random.PRNGKey(seed)
+        init_fn, self._apply_fn = enc.ENCODERS[self.cfg.encoder]
+        self.params = init_fn(key, in_dim=1)
+        self.opt = adam(self.cfg.lr)
+        self.opt_state = self.opt.init(self.params)
+        self.se_params = None
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------ prep
+    def prepare(self, A: sp.spmatrix, name: str = "") -> PreparedMatrix:
+        A = sp.csr_matrix(A)
+        gd = build_hierarchy(A, seed=self.seed)
+        levels = gd.as_jnp()
+        if self.x_mode == "random":
+            key = jax.random.PRNGKey(self.seed)
+            x_g = jax.random.normal(key, (gd.n_pad, 1))
+        else:
+            se = self.se_params if A.shape[0] <= self.se_max_n else None
+            x_g = spectral_embedding(A, gd, se, seed=self.seed)
+        x_g = jnp.asarray(x_g, jnp.float32)
+        mask = (jnp.arange(gd.n_pad) < gd.n).astype(jnp.float32)
+        A_dense = jnp.asarray(dense_padded(A, gd.n_pad), jnp.float32)
+        # normalize so the factorization loss scale is size-independent
+        A_dense = A_dense / jnp.maximum(1.0, jnp.max(jnp.abs(A_dense)))
+        return PreparedMatrix(name, A, gd, levels, A_dense, x_g, mask)
+
+    def pretrain_se(self, matrices: Sequence[sp.spmatrix], *, steps=300,
+                    verbose=False):
+        hier = [build_hierarchy(sp.csr_matrix(A), seed=self.seed)
+                for A in matrices]
+        self.se_params, losses = pretrain_spectral_net(
+            list(matrices), hier, steps=steps, seed=self.seed,
+            verbose=verbose)
+        return losses
+
+    # ------------------------------------------------------------ train
+    def fit(self, matrices: Sequence, epochs: int = 1, verbose=False):
+        """Algorithm 1: outer epochs over the training set, inner ADMM
+        per matrix. `matrices` may be scipy matrices or (name, A) pairs."""
+        prepped = []
+        for i, item in enumerate(matrices):
+            name, A = item if isinstance(item, tuple) else (f"m{i}", item)
+            prepped.append(self.prepare(A, name))
+
+        key = jax.random.PRNGKey(self.seed + 1)
+        for epoch in range(epochs):
+            for pm in prepped:
+                key, sub = jax.random.split(key)
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = admm_train_matrix(
+                    self.params, self.opt_state, pm.A_dense, pm.levels,
+                    pm.x_g, pm.node_mask, sub, cfg=self.cfg, opt=self.opt)
+                rec = {k: float(v) for k, v in metrics.items()}
+                rec.update(epoch=epoch, matrix=pm.name,
+                           wall_s=time.perf_counter() - t0)
+                self.history.append(rec)
+                if verbose:
+                    print(f"  epoch {epoch} {pm.name}: "
+                          f"l1={rec['l1']:.1f} res={rec['residual']:.2f}")
+        return self.history
+
+    # -------------------------------------------------------- inference
+    def scores(self, A: sp.spmatrix) -> np.ndarray:
+        pm = self.prepare(A)
+        y = predict_scores(self.params, self.cfg, list(pm.levels), pm.x_g)
+        return np.asarray(y)
+
+    def permutation(self, A: sp.spmatrix) -> np.ndarray:
+        """GNN forward + argsort (O(GNN) inference, Table 1)."""
+        A = sp.csr_matrix(A)
+        pm = self.prepare(A)
+        y = predict_scores(self.params, self.cfg, list(pm.levels), pm.x_g)
+        perm = reorder.permutation_from_scores(
+            jnp.asarray(y), pm.node_mask)
+        perm = np.asarray(perm)
+        return perm[perm < A.shape[0]]
+
+    # ----------------------------------------- ablation loss variants
+    def fit_pce(self, matrices: Sequence, target_perms: Sequence[np.ndarray],
+                steps: int = 200, pairs_per_step: int = 512, verbose=False):
+        """GPCE baseline: pairwise cross entropy against a reference
+        ordering (best of the classical baselines, per the paper)."""
+        prepped = [self.prepare(A if not isinstance(A, tuple) else A[1])
+                   for A in matrices]
+        ranks = []
+        for pm, perm in zip(prepped, target_perms):
+            r = np.full(pm.gd.n_pad, pm.gd.n_pad, np.int32)
+            r[perm] = np.arange(len(perm))
+            ranks.append(jnp.asarray(r))
+
+        loss_grad = jax.jit(jax.value_and_grad(admm_mod.pce_loss),
+                            static_argnames=("cfg",))
+        rng = np.random.default_rng(self.seed)
+        for step in range(steps):
+            i = step % len(prepped)
+            pm, rk = prepped[i], ranks[i]
+            n = pm.gd.n
+            u = rng.integers(0, n, pairs_per_step)
+            v = rng.integers(0, n, pairs_per_step)
+            ru, rv = np.asarray(rk)[u], np.asarray(rk)[v]
+            first = np.where(ru < rv, u, v)
+            second = np.where(ru < rv, v, u)
+            loss, grads = loss_grad(self.params, self.cfg, pm.levels,
+                                    pm.x_g, pm.node_mask, rk,
+                                    jnp.asarray(first), jnp.asarray(second))
+            updates, self.opt_state = self.opt.update(
+                grads, self.opt_state, self.params)
+            self.params = apply_updates(self.params, updates)
+            if verbose and step % 50 == 0:
+                print(f"  pce step {step}: loss {float(loss):.4f}")
+
+    def fit_udno(self, matrices: Sequence, steps: int = 200, verbose=False):
+        """UDNO-style expected-envelope loss baseline."""
+        prepped = [self.prepare(A if not isinstance(A, tuple) else A[1])
+                   for A in matrices]
+        loss_grad = jax.jit(jax.value_and_grad(admm_mod.udno_loss),
+                            static_argnames=("cfg",))
+        for step in range(steps):
+            pm = prepped[step % len(prepped)]
+            l0 = pm.levels[0]
+            loss, grads = loss_grad(self.params, self.cfg, pm.levels,
+                                    pm.x_g, pm.node_mask, l0["senders"],
+                                    l0["receivers"], l0["edge_mask"])
+            updates, self.opt_state = self.opt.update(
+                grads, self.opt_state, self.params)
+            self.params = apply_updates(self.params, updates)
+            if verbose and step % 50 == 0:
+                print(f"  udno step {step}: loss {float(loss):.4f}")
+
+    # ------------------------------------------------------------- io
+    def state_dict(self) -> Dict[str, Any]:
+        return {"params": self.params, "opt_state": self.opt_state,
+                "se_params": self.se_params}
+
+    def load_state_dict(self, state):
+        self.params = state["params"]
+        self.opt_state = state["opt_state"]
+        self.se_params = state.get("se_params")

@@ -1,0 +1,107 @@
+"""Differentiable matrix reordering layer.
+
+Two reparameterizations (paper Fig. 3):
+  (a) SoftRank-style Gaussian rank distribution: scores Y + N(0, sigma^2)
+      noise -> pairwise win probabilities p_vu -> per-node rank mean and
+      variance -> rank-distribution matrix  P_hat(u, i).
+  (b) Gumbel-Sinkhorn: log P_hat + Gumbel noise, temperature tau, then
+      alternating log-space row/column normalization -> near-permutation
+      doubly-stochastic matrix P_theta.
+
+Convention: rank 0 = eliminated first = highest score. P_hat is indexed
+(node u, position i); the permutation matrix applied as  A_theta =
+P A P^T  has rows = positions, so P = P_hat^T.
+
+Inference needs none of this: `permutation_from_scores` is an argsort.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def _ndtr(x):
+    """Standard normal CDF."""
+    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def rank_distribution(scores: jnp.ndarray, sigma: float,
+                      node_mask: jnp.ndarray | None = None):
+    """SoftRank reparameterization.
+
+    scores: (n,). Returns P_hat (n, n): P_hat[u, i] = Pr(rank(u) == i).
+    Padded nodes (mask 0) are pushed to the tail ranks by assigning them
+    -inf effective score.
+    """
+    n = scores.shape[0]
+    if node_mask is not None:
+        scores = jnp.where(node_mask > 0, scores,
+                           jnp.min(scores) - 10.0 - jnp.arange(n) * 1e-3)
+    diff = scores[:, None] - scores[None, :]           # Y_u - Y_v
+    # p[v, u] = Pr(Y_v > Y_u); here p_win[u, v] = Pr(v beats u)
+    p_win = _ndtr(-diff / (jnp.sqrt(2.0) * sigma))      # (u, v)
+    p_win = p_win * (1.0 - jnp.eye(n, dtype=scores.dtype))
+    mu = jnp.sum(p_win, axis=1)                        # E[rank(u)]
+    var = jnp.sum(p_win * (1.0 - p_win), axis=1)
+    sd = jnp.sqrt(var + 1e-6)
+    pos = jnp.arange(n, dtype=scores.dtype)
+    upper = (pos[None, :] + 0.5 - mu[:, None]) / sd[:, None]
+    lower = (pos[None, :] - 0.5 - mu[:, None]) / sd[:, None]
+    # cancellation in ndtr(upper)-ndtr(lower) can go slightly negative
+    p_hat = jnp.maximum(_ndtr(upper) - _ndtr(lower), 0.0)
+    from repro.distributed.constrain import constrain, pfm_2d
+    if pfm_2d():
+        p_hat = constrain(p_hat, "data", "model")
+    return p_hat
+
+
+def gumbel_sinkhorn(p_hat: jnp.ndarray, key, *, tau: float = 0.3,
+                    n_iters: int = 20, noise_scale: float = 1.0,
+                    use_kernel: bool = True):
+    """Gumbel-Sinkhorn on log P_hat (paper Algorithm 2)."""
+    eps = 1e-20
+    u = jnp.clip(jax.random.uniform(key, p_hat.shape), eps, 1.0 - 1e-7)
+    gumbel = -jnp.log(-jnp.log(u))
+    log_p = (jnp.log(p_hat + eps) + noise_scale * gumbel) / tau
+    from repro.distributed.constrain import constrain, pfm_2d
+    if pfm_2d():
+        log_p = constrain(log_p, "data", "model")
+    if use_kernel:
+        log_p = kops.sinkhorn(log_p, n_iters=n_iters)
+    else:
+        for _ in range(n_iters):
+            log_p = log_p - jax.nn.logsumexp(log_p, axis=0, keepdims=True)
+            log_p = log_p - jax.nn.logsumexp(log_p, axis=1, keepdims=True)
+    return jnp.exp(log_p)
+
+
+def soft_permutation(scores, key, *, sigma: float = 1e-3, tau: float = 0.3,
+                     n_iters: int = 20, node_mask=None, noise_scale=1.0,
+                     use_kernel: bool = True):
+    """scores -> near-permutation matrix P with rows = positions:
+    (P A P^T)[i, j] ~= A[perm[i], perm[j]]."""
+    p_hat = rank_distribution(scores, sigma, node_mask)
+    p_ui = gumbel_sinkhorn(p_hat, key, tau=tau, n_iters=n_iters,
+                           noise_scale=noise_scale, use_kernel=use_kernel)
+    return p_ui.T
+
+
+def permutation_from_scores(scores, node_mask=None):
+    """Inference path: elimination order = descending score (rank 0 first).
+    Returns perm with perm[i] = original index placed at position i."""
+    if node_mask is not None:
+        scores = jnp.where(node_mask > 0, scores,
+                           -jnp.inf * jnp.ones_like(scores))
+    return jnp.argsort(-scores)
+
+
+def hard_permutation_matrix(perm, n=None):
+    n = n or perm.shape[0]
+    return jax.nn.one_hot(perm, n, dtype=jnp.float32)
+
+
+def reorder_dense(A, P):
+    """A_theta = P A P^T (Eq. 5)."""
+    return P @ A @ P.T

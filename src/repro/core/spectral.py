@@ -1,0 +1,159 @@
+"""Spectral embedding layer S_e.
+
+The paper uses a *pretrained, frozen* multigrid GNN (Gatti et al. 2021)
+that approximates the Fiedler vector of the adjacency-graph Laplacian.
+Offline we cannot download those weights, so this module provides:
+
+  * exact Fiedler targets (scipy eigsh / dense eigh for small n),
+  * `pretrain_spectral_net` — trains the same MgGNN architecture against
+    those targets on synthetic matrices (cheap at n<=500), and
+  * a deterministic-fallback `fiedler_jax` (deflated power iteration on a
+    shifted Laplacian) that is jit-able and is used when no pretrained
+    S_e weights are supplied.
+
+Both paths output a (n_pad, 1) spectral embedding X_G consumed by the
+reordering network's graph node encoder.
+"""
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+import scipy.sparse.linalg as spla
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoder as enc
+from repro.core.graph import GraphData, symmetrize_pattern
+
+
+# -------------------------------------------------------- exact targets
+def fiedler_exact(A: sp.spmatrix) -> np.ndarray:
+    """Fiedler vector (2nd-smallest eigenvector of the graph Laplacian)."""
+    S = symmetrize_pattern(A)
+    S.data = np.ones_like(S.data)
+    n = S.shape[0]
+    d = np.asarray(S.sum(axis=1)).ravel()
+    L = sp.diags(d) - S
+    if n <= 600:
+        w, v = np.linalg.eigh(L.toarray())
+        return v[:, 1]
+    try:
+        w, v = spla.eigsh(L.tocsc(), k=2, sigma=-1e-3, which="LM")
+        order = np.argsort(w)
+        return v[:, order[1]]
+    except Exception:
+        w, v = spla.eigsh(L.tocsr(), k=2, which="SM", maxiter=5000)
+        order = np.argsort(w)
+        return v[:, order[1]]
+
+
+# ----------------------------------------------- jit-able approximation
+def fiedler_jax(senders, receivers, edge_mask, n_pad, n_real,
+                iters: int = 200):
+    """Deflated power iteration for the Fiedler vector.
+
+    Works on M = c*I - L restricted to the span orthogonal to the
+    all-ones vector (on real nodes); the dominant eigenvector of the
+    deflated operator is the Fiedler vector. Fully jit-able: edge-list
+    matvec via segment_sum.
+    """
+    ones = (jnp.arange(n_pad) < n_real).astype(jnp.float32)
+    deg = jax.ops.segment_sum(edge_mask, receivers, num_segments=n_pad)
+    c = 2.0 * jnp.max(deg) + 1.0
+
+    def lap_mv(x):
+        msg = x[senders] * edge_mask
+        agg = jax.ops.segment_sum(msg, receivers, num_segments=n_pad)
+        return deg * x - agg
+
+    def body(i, v):
+        w = c * v - lap_mv(v)
+        w = w * ones
+        w = w - (jnp.dot(w, ones) / jnp.maximum(jnp.dot(ones, ones), 1.0)) \
+            * ones
+        return w / (jnp.linalg.norm(w) + 1e-12)
+
+    key = jax.random.PRNGKey(7)
+    v0 = jax.random.normal(key, (n_pad,)) * ones
+    v0 = v0 - (jnp.dot(v0, ones) / jnp.maximum(jnp.dot(ones, ones), 1.0)) \
+        * ones
+    v0 = v0 / (jnp.linalg.norm(v0) + 1e-12)
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    return v[:, None]
+
+
+# -------------------------------------------------------- learned  S_e
+def spectral_net_init(key):
+    return enc.mggnn_init(key, in_dim=1)
+
+
+def spectral_net_apply(params, levels, x):
+    return enc.mggnn_apply(params, levels, x)
+
+
+def spectral_loss(params, levels, x, target):
+    """Sign/scale-invariant alignment: 1 - |cos(pred, target)| plus a
+    penalty keeping the prediction orthogonal to the ones vector."""
+    pred = spectral_net_apply(params, levels, x)[:, 0]
+    t = target / (jnp.linalg.norm(target) + 1e-12)
+    p = pred - jnp.mean(pred)
+    p = p / (jnp.linalg.norm(p) + 1e-12)
+    return 1.0 - jnp.abs(jnp.dot(p, t))
+
+
+def pretrain_spectral_net(matrices, hierarchies, *, steps: int = 300,
+                          lr: float = 1e-2, seed: int = 0, verbose=False):
+    """Pretrain S_e against exact Fiedler targets. matrices: list of scipy
+    sparse; hierarchies: matching list of GraphData."""
+    from repro.optim import adam, apply_updates
+
+    key = jax.random.PRNGKey(seed)
+    params = spectral_net_init(key)
+    opt = adam(lr)
+    opt_state = opt.init(params)
+
+    targets, inputs, levels_list = [], [], []
+    for A, gd in zip(matrices, hierarchies):
+        f = fiedler_exact(A)
+        t = np.zeros(gd.n_pad, np.float32)
+        t[:gd.n] = f / (np.linalg.norm(f) + 1e-12)
+        targets.append(jnp.asarray(t))
+        k = jax.random.fold_in(key, gd.n + len(inputs))
+        inputs.append(jax.random.normal(k, (gd.n_pad, 1)))
+        levels_list.append(gd.as_jnp())
+
+    grad_fn = jax.jit(jax.value_and_grad(spectral_loss),
+                      static_argnames=())
+
+    losses = []
+    for step in range(steps):
+        i = step % len(matrices)
+        loss, grads = grad_fn(params, levels_list[i], inputs[i], targets[i])
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        losses.append(float(loss))
+        if verbose and step % 50 == 0:
+            print(f"  S_e pretrain step {step}: loss {loss:.4f}")
+    return params, losses
+
+
+def spectral_embedding(A: sp.spmatrix, gd: GraphData, se_params=None,
+                       *, seed: int = 0, method: str = "exact"):
+    """The S_e layer: learned net if weights supplied; otherwise a
+    Fiedler estimate — "exact" (host-side Lanczos, what S_e is trained
+    to approximate; used by the PFM inference path) or "power"
+    (jit-able deflated power iteration; used where host callbacks are
+    unavailable, e.g. the dry-run lowering)."""
+    lv = gd.as_jnp()
+    if se_params is not None:
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (gd.n_pad, 1))
+        return spectral_net_apply(se_params, lv, x)
+    if method == "exact":
+        f = fiedler_exact(A)
+        out = np.zeros((gd.n_pad, 1), np.float32)
+        out[:gd.n, 0] = f / (np.linalg.norm(f) + 1e-12)
+        return jnp.asarray(out)
+    l0 = lv[0]
+    return fiedler_jax(l0["senders"], l0["receivers"], l0["edge_mask"],
+                       gd.n_pad, gd.n)

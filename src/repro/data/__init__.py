@@ -1,0 +1,9 @@
+from repro.data.matrices import (  # noqa: F401
+    grid_2d,
+    grid_3d,
+    delaunay_like,
+    fem_like,
+    make_training_set,
+    make_test_set,
+)
+from repro.data.tokens import TokenPipeline  # noqa: F401

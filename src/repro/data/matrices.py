@@ -1,0 +1,188 @@
+"""Sparse-matrix generators reproducing the paper's three training
+families (offline SuiteSparse stand-ins):
+
+  (1) 2D/3D discretization matrices (5/7-point grid Laplacians),
+  (2) Delaunay-method matrices on random point clouds (planar triangle
+      meshes built via a lightweight divide-and-conquer triangulation —
+      scipy.spatial is available, so we use scipy's Delaunay directly),
+  (3) finite-element-style matrices (node-sharing element graphs on the
+      same geometries, incl. GradeL / Hole patterns via masked domains).
+
+All outputs are SPD (pattern + diagonally-dominant values) so both
+Cholesky-in-loop training and SuperLU evaluation are well posed.
+"""
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.spatial import Delaunay
+
+
+def _spd_from_pattern(S: sp.csr_matrix, rng: np.random.Generator,
+                      jitter: float = 0.0) -> sp.csr_matrix:
+    """Symmetric pattern -> SPD matrix: random symmetric off-diagonals,
+    diagonally dominant."""
+    S = sp.csr_matrix(S)
+    S = ((S + S.T) > 0).astype(np.float64)
+    S.setdiag(0)
+    S.eliminate_zeros()
+    coo = S.tocoo()
+    upper = coo.row < coo.col
+    vals = -(0.5 + rng.random(int(upper.sum())))
+    M = sp.csr_matrix((vals, (coo.row[upper], coo.col[upper])),
+                      shape=S.shape)
+    M = M + M.T
+    rowsum = np.asarray(np.abs(M).sum(axis=1)).ravel()
+    M = M + sp.diags(rowsum + 1.0 + jitter * rng.random(S.shape[0]))
+    return M.tocsr()
+
+
+def grid_2d(nx: int, ny: int | None = None, seed: int = 0):
+    ny = ny or nx
+    rng = np.random.default_rng(seed)
+    idx = np.arange(nx * ny).reshape(nx, ny)
+    r, c = [], []
+    r += [idx[:-1, :].ravel()]; c += [idx[1:, :].ravel()]
+    r += [idx[:, :-1].ravel()]; c += [idx[:, 1:].ravel()]
+    rows = np.concatenate(r); cols = np.concatenate(c)
+    S = sp.csr_matrix((np.ones_like(rows, dtype=np.float64), (rows, cols)),
+                      shape=(nx * ny, nx * ny))
+    return _spd_from_pattern(S, rng)
+
+
+def grid_3d(nx: int, ny: int | None = None, nz: int | None = None,
+            seed: int = 0):
+    ny = ny or nx
+    nz = nz or nx
+    rng = np.random.default_rng(seed)
+    idx = np.arange(nx * ny * nz).reshape(nx, ny, nz)
+    r, c = [], []
+    r += [idx[:-1].ravel()]; c += [idx[1:].ravel()]
+    r += [idx[:, :-1].ravel()]; c += [idx[:, 1:].ravel()]
+    r += [idx[:, :, :-1].ravel()]; c += [idx[:, :, 1:].ravel()]
+    rows = np.concatenate(r); cols = np.concatenate(c)
+    n = nx * ny * nz
+    S = sp.csr_matrix((np.ones_like(rows, dtype=np.float64), (rows, cols)),
+                      shape=(n, n))
+    return _spd_from_pattern(S, rng)
+
+
+def _domain_points(n: int, geometry: str, rng: np.random.Generator):
+    """Sample points in the paper's geometries: GradeL (L-shaped with
+    graded density), Hole3/Hole6 (disk with 3/6 holes)."""
+    pts = []
+    while len(pts) < n:
+        cand = rng.random((4 * n, 2))
+        if geometry == "gradel":
+            # L-shape: remove upper-right quadrant; grade density toward
+            # the re-entrant corner
+            keep = ~((cand[:, 0] > 0.5) & (cand[:, 1] > 0.5))
+            cand = cand[keep]
+            d = np.linalg.norm(cand - 0.5, axis=1)
+            keep = rng.random(len(cand)) < np.clip(1.2 - d, 0.15, 1.0)
+            cand = cand[keep]
+        elif geometry.startswith("hole"):
+            k = int(geometry[4:])
+            centers = np.stack([
+                0.5 + 0.3 * np.cos(2 * np.pi * np.arange(k) / k),
+                0.5 + 0.3 * np.sin(2 * np.pi * np.arange(k) / k)], axis=1)
+            keep = np.ones(len(cand), bool)
+            for ctr in centers:
+                keep &= np.linalg.norm(cand - ctr, axis=1) > 0.08
+            cand = cand[keep]
+        pts.extend(cand.tolist())
+    return np.asarray(pts[:n])
+
+
+def delaunay_like(n: int, geometry: str = "gradel", seed: int = 0):
+    """Triangulate points in the chosen geometry; adjacency = mesh edges."""
+    rng = np.random.default_rng(seed)
+    pts = _domain_points(n, geometry, rng)
+    tri = Delaunay(pts)
+    edges = set()
+    for simplex in tri.simplices:
+        for a in range(3):
+            for b in range(a + 1, 3):
+                u, v = int(simplex[a]), int(simplex[b])
+                edges.add((min(u, v), max(u, v)))
+    rows = np.array([e[0] for e in edges])
+    cols = np.array([e[1] for e in edges])
+    S = sp.csr_matrix((np.ones_like(rows, dtype=np.float64), (rows, cols)),
+                      shape=(n, n))
+    return _spd_from_pattern(S, rng)
+
+
+def fem_like(n: int, geometry: str = "gradel", seed: int = 0):
+    """FEM-style stiffness pattern: Delaunay mesh where all nodes of each
+    element couple (adds the element clique structure; denser than the
+    edge graph)."""
+    rng = np.random.default_rng(seed)
+    pts = _domain_points(n, geometry, rng)
+    tri = Delaunay(pts)
+    edges = set()
+    for simplex in tri.simplices:
+        s = [int(v) for v in simplex]
+        for a in range(3):
+            for b in range(3):
+                if s[a] != s[b]:
+                    edges.add((s[a], s[b]))
+    # second-ring coupling on a random subset of elements (quadratic FEM)
+    sel = np.nonzero(rng.random(len(tri.simplices)) < 0.3)[0]
+    for si in sel:
+        for nb in tri.neighbors[si]:
+            if nb >= 0:
+                for u in tri.simplices[si]:
+                    for v in tri.simplices[nb]:
+                        if int(u) != int(v):
+                            edges.add((int(u), int(v)))
+    rows = np.array([e[0] for e in edges])
+    cols = np.array([e[1] for e in edges])
+    S = sp.csr_matrix((np.ones_like(rows, dtype=np.float64), (rows, cols)),
+                      shape=(n, n))
+    return _spd_from_pattern(S, rng)
+
+
+GEOMETRIES = ("gradel", "hole3", "hole6")
+
+
+def make_training_set(n_matrices: int = 24, n_min: int = 100,
+                      n_max: int = 500, seed: int = 0):
+    """Mixed set mirroring the paper's training distribution."""
+    rng = np.random.default_rng(seed)
+    out = []
+    kinds = ["grid2d", "grid3d", "delaunay", "fem"]
+    for i in range(n_matrices):
+        kind = kinds[i % len(kinds)]
+        n = int(rng.integers(n_min, n_max + 1))
+        geo = GEOMETRIES[i % len(GEOMETRIES)]
+        if kind == "grid2d":
+            side = max(4, int(np.sqrt(n)))
+            out.append(("grid2d", grid_2d(side, seed=seed + i)))
+        elif kind == "grid3d":
+            side = max(3, int(round(n ** (1 / 3))))
+            out.append(("grid3d", grid_3d(side, seed=seed + i)))
+        elif kind == "delaunay":
+            out.append((f"delaunay-{geo}",
+                        delaunay_like(n, geo, seed=seed + i)))
+        else:
+            out.append((f"fem-{geo}", fem_like(n, geo, seed=seed + i)))
+    return out
+
+
+def make_test_set(seed: int = 1):
+    """Evaluation set mirroring the paper's problem categories at the
+    largest sizes tractable in this container (the paper uses 1e4-1e6;
+    symbolic metrics are size-independent)."""
+    cases = [
+        ("2D3D", grid_2d(45, seed=seed)),                 # 2025
+        ("2D3D", grid_3d(13, seed=seed + 1)),             # 2197
+        ("2D3D", grid_2d(60, 30, seed=seed + 2)),         # 1800
+        ("SP", fem_like(1500, "gradel", seed=seed + 3)),
+        ("SP", fem_like(2000, "hole3", seed=seed + 4)),
+        ("CFD", delaunay_like(2000, "hole6", seed=seed + 5)),
+        ("CFD", delaunay_like(1500, "hole3", seed=seed + 6)),
+        ("TP", grid_3d(11, seed=seed + 7)),               # 1331
+        ("MRP", delaunay_like(1200, "gradel", seed=seed + 8)),
+        ("Other", fem_like(1000, "hole6", seed=seed + 9)),
+    ]
+    return cases

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (  # noqa: F401
+    param_shardings,
+    batch_shardings,
+    attach,
+)

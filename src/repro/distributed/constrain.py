@@ -1,0 +1,20 @@
+"""Best-effort sharding constraints: no-ops outside a mesh context."""
+from __future__ import annotations
+
+import os
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def constrain(x, *spec):
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def pfm_2d() -> bool:
+    """§Perf lever: 2-D (data, model) sharding of PFM's (n, n) training
+    tensors (SoftRank / Sinkhorn / ADMM intermediates)."""
+    return os.environ.get("REPRO_PFM_SHARD2D", "0") == "1"

@@ -1,0 +1,199 @@
+"""Sharding rule tables: param-tree path -> PartitionSpec.
+
+Scheme (2-D / 3-D mesh: optional "pod" + "data" + "model"):
+  * tensor parallel on "model": attention heads / FFN hidden / vocab;
+  * expert parallel on "model" for MoE expert stacks (experts padded to a
+    multiple of the axis, see models/moe.py);
+  * data parallel (batch) on ("pod", "data") — cross-pod traffic is only
+    the gradient all-reduce, optionally int8-compressed;
+  * stacked-layer leading axes (from scan) are never sharded.
+
+Rules match on the *last* path component; per-family special cases match
+on the full path (e.g. "experts" stacks). Rules give the spec of the
+TRAILING dims; leading dims (layer stacks) pad with None.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# last-component name -> trailing-dims spec
+_NAME_RULES = {
+    # embeddings / head
+    "embed": ("model", None),
+    "lm_head": (None, "model"),
+    "patch_proj": (None, None),
+    # attention
+    "wq": (None, "model"),
+    "wk": (None, "model"),
+    "wv": (None, "model"),
+    "wo": ("model", None),
+    # FFN (SwiGLU)
+    "w_gate": (None, "model"),
+    "w_up": (None, "model"),
+    "w_down": ("model", None),
+    # MoE
+    "router": (None, None),
+    # rwkv time-mix / channel-mix
+    "wr": (None, "model"),
+    "wg": (None, "model"),
+    "w_a": (None, "model"),
+    "w_b": (None, "model"),
+    "w_bias": ("model",),
+    "mix": (None, "model"),
+    "cm_mix": (None, "model"),
+    "u": ("model", None),
+    "cm_k": (None, "model"),
+    "cm_v": ("model", None),
+    "cm_r": (None, "model"),
+    # recurrentgemma
+    "w_x": (None, "model"),
+    "w_out": ("model", None),
+    "w_i": (None, "model"),
+    "conv_w": (None, "model"),
+    "lam": ("model",),
+}
+
+
+def _spec_for(path_names, leaf, mesh) -> P:
+    ndim = getattr(leaf, "ndim", 0)
+    if ndim == 0:
+        return P()
+    in_experts = "experts" in path_names
+    name = path_names[-1]
+    rule = _NAME_RULES.get(name)
+    if in_experts and rule is not None:
+        # expert stacks: (.., E, din, dout) — EP on the expert axis, no
+        # TP inside the (small) per-expert FFN
+        rule = ("model",) + (None,) * min(2, ndim - 1)
+    if rule is None:
+        return P(*([None] * ndim))
+    rule = tuple(rule)
+    if len(rule) > ndim:
+        rule = rule[-ndim:]
+    pad = (None,) * (ndim - len(rule))
+    spec = list(pad + rule)
+    # divisibility guard: drop the sharding on any dim the mesh axis does
+    # not divide evenly (e.g. vocab 49155 on a 16-way model axis)
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        size = mesh.shape[ax] if not isinstance(ax, tuple) else 1
+        if isinstance(ax, tuple):
+            for a in ax:
+                size *= mesh.shape[a]
+        if leaf.shape[i] % size != 0 or leaf.shape[i] < size:
+            spec[i] = None
+    return P(*spec)
+
+
+def _path_names(path) -> list:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            names.append(f"[{p.idx}]")
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            names.append(p.name)
+        else:
+            names.append(str(p))
+    return names
+
+
+def param_shardings(mesh, params_shape, profile: str = "tp"):
+    """params_shape: pytree of arrays or ShapeDtypeStructs.
+    Returns matching pytree of NamedSharding.
+
+    profile="tp"  — tensor/expert parallel on the model axis (default);
+    profile="dp"  — pure data parallel: params replicated, the model
+    axis becomes extra batch parallelism. The right choice for models
+    whose d_model is too small to amortize TP collectives (§Perf)."""
+    def one(path, leaf):
+        if profile == "dp":
+            return NamedSharding(
+                mesh, P(*([None] * getattr(leaf, "ndim", 0))))
+        names = _path_names(path)
+        return NamedSharding(mesh, _spec_for(names, leaf, mesh))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_shardings(mesh, opt_shape, profile: str = "tp"):
+    """ZeRO-1: optimizer moments additionally shard over the data axis
+    (first still-unsharded dim). Without this, f32 Adam states of a 67B
+    model are 33 GB/device under TP-16 — over HBM; with it they drop to
+    ~2 GB. The apply-phase all-gather is the standard ZeRO trade.
+    profile="dp": moments shard over BOTH axes (params are replicated,
+    so the moments are the only sharded copy)."""
+    zero_axes = ("data", "model") if profile == "dp" else ("data",)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        if profile == "dp":
+            spec = [None] * getattr(leaf, "ndim", 0)
+        else:
+            spec = list(_spec_for(names, leaf, mesh))
+        ndim = getattr(leaf, "ndim", 0)
+        for ax in zero_axes:
+            if ax not in mesh.axis_names:
+                continue
+            size = mesh.shape[ax]
+            for i in range(ndim):
+                if spec[i] is None and leaf.shape[i] % size == 0 \
+                        and leaf.shape[i] >= size:
+                    spec[i] = ax
+                    break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, opt_shape)
+
+
+def batch_shardings(mesh, batch_shape, profile: str = "tp"):
+    """Shard the leading (batch) dim over all data-like axes present
+    (profile="dp": over the model axis too)."""
+    names = ("pod", "data", "model") if profile == "dp" \
+        else ("pod", "data")
+    data_axes = tuple(a for a in names if a in mesh.axis_names)
+    axis = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def one(path, leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim == 0:
+            return NamedSharding(mesh, P())
+        b = leaf.shape[0]
+        total = 1
+        for a in (axis if isinstance(axis, tuple) else (axis,)):
+            total *= mesh.shape[a]
+        if b % total == 0 and b >= total:
+            return NamedSharding(mesh, P(*((axis,) + (None,) * (ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def state_shardings(mesh, state_shape):
+    """Decode caches / recurrent state: batch axis is dim 1 (dim 0 is the
+    layer stack); fall back to replication when indivisible."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    axis = data_axes if len(data_axes) > 1 else data_axes[0]
+    total = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        total *= mesh.shape[a]
+
+    def one(path, leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim >= 2 and leaf.shape[1] % total == 0 and \
+                leaf.shape[1] >= total:
+            return NamedSharding(
+                mesh, P(*((None, axis) + (None,) * (ndim - 2))))
+        if ndim >= 1 and leaf.shape[0] % total == 0 and \
+                leaf.shape[0] >= total and ndim > 1:
+            return NamedSharding(
+                mesh, P(*((axis,) + (None,) * (ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return jax.tree_util.tree_map_with_path(one, state_shape)
+
+
+def attach(shape_tree, sharding_tree):
+    """ShapeDtypeStructs with shardings attached (for .lower())."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shape_tree, sharding_tree)

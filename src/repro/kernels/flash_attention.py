@@ -1,0 +1,135 @@
+"""Blocked online-softmax (flash) attention Pallas TPU kernel.
+
+The compute hot spot for the LM-zoo train and prefill steps. TPU-native
+formulation:
+
+  * grid = (batch, q_heads, q_blocks, kv_blocks); the kv dimension is the
+    innermost, sequentially-executed grid axis, so the running softmax
+    state (m, l, acc) lives in VMEM scratch and persists across kv steps
+    — the canonical TPU flash schedule (no atomics, no warp shuffles;
+    those GPU mechanisms are replaced by grid sequencing).
+  * blocks are MXU-aligned: (block_q x d) @ (d x block_k) hits the
+    systolic array; block_q/block_k default to 128/256 to fit
+    q/k/v/acc panels in VMEM with double buffering.
+  * GQA is expressed in the k/v BlockSpec index_map (h // group), so kv
+    panels are fetched once per kv head group, not per q head.
+  * causal + sliding-window masking: fully-masked kv blocks are skipped
+    with pl.when (no MXU work, pipelining still prefetches — the roofline
+    win is ~2x for causal), partially-masked blocks mask inline.
+
+Softmax statistics are kept in f32 regardless of io dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, causal: bool, window: int | None,
+                  block_q: int, block_k: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # decode/prefill offset: queries occupy the tail of the kv timeline
+    offset = seq_k - seq_q
+    q_start = qi * block_q + offset
+    q_end = q_start + block_q - 1
+    k_start = ki * block_k
+    k_end = k_start + block_k - 1
+
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (k_start <= q_end)
+    if window is not None:
+        run = run & (k_end > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+
+        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            mask = mask & (q_idx >= k_idx)
+        if window is not None:
+            mask = mask & (k_idx > q_idx - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "sm_scale", "block_q",
+                              "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           sm_scale: float | None = None,
+                           block_q: int = 128, block_k: int = 256,
+                           interpret: bool = False):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). Returns (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = float(1.0 / (d ** 0.5))
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    grid = (b, hq, sq // block_q, sk // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_q=sq, seq_k=sk)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

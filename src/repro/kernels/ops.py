@@ -1,0 +1,196 @@
+"""Public jit'd kernel wrappers with TPU/interpret/XLA dispatch and
+custom VJPs.
+
+Pallas kernels are not auto-differentiable, so every kernel that sits on
+a gradient path gets a custom_vjp:
+  * sinkhorn  — forward = fused kernel; backward = VJP of the pure-jnp
+    reference (one extra XLA forward; exact, since ref == kernel math).
+  * flash_attention — forward = fused kernel; backward = q-chunked
+    recomputation (flash-style: lse and P are rebuilt per chunk, nothing
+    O(Sq*Sk) is ever materialized across chunks).
+prox_tril is never differentiated (it implements the nonsmooth proximal
+step whose "gradient" is handled by ADMM itself).
+
+On TPU backends the kernels run compiled; everywhere else (this CPU
+container, unit tests) they run under interpret=True, falling back to
+the reference when a shape is outside the kernel envelope.
+Set REPRO_FORCE_REF=1 to bypass kernels entirely (debugging aid).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.prox_tril import prox_tril_pallas
+from repro.kernels.sinkhorn import SINKHORN_VMEM_LIMIT, sinkhorn_pallas
+from repro.kernels.spmm import bcsr_ell_pack, spmm_pallas  # noqa: F401
+
+
+_DIST_MODE = False
+
+
+def set_dist_mode(on: bool):
+    """Distributed-lowering mode: pallas_call has no GSPMD partitioning
+    rule (it would be replicated), so under a >1-device mesh the kernels
+    dispatch to shard-friendly chunked XLA equivalents. On real TPU the
+    kernels run inside shard_map at the same block shapes; the dry-run's
+    roofline is therefore conservative for the attention term."""
+    global _DIST_MODE
+    _DIST_MODE = bool(on)
+
+
+def dist_mode() -> bool:
+    return _DIST_MODE
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _force_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+# ------------------------------------------------------------- sinkhorn
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _sinkhorn_cvjp(log_p, n_iters):
+    return sinkhorn_pallas(log_p, n_iters, interpret=_interpret())
+
+
+def _sinkhorn_fwd(log_p, n_iters):
+    return _sinkhorn_cvjp(log_p, n_iters), log_p
+
+
+def _sinkhorn_bwd(n_iters, log_p, g):
+    _, vjp = jax.vjp(lambda x: ref.sinkhorn_ref(x, n_iters), log_p)
+    return (vjp(g)[0],)
+
+
+_sinkhorn_cvjp.defvjp(_sinkhorn_fwd, _sinkhorn_bwd)
+
+
+def sinkhorn(log_p: jnp.ndarray, n_iters: int = 20) -> jnp.ndarray:
+    if _force_ref() or log_p.shape[0] > SINKHORN_VMEM_LIMIT \
+            or log_p.shape[0] % 128 != 0:
+        return ref.sinkhorn_ref(log_p, n_iters)
+    return _sinkhorn_cvjp(log_p, n_iters)
+
+
+# ------------------------------------------------------------ prox_tril
+def prox_tril(L, G, eta, thresh) -> jnp.ndarray:
+    """eta/thresh may be traced scalars (Lipschitz-scaled ADMM step)."""
+    n, m = L.shape
+    if _force_ref() or n % 128 != 0 or m % 128 != 0:
+        return ref.prox_tril_ref(L, G, eta, thresh)
+    block = 256 if n % 256 == 0 else 128
+    return prox_tril_pallas(L, G, eta, thresh, block=block,
+                            interpret=_interpret())
+
+
+# ------------------------------------------------------- flash attention
+def _attn_bwd_chunked(q, k, v, o, do, *, causal, window, sm_scale,
+                      block_q):
+    """Flash-style backward: scan over q chunks, recomputing scores and
+    lse per chunk in f32. Never materializes more than
+    (B, H, block_q, Sk)."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kq = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    offset = sk - sq
+    nq = sq // block_q
+
+    qc = q.reshape(b, hq, nq, block_q, d).astype(jnp.float32)
+    oc = o.reshape(b, hq, nq, block_q, d).astype(jnp.float32)
+    doc = do.reshape(b, hq, nq, block_q, d).astype(jnp.float32)
+
+    k_idx = jnp.arange(sk)[None, :]
+
+    def chunk(carry, inp):
+        dk_acc, dv_acc = carry
+        qi, q_blk, o_blk, do_blk = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, kq) * sm_scale
+        q_idx = offset + qi * block_q + jnp.arange(block_q)[:, None]
+        mask = jnp.ones((block_q, sk), bool)
+        if causal:
+            mask = mask & (q_idx >= k_idx)
+        if window is not None:
+            mask = mask & (k_idx > q_idx - window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        lse = jax.nn.logsumexp(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - lse)
+        dv = jnp.einsum("bhqk,bhqd->bhkd", p, do_blk)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", do_blk, vq)
+        delta = jnp.sum(do_blk * o_blk, axis=-1, keepdims=True)
+        ds = p * (dp - delta) * sm_scale
+        dq_blk = jnp.einsum("bhqk,bhkd->bhqd", ds, kq)
+        dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q_blk)
+        return (dk_acc + dk, dv_acc + dv), dq_blk
+
+    init = (jnp.zeros((b, hq, sk, d), jnp.float32),
+            jnp.zeros((b, hq, sk, d), jnp.float32))
+    (dk_full, dv_full), dq_chunks = jax.lax.scan(
+        chunk, init,
+        (jnp.arange(nq), qc.transpose(2, 0, 1, 3, 4),
+         oc.transpose(2, 0, 1, 3, 4), doc.transpose(2, 0, 1, 3, 4)))
+    dq = dq_chunks.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, d)
+    # fold the GQA group axis back onto kv heads
+    dk_kv = dk_full.reshape(b, hkv, group, sk, d).sum(axis=2)
+    dv_kv = dv_full.reshape(b, hkv, group, sk, d).sum(axis=2)
+    return (dq.astype(q.dtype), dk_kv.astype(k.dtype),
+            dv_kv.astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_cvjp(q, k, v, causal, window, sm_scale, block_q, block_k):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  sm_scale=sm_scale, block_q=block_q,
+                                  block_k=block_k, interpret=_interpret())
+
+
+def _flash_fwd(q, k, v, causal, window, sm_scale, block_q, block_k):
+    o = _flash_cvjp(q, k, v, causal, window, sm_scale, block_q, block_k)
+    return o, (q, k, v, o)
+
+
+def _flash_bwd(causal, window, sm_scale, block_q, block_k, res, do):
+    q, k, v, o = res
+    return _attn_bwd_chunked(q, k, v, o, do, causal=causal, window=window,
+                             sm_scale=sm_scale, block_q=block_q)
+
+
+_flash_cvjp.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
+                    block_q=128, block_k=256):
+    sq, sk = q.shape[2], k.shape[2]
+    d = q.shape[3]
+    if sm_scale is None:
+        sm_scale = float(1.0 / (d ** 0.5))
+    if _DIST_MODE:
+        return ref.attention_chunked(q, k, v, causal=causal,
+                                     window=window, sm_scale=sm_scale)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    if _force_ref() or sq % bq != 0 or sk % bk != 0 or sq < 8:
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 sm_scale=sm_scale)
+    return _flash_cvjp(q, k, v, causal, window, float(sm_scale), bq, bk)
+
+
+# ----------------------------------------------------------------- spmm
+def spmm(values, col_ids, x):
+    if _force_ref():
+        return ref.spmm_ref(values, col_ids, x)
+    return spmm_pallas(values, col_ids, x, interpret=_interpret())

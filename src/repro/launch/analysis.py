@@ -1,0 +1,116 @@
+"""Compiled-artifact analysis: roofline terms from the dry-run.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+cost_analysis() supplies flops/bytes; collective bytes are NOT in
+cost_analysis, so we parse the optimized HLO text and sum the output
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.launch import mesh as mesh_mod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+# e.g. "bf16[16,512,1024]{2,1,0}" — capture dtype and dims
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind over the module.
+    (Shapes in the optimized SPMD module are per-device.)"""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        # result-side op pattern: "%name = <shape> <op>(...)" or
+        # "ROOT %name = ..."; match the op name after '='
+        m = re.search(r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        shape_str, kind, start = m.group(1), m.group(2), m.group(3)
+        # skip the -done halves of async pairs (counted at -start)
+        if "-done(" in s:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline(cost: dict, coll: dict, n_chips: int,
+             model_flops: float | None = None) -> dict:
+    """cost: compiled.cost_analysis() dict (whole-program, all devices
+    for flops; XLA reports per-program). Terms in seconds."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    # XLA cost analysis on the SPMD-partitioned module is per device
+    compute_s = flops / mesh_mod.PEAK_FLOPS_BF16
+    memory_s = bytes_accessed / mesh_mod.HBM_BW
+    # ~3 usable ICI links per chip on a 2-D torus
+    coll_s = float(coll.get("total", 0)) / (3 * mesh_mod.ICI_BW_PER_LINK)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    out = dict(terms)
+    out["bottleneck"] = dom
+    out["hlo_flops_per_device"] = flops
+    out["hlo_bytes_per_device"] = bytes_accessed
+    out["collective_bytes_per_device"] = float(coll.get("total", 0))
+    if model_flops:
+        out["model_flops"] = model_flops
+        total = flops * n_chips
+        out["useful_flops_frac"] = model_flops / total if total else 0.0
+        # roofline fraction: useful work / (dominant term * peak)
+        t_dom = max(terms.values())
+        if t_dom > 0:
+            out["roofline_frac"] = (
+                model_flops / n_chips / mesh_mod.PEAK_FLOPS_BF16) / t_dom
+    return out
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # CPU backend may not implement everything
+        return {"error": str(e)}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(ma, attr):
+            try:
+                out[attr] = int(getattr(ma, attr))
+            except Exception:
+                pass
+    if not out:
+        out["repr"] = str(ma)
+    return out

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state. Production target: TPU v5e pods, 256 chips/pod (16x16), optional
+2-pod configuration with a leading "pod" axis for cross-pod data
+parallelism. Hardware constants for the roofline live here too.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh():
+    """Single-process debug mesh over whatever devices exist."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+# --- TPU v5e-ish hardware constants (per chip) for the roofline terms
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s per link (~3 links usable / chip)

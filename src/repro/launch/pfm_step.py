@@ -1,0 +1,103 @@
+"""The paper's own technique as a dry-run/roofline subject.
+
+`pfm-paper` cells lower one full ADMM training iteration (GNN forward,
+SoftRank, Gumbel-Sinkhorn, factorization-in-loop L/theta/Gamma updates)
+at production matrix sizes, with the dense (n, n) inner tensors sharded
+2-D over (data, model) — this is how PFM trains on matrices far beyond
+single-device memory.
+
+Shapes:
+  train_8k   — n=8192 reorder-training step (dense path)
+  infer_512k — n=524288 inference (GNN scores + argsort only; the dense
+               path never materializes at inference, matching Table 1's
+               O(GNN) complexity claim)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import admm as admm_mod
+from repro.core import encoder as enc
+from repro.core import reorder
+from repro.core.admm import PFMConfig
+from repro.optim import adam
+
+PFM_SHAPES = {
+    "train_8k": dict(n=8192, kind="train"),
+    "infer_512k": dict(n=524288, kind="infer"),
+}
+
+
+def _synthetic_levels(n: int, avg_degree: int = 8):
+    """ShapeDtypeStruct hierarchy mirroring build_hierarchy's output
+    shapes for an n-node mesh-like graph (halving coarsening)."""
+    levels = []
+    cur = n
+    while cur > 2:
+        e = max(8, cur * avg_degree)
+        levels.append(dict(
+            senders=jax.ShapeDtypeStruct((e,), jnp.int32),
+            receivers=jax.ShapeDtypeStruct((e,), jnp.int32),
+            edge_mask=jax.ShapeDtypeStruct((e,), jnp.float32),
+            cluster=jax.ShapeDtypeStruct((cur,), jnp.int32),
+            coarse=jax.ShapeDtypeStruct((max(cur // 2, 4),), jnp.float32),
+        ))
+        cur //= 2
+    levels.append(dict(
+        senders=jax.ShapeDtypeStruct((8,), jnp.int32),
+        receivers=jax.ShapeDtypeStruct((8,), jnp.int32),
+        edge_mask=jax.ShapeDtypeStruct((8,), jnp.float32),
+        cluster=jax.ShapeDtypeStruct((cur,), jnp.int32),
+        coarse=jax.ShapeDtypeStruct((4,), jnp.float32),
+    ))
+    return tuple(levels)
+
+
+def pfm_input_specs(shape_name: str, mesh):
+    sh = PFM_SHAPES[shape_name]
+    n = sh["n"]
+    dense2d = NamedSharding(mesh, P("data", "model"))
+    repl = NamedSharding(mesh, P())
+    row = NamedSharding(mesh, P("data"))
+
+    levels = _synthetic_levels(n)
+    levels = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=repl),
+        levels)
+    specs = dict(
+        levels=levels,
+        x_g=jax.ShapeDtypeStruct((n, 1), jnp.float32, sharding=row),
+        node_mask=jax.ShapeDtypeStruct((n,), jnp.float32, sharding=row),
+    )
+    if sh["kind"] == "train":
+        specs["A"] = jax.ShapeDtypeStruct((n, n), jnp.float32,
+                                          sharding=dense2d)
+    return specs
+
+
+def make_pfm_train_step(cfg: PFMConfig, opt):
+    """One ADMM iteration (the fori_loop body unrolled once) as the
+    lowering target — representative of the sustained training step."""
+    def step(params, opt_state, A, levels, x_g, node_mask, key):
+        return admm_mod.admm_train_matrix(
+            params, opt_state, A, levels, x_g, node_mask, key,
+            cfg=cfg, opt=opt)
+    return step
+
+
+def make_pfm_infer_step(cfg: PFMConfig):
+    def infer(params, levels, x_g, node_mask):
+        y = admm_mod.predict_scores(params, cfg, list(levels), x_g)
+        return reorder.permutation_from_scores(y, node_mask)
+    return infer
+
+
+def pfm_params_and_opt(cfg: PFMConfig, lr: float = 0.01):
+    key = jax.random.PRNGKey(0)
+    init_fn, _ = enc.ENCODERS[cfg.encoder]
+    params_shape = jax.eval_shape(lambda k: init_fn(k, in_dim=1), key)
+    opt = adam(lr)
+    opt_state_shape = jax.eval_shape(opt.init, params_shape)
+    return params_shape, opt, opt_state_shape

@@ -1,0 +1,85 @@
+"""train_step / serve_step factories shared by the trainer, the server
+and the dry-run."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.optim import apply_updates
+from repro.optim.compression import error_feedback_compress
+
+
+def make_train_step(cfg, opt, *, grad_compress: bool = False):
+    """Returns train_step(params, opt_state, batch[, ef_state]).
+
+    With grad_compress=True the gradient passes through int8 error-
+    feedback quantization before the (cross-pod) reduction — the jitted
+    graph then reduces the quantized-dequantized values, which is what
+    the int8 wire format produces on real DCN links.
+    """
+    if grad_compress:
+        def train_step(params, opt_state, ef_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                api.loss_fn, has_aux=True)(params, cfg, batch)
+            grads, ef_state = error_feedback_compress(grads, ef_state)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            metrics = dict(metrics, loss=loss)
+            return params, opt_state, ef_state, metrics
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, cfg, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_accum_train_step(cfg, opt, n_micro: int):
+    """Gradient-accumulation variant: the global batch splits into
+    n_micro microbatches scanned sequentially; per-microbatch gradients
+    accumulate in f32. XLA overlaps each microbatch's (sharded-matmul)
+    collectives with the next one's compute."""
+    def train_step(params, opt_state, batch):
+        def micro(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = jax.value_and_grad(
+                api.loss_fn, has_aux=True)(params, cfg, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                + x.shape[1:]), batch)
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+        grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss_sum / n_micro}
+    return train_step
+
+
+def make_serve_step(cfg):
+    if cfg.family == "encdec":
+        def serve_step(params, state, tokens, enc_out):
+            return api.decode_step(params, cfg, state, tokens,
+                                   enc_out=enc_out)
+        return serve_step
+
+    def serve_step(params, state, tokens):
+        return api.decode_step(params, cfg, state, tokens)
+    return serve_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        logits, _ = api.forward(params, cfg, batch)
+        return logits
+    return prefill_step

@@ -1,0 +1,115 @@
+"""End-to-end LM training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --smoke --steps 50 --ckpt-dir /tmp/ckpt
+
+--smoke uses the reduced same-family config (CPU-runnable); without it
+the full config is used (TPU fleet). The loop wires together the
+deterministic data pipeline, the supervised retry loop, atomic
+checkpointing with auto-resume, and the straggler monitor.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import TokenPipeline
+from repro.launch.steps import make_train_step
+from repro.models import api
+from repro.models.registry import get_config, smoke_config
+from repro.optim import adamw, linear_warmup_cosine
+from repro.runtime import RestartPolicy, StragglerMonitor, run_with_retries
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init_params(key, cfg, model_axis=1)
+    schedule = linear_warmup_cosine(args.lr, 10, args.steps)
+    opt = adamw(schedule, weight_decay=0.01, max_grad_norm=1.0)
+    opt_state = opt.init(params)
+
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=args.seed)
+    step_fn_jit = jax.jit(make_train_step(cfg, opt),
+                          donate_argnums=(0, 1))
+
+    ckpt = CheckpointManager(args.ckpt_dir, args.ckpt_interval) \
+        if args.ckpt_dir else None
+
+    state = {"params": params, "opt_state": opt_state}
+    start = 0
+    if ckpt is not None:
+        restored_step, restored = ckpt.restore_latest(state)
+        if restored_step is not None:
+            state = restored
+            start = restored_step + 1
+            print(f"[train] resumed from step {restored_step}")
+
+    monitor = StragglerMonitor()
+    losses = []
+
+    def make_batch(step: int):
+        b = pipe.batch(step)
+        out = {"tokens": jnp.asarray(b["tokens"])}
+        if cfg.family == "vlm":
+            rng = np.random.default_rng(step)
+            out["patches"] = jnp.asarray(rng.normal(size=(
+                args.batch, cfg.n_patches, cfg.d_model)).astype(
+                    np.float32) * 0.02)
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(step)
+            out["frames"] = jnp.asarray(rng.normal(size=(
+                args.batch, args.seq // 2, cfg.d_model)).astype(
+                    np.float32) * 0.02)
+            out["tokens"] = out["tokens"][:, :args.seq // 2 + 1]
+        return out
+
+    def do_step(step, st):
+        batch = make_batch(step)
+        params, opt_state, metrics = step_fn_jit(
+            st["params"], st["opt_state"], batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0:
+            print(f"[train] step {step}: loss {loss:.4f}")
+        return {"params": params, "opt_state": opt_state}
+
+    t0 = time.perf_counter()
+    state, history = run_with_retries(
+        do_step, n_steps=args.steps, state=state, ckpt_manager=ckpt,
+        policy=RestartPolicy(), monitor=monitor, start_step=start,
+        log=lambda m: print("[runtime]", m))
+    dt = time.perf_counter() - t0
+    print(f"[train] {history['completed']} steps in {dt:.1f}s "
+          f"({history['restarts']} restarts, "
+          f"{history['stragglers']} stragglers)")
+    print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    if ckpt is not None:
+        ckpt.maybe_save(args.steps - 1, state, force=True)
+    return losses
+
+
+if __name__ == "__main__":
+    main()

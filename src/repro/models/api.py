@@ -1,0 +1,113 @@
+"""Unified model API over all families.
+
+  init_params(key, cfg)                 -> params
+  loss_fn(params, cfg, batch)           -> (loss, metrics)
+  decode_step(params, cfg, state, tok)  -> (logits, state)
+  init_decode_state(cfg, B, max_len)    -> cache/state pytree
+  input_specs(cfg, shape_name)          -> {name: ShapeDtypeStruct}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import recurrentgemma, rwkv6, transformer
+from repro.models.registry import ArchConfig
+
+
+def _family_mod(cfg: ArchConfig):
+    if cfg.family == "ssm":
+        return rwkv6
+    if cfg.family == "hybrid":
+        return recurrentgemma
+    return transformer
+
+
+def init_params(key, cfg: ArchConfig, model_axis: int = 16):
+    mod = _family_mod(cfg)
+    if mod is transformer:
+        return transformer.init_params(key, cfg, model_axis=model_axis)
+    return mod.init_params(key, cfg)
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    return _family_mod(cfg).loss_fn(params, cfg, batch)
+
+
+def forward(params, cfg: ArchConfig, batch):
+    return _family_mod(cfg).forward(params, cfg, batch)
+
+
+def init_decode_state(cfg: ArchConfig, batch_size: int, max_len: int):
+    if cfg.family == "ssm":
+        return rwkv6.init_state(cfg, batch_size)
+    if cfg.family == "hybrid":
+        return recurrentgemma.init_state(cfg, batch_size, max_len)
+    return transformer.init_cache(cfg, batch_size, max_len)
+
+
+def decode_step(params, cfg: ArchConfig, state, tokens, enc_out=None):
+    if cfg.family == "ssm":
+        return rwkv6.decode_step(params, cfg, state, tokens)
+    if cfg.family == "hybrid":
+        return recurrentgemma.decode_step(params, cfg, state, tokens)
+    if cfg.family == "encdec":
+        return transformer.decode_step(params, cfg, state, tokens,
+                                       enc_out=enc_out)
+    return transformer.decode_step(params, cfg, state, tokens)
+
+
+# ------------------------------------------------------------ input specs
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    sh = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, "full quadratic attention at 524k context"
+    del sh
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+    For decode shapes this includes the KV cache / recurrent state."""
+    sh = SHAPES[shape_name]
+    s, b = sh["seq_len"], sh["global_batch"]
+    i32 = jnp.int32
+
+    if sh["kind"] == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s + 1), i32)}
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, s // 2, cfg.d_model), jnp.float32)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s // 2 + 1), i32)
+        return specs
+
+    if sh["kind"] == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, s // 2, cfg.d_model), jnp.float32)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s // 2), i32)
+        return specs
+
+    # decode: one new token against a cache of length s
+    state = jax.eval_shape(lambda: init_decode_state(cfg, b, s))
+    specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+             "state": state}
+    if cfg.family == "encdec":
+        specs["enc_out"] = jax.ShapeDtypeStruct(
+            (b, min(s, 4096), cfg.d_model), jnp.float32)
+    return specs

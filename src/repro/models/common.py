@@ -1,0 +1,207 @@
+"""Shared model components: RoPE, attention projections, SwiGLU FFN,
+cross-entropy loss. Functional, params-dict based."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.nn.layers import rms_norm, rms_norm_init
+
+
+def dtype_of(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def remat_policy():
+    """Activation-checkpoint policy for the per-layer remat, selectable
+    for perf iteration (EXPERIMENTS.md §Perf). Default recomputes
+    everything inside a layer: activation temp = layer boundaries only,
+    ~1.3x forward flops — the right trade at 16 GB/chip."""
+    import os
+    name = os.environ.get("REPRO_REMAT_POLICY", "nothing")
+    return {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[name]
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, H, S, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # B,1,S,D/2
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def attn_init(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": (s * jax.random.normal(ks[0], (d, h * hd))).astype(dtype),
+        "wk": (s * jax.random.normal(ks[1], (d, kv * hd))).astype(dtype),
+        "wv": (s * jax.random.normal(ks[2], (d, kv * hd))).astype(dtype),
+        "wo": ((h * hd) ** -0.5
+               * jax.random.normal(ks[3], (h * hd, d))).astype(dtype),
+    }
+
+
+def attention(params, x, cfg, *, positions=None, causal=True, window=None,
+              kv_x=None):
+    """Full-sequence attention (train / prefill). kv_x enables
+    cross-attention (encoder-decoder)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = kv_x if kv_x is not None else x
+    q = (x @ params["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (src @ params["wk"]).reshape(b, src.shape[1], kv, hd)\
+        .transpose(0, 2, 1, 3)
+    v = (src @ params["wv"]).reshape(b, src.shape[1], kv, hd)\
+        .transpose(0, 2, 1, 3)
+    if positions is None:
+        positions = jnp.arange(s)
+    if kv_x is None:  # self-attention: rotary on q and k
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    o = kops.flash_attention(q, k, v, causal=causal, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return o @ params["wo"]
+
+
+def quantize_kv(x):
+    """Per-(batch, head, position) symmetric int8 quantization of a KV
+    vector block x: (..., hd) -> (int8 values, f32 scale[..., 1])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_decode(params, x, cache_k, cache_v, cache_len, cfg, *,
+                     window=None, k_scale=None, v_scale=None):
+    """One-step decode against a KV cache.
+
+    x: (B, 1, d). cache_k/v: (B, KV, S_cache, hd) — bf16/f32, or int8
+    when k_scale/v_scale (B, KV, S_cache, 1) are given (quantized-cache
+    serving: halves the HBM stream that dominates decode). cache_len:
+    scalar int — number of valid positions already in the cache.
+    Returns (out, k_new, v_new[, k_scale, v_scale]).
+    """
+    b, _, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s_cache = cache_k.shape[2]
+    quant = k_scale is not None
+    q = (x @ params["wq"]).reshape(b, 1, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ params["wk"]).reshape(b, 1, kv, hd).transpose(0, 2, 1, 3)
+    v = (x @ params["wv"]).reshape(b, 1, kv, hd).transpose(0, 2, 1, 3)
+    pos = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    idx = jnp.arange(s_cache)
+    ins = (idx == (cache_len % s_cache))  # ring-buffer insert for SWA
+    if quant:
+        k_q, k_s = quantize_kv(k)
+        v_q, v_s = quantize_kv(v)
+        ck = jnp.where(ins[None, None, :, None], k_q, cache_k)
+        cv = jnp.where(ins[None, None, :, None], v_q, cache_v)
+        k_scale = jnp.where(ins[None, None, :, None], k_s, k_scale)
+        v_scale = jnp.where(ins[None, None, :, None], v_s, v_scale)
+        ck_f = ck.astype(jnp.float32) * k_scale
+        cv_f = cv.astype(jnp.float32) * v_scale
+    else:
+        ck = jnp.where(ins[None, None, :, None], k, cache_k)
+        cv = jnp.where(ins[None, None, :, None], v, cache_v)
+        ck_f, cv_f = ck, cv
+
+    group = h // kv
+    kq = jnp.repeat(ck_f, group, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(cv_f, group, axis=1).astype(jnp.float32)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq)
+    scores = scores * (hd ** -0.5)
+    # cache is a ring buffer when windowed: once wrapped, every slot is
+    # live (the window constraint is enforced by overwriting)
+    wrapped = cache_len >= s_cache
+    valid = wrapped | (idx <= cache_len)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vq).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
+    out = o @ params["wo"]
+    if quant:
+        return out, ck, cv, k_scale, v_scale
+    return out, ck, cv
+
+
+# ------------------------------------------------------------------- FFN
+def ffn_init(key, d, ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": (d ** -0.5 * jax.random.normal(ks[0], (d, ff)))
+        .astype(dtype),
+        "w_up": (d ** -0.5 * jax.random.normal(ks[1], (d, ff)))
+        .astype(dtype),
+        "w_down": (ff ** -0.5 * jax.random.normal(ks[2], (ff, d)))
+        .astype(dtype),
+    }
+
+
+def ffn(params, x):
+    """SwiGLU."""
+    g = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    u = (x @ params["w_up"]).astype(jnp.float32)
+    return ((g * u).astype(x.dtype)) @ params["w_down"]
+
+
+def norm_init(d):
+    return rms_norm_init(d)
+
+
+def norm(params, x):
+    return rms_norm(params, x)
+
+
+
+
+def mask_vocab_pad(logits, cfg):
+    """-inf the vocab-padding columns (embed tables are padded to a
+    128-multiple for sharding; pad ids must never win CE or argmax)."""
+    if cfg.vocab_pad == cfg.vocab:
+        return logits
+    keep = jnp.arange(cfg.vocab_pad) < cfg.vocab
+    return jnp.where(keep, logits, -1e30)
+
+
+# ------------------------------------------------------------------ loss
+def cross_entropy(logits, labels, z_loss_coeff: float = 1e-4):
+    """logits: (B, S, V) any dtype; labels: (B, S) int32. Mean CE + z-loss
+    (stabilizes the vocab-sharded logsumexp at scale)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # gold logit via a masked reduction over the (model-sharded) vocab
+    # axis — take_along_axis would force GSPMD to all-gather the full
+    # logits; this form partitions cleanly (elementwise + psum).
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    ce = lse - gold
+    z = z_loss_coeff * jnp.square(lse)
+    return jnp.mean(ce + z), {"ce": jnp.mean(ce),
+                              "z_loss": jnp.mean(z)}

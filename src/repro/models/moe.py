@@ -1,0 +1,264 @@
+"""Mixture-of-Experts FFN with capacity-based sort-free dispatch, plus an
+optional Sinkhorn balanced router reusing the paper's differentiable-
+permutation machinery (beyond-paper demo, see DESIGN.md §5).
+
+Dispatch strategy (TPU-native, GSPMD-friendly):
+  * router logits -> top-k expert ids + probs per token;
+  * position-in-expert via cumsum over the flattened token axis;
+  * tokens scattered into an (E, C, d) capacity buffer (overflow drops,
+    standard Switch-style), expert FFN batched over E, gathered back and
+    combined with router probs.
+Experts are padded to a multiple of the `model` mesh axis so the E axis
+shards cleanly (EP); dummy experts receive -inf router logits.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ffn, ffn_init
+
+
+_DIST_MESH = None
+
+
+def set_dist_mesh(mesh):
+    """Registers the active mesh so moe_ffn can use the shard_map
+    (explicit all-to-all) dispatch path during distributed lowering."""
+    global _DIST_MESH
+    _DIST_MESH = mesh
+
+
+def _constrain(x, *spec):
+    """Best-effort sharding constraint (active under a mesh context;
+    no-op on plain CPU jit). Perf lever REPRO_MOE_SHARD=0 disables, for
+    the §Perf before/after measurements."""
+    if os.environ.get("REPRO_MOE_SHARD", "1") != "1":
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def padded_experts(n_experts: int, model_axis: int = 16) -> int:
+    if n_experts % model_axis == 0:
+        return n_experts
+    return ((n_experts + model_axis - 1) // model_axis) * model_axis
+
+
+def moe_init(key, cfg, dtype, model_axis: int = 16):
+    e_pad = padded_experts(cfg.n_experts, model_axis)
+    ks = jax.random.split(key, 3)
+    experts = jax.vmap(lambda k: ffn_init(k, cfg.d_model, cfg.d_ff, dtype))(
+        jax.random.split(ks[0], e_pad))
+    p = {
+        "router": (cfg.d_model ** -0.5
+                   * jax.random.normal(ks[1], (cfg.d_model, e_pad)))
+        .astype(jnp.float32),
+        "experts": experts,
+    }
+    if cfg.moe_shared_ff:
+        p["shared"] = ffn_init(ks[2], cfg.d_model, cfg.moe_shared_ff, dtype)
+    return p
+
+
+def _capacity(tokens: int, n_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    c = int(tokens * top_k * capacity_factor / n_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_ffn(params, x, cfg, *, router_noise_key=None):
+    """x: (B, S, d) -> (B, S, d), plus aux metrics (load-balance loss).
+
+    Two dispatch paths:
+      * GSPMD path (default): sort-based capacity dispatch, compiler
+        decides the collectives. Baseline in EXPERIMENTS.md §Perf.
+      * shard_map path (REPRO_MOE_IMPL=shard_map + set_dist_mesh):
+        tokens stay sharded over (data, model); each device routes its
+        local tokens and exchanges expert payloads with one explicit
+        all_to_all over the model axis — the EP wire cost collapses
+        from replicate+all-reduce of the capacity buffer (~TB) to the
+        token payload itself (~GB). Differentiable (all_to_all
+        transposes to all_to_all).
+    """
+    if (os.environ.get("REPRO_MOE_IMPL", "shard_map") == "shard_map"
+            and _DIST_MESH is not None):
+        result = _moe_ffn_shard_map(params, x, cfg)
+        if result is not None:
+            return result
+    b, s, d = x.shape
+    t = b * s
+    e_pad = params["router"].shape[1]
+    e_real = cfg.n_experts
+    k = cfg.top_k
+    cap = _capacity(t, e_real, k, cfg.capacity_factor)
+
+    xf = x.reshape(t, d)
+    logits = (xf.astype(jnp.float32) @ params["router"])
+    # mask dummy (padding) experts
+    if e_pad > e_real:
+        logits = jnp.where(jnp.arange(e_pad)[None, :] < e_real, logits,
+                           -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)               # (t, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): e_real * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    assign = jax.nn.one_hot(top_e[:, 0], e_pad)
+    fe = jnp.mean(assign, axis=0)
+    aux = e_real * jnp.sum(me * fe)
+
+    # --- dispatch: sort tokens by expert (TPU-idiomatic; avoids the
+    # O(T*E) cumsum-over-tokens whose reduce-window lowering is
+    # quadratic in the XLA cost model and slow in practice)
+    flat_e = top_e.reshape(-1)                           # (t*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(flat_e), flat_e,
+                                 num_segments=e_pad)     # (E,)
+    starts = jnp.cumsum(counts) - counts                 # exclusive, (E,)
+    pos_sorted = jnp.arange(t * k) - starts[e_sorted]
+    keep = pos_sorted < cap                              # capacity drop
+    w_sorted = jnp.where(keep, 1.0, 0.0)
+
+    src = xf[order // k]                                 # (t*k, d) sorted
+    e_idx = jnp.where(keep, e_sorted, e_pad - 1)
+    p_idx = jnp.where(keep, pos_sorted, cap - 1)
+    buf = jnp.zeros((e_pad, cap, d), x.dtype)
+    buf = buf.at[e_idx, p_idx].add(
+        src * w_sorted[:, None].astype(x.dtype))
+    # keep the capacity buffer expert-sharded (EP): without the
+    # constraint GSPMD replicates the scatter output and all-reduces it
+    # (~E_pad x more cross-chip bytes); with it the dispatch lowers to
+    # an all-to-all of the token payload — see EXPERIMENTS.md §Perf
+    buf = _constrain(buf, "model", None, None)
+
+    # --- expert FFN batched over the (sharded) expert axis
+    out_buf = jax.vmap(lambda pe, xe: ffn(pe, xe))(params["experts"], buf)
+    out_buf = _constrain(out_buf, "model", None, None)
+
+    # --- combine: gather back in sorted order, unsort, weight, reduce k
+    gathered = out_buf[e_idx, p_idx] * w_sorted[:, None].astype(x.dtype)
+    inv = jnp.argsort(order, stable=True)
+    unsorted = gathered[inv]                             # slot order
+    unsorted = unsorted * top_p.reshape(-1)[:, None].astype(x.dtype)
+    combined = unsorted.reshape(t, k, d).sum(axis=1)
+
+    if "shared" in params:
+        combined = combined + ffn(params["shared"], xf)
+    return combined.reshape(b, s, d), {"moe_aux": aux}
+
+
+def _local_dispatch(xf, router, e_real, e_pad, k, cap):
+    """Route local tokens -> (capacity buffer, combine metadata)."""
+    t, d = xf.shape
+    logits = xf.astype(jnp.float32) @ router
+    logits = jnp.where(jnp.arange(e_pad)[None, :] < e_real, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    me = jnp.mean(probs, axis=0)
+    fe = jnp.mean(jax.nn.one_hot(top_e[:, 0], e_pad), axis=0)
+    aux = e_real * jnp.sum(me * fe)
+
+    flat_e = top_e.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(flat_e), flat_e,
+                                 num_segments=e_pad)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(t * k) - starts[e_sorted]
+    keep = pos_sorted < cap
+    w_sorted = jnp.where(keep, 1.0, 0.0)
+    e_idx = jnp.where(keep, e_sorted, e_pad - 1)
+    p_idx = jnp.where(keep, pos_sorted, cap - 1)
+    buf = jnp.zeros((e_pad, cap, d), xf.dtype)
+    buf = buf.at[e_idx, p_idx].add(
+        xf[order // k] * w_sorted[:, None].astype(xf.dtype))
+    meta = (order, e_idx, p_idx, w_sorted, top_p)
+    return buf, meta, aux
+
+
+def _local_combine(out_buf, meta, t, k, d, dtype):
+    order, e_idx, p_idx, w_sorted, top_p = meta
+    gathered = out_buf[e_idx, p_idx] * w_sorted[:, None].astype(dtype)
+    inv = jnp.argsort(order, stable=True)
+    unsorted = gathered[inv] * top_p.reshape(-1)[:, None].astype(dtype)
+    return unsorted.reshape(t, k, d).sum(axis=1)
+
+
+def _moe_ffn_shard_map(params, x, cfg):
+    """Explicit-EP dispatch under shard_map: one all_to_all each way
+    over the model axis carries exactly the token payload."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = _DIST_MESH
+    m = mesh.shape["model"]
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    b, s, d = x.shape
+    if s % m != 0:  # decode/odd shapes: fall back to the GSPMD path
+        return None
+    e_pad = params["router"].shape[1]
+    e_loc = e_pad // m
+    k = cfg.top_k
+
+    p_specs = jax.tree_util.tree_map(lambda _: P(), params)
+    p_specs["experts"] = jax.tree_util.tree_map(
+        lambda _: P("model", None, None), params["experts"])
+
+    def body(params, x):
+        # x local: (b_loc, s_loc, d) — sequence split over model ranks
+        b_loc, s_loc, _ = x.shape
+        t = b_loc * s_loc
+        xf = x.reshape(t, d)
+        cap_loc = _capacity(t, cfg.n_experts, k, cfg.capacity_factor)
+        buf, meta, aux = _local_dispatch(xf, params["router"],
+                                         cfg.n_experts, e_pad, k, cap_loc)
+        # ---- EP exchange: send each expert block to its owner rank
+        send = buf.reshape(m, e_loc, cap_loc, d)
+        recv = jax.lax.all_to_all(send, "model", split_axis=0,
+                                  concat_axis=0, tiled=False)
+        # recv: (m_src, e_loc, cap_loc, d) -> (e_loc, m_src*cap_loc, d)
+        work = recv.transpose(1, 0, 2, 3).reshape(e_loc,
+                                                  m * cap_loc, d)
+        out = jax.vmap(lambda pe, xe: ffn(pe, xe))(params["experts"],
+                                                   work)
+        back = out.reshape(e_loc, m, cap_loc, d).transpose(1, 0, 2, 3)
+        out_buf = jax.lax.all_to_all(back, "model", split_axis=0,
+                                     concat_axis=0, tiled=False)
+        out_buf = out_buf.reshape(e_pad, cap_loc, d)
+        combined = _local_combine(out_buf, meta, t, k, d, x.dtype)
+        if "shared" in params:
+            combined = combined + ffn(params["shared"], xf)
+        aux = jax.lax.pmean(aux, "model")
+        for a in dp_axes:
+            aux = jax.lax.pmean(aux, a)
+        return combined.reshape(b_loc, s_loc, d), aux
+
+    from jax import shard_map
+    out, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(p_specs, P(dp, "model", None)),
+        out_specs=(P(dp, "model", None), P()),
+    )(params, x)
+    return out, {"moe_aux": aux}
+
+
+def sinkhorn_router_logits(logits, n_iters: int = 8, tau: float = 1.0):
+    """Balanced assignment via Sinkhorn normalization of router logits —
+    the paper's Gumbel-Sinkhorn reparameterization applied to the
+    token->expert transport polytope (beyond-paper extension). Returns
+    balanced log-probs with the same shape as `logits` (t, E)."""
+    x = logits / tau
+    for _ in range(n_iters):
+        x = x - jax.nn.logsumexp(x, axis=0, keepdims=True)
+        x = x - jax.nn.logsumexp(x, axis=1, keepdims=True)
+    return x

@@ -1,0 +1,272 @@
+"""RecurrentGemma (Griffin): RG-LRU recurrent blocks + local sliding-
+window attention, interleaved 2:1 (two recurrent blocks per local-attn
+block, paper arXiv:2402.19427).
+
+RG-LRU recurrence (per channel):
+    a_t   = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))
+    h_t   = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+computed in chunked form: within a chunk, h_t = A_t h_0 + sum decay-
+weighted inputs with cumulative log-decay (all element-wise, VPU work);
+across chunks lax.scan carries h. The local-attn blocks use the Pallas
+flash kernel with a window; caches are window-sized ring buffers, so the
+long_500k decode cell runs with O(window + d_lru) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (attention, attention_decode, attn_init,
+                                 cross_entropy, dtype_of, ffn, ffn_init,
+                                 norm, norm_init,
+                                 mask_vocab_pad as cm_mask_vocab_pad)
+
+CHUNK = 32        # keeps the chunked-scan decay exponents within f32
+C_CONST = 8.0
+MIN_LOG_A = -1.0  # per-token decay clamp: |exponent| <= CHUNK*|MIN_LOG_A|
+
+
+def _lin(key, din, dout, dtype):
+    return (din ** -0.5 * jax.random.normal(key, (din, dout))).astype(dtype)
+
+
+def rec_block_init(key, cfg, dtype):
+    d, dl = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": norm_init(d),
+        "w_x": _lin(ks[0], d, dl, dtype),       # conv branch input
+        "w_gate": _lin(ks[1], d, dl, dtype),    # gelu gate branch
+        "w_out": _lin(ks[2], dl, d, dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[3], (4, dl)))
+        .astype(jnp.float32),                   # temporal conv width 4
+        "w_a": _lin(ks[4], dl, dl, dtype),      # recurrence gate
+        "w_i": _lin(ks[5], dl, dl, dtype),      # input gate
+        "lam": jnp.linspace(0.7, 5.0, dl).astype(jnp.float32),
+        "ln_ffn": norm_init(d),
+        "ffn": ffn_init(ks[6], d, cfg.d_ff, dtype),
+    }
+
+
+def attn_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln": norm_init(cfg.d_model),
+        "attn": attn_init(ks[0], cfg, dtype),
+        "ln_ffn": norm_init(cfg.d_model),
+        "ffn": ffn_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(key, cfg, **_):
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    n_super = cfg.n_layers // len(pat)
+    n_tail = cfg.n_layers - n_super * len(pat)
+
+    def super_init(k):
+        kk = jax.random.split(k, len(pat))
+        return {
+            f"b{i}": (rec_block_init(kk[i], cfg, dtype) if kind == "rec"
+                      else attn_block_init(kk[i], cfg, dtype))
+            for i, kind in enumerate(pat)
+        }
+
+    params = {
+        "embed": (d ** -0.5 * jax.random.normal(
+            ks[0], (cfg.vocab_pad, d))).astype(dtype),
+        "supers": jax.vmap(super_init)(jax.random.split(ks[1], n_super)),
+        "tail": [rec_block_init(jax.random.fold_in(ks[2], i), cfg, dtype)
+                 for i in range(n_tail)],
+        "final_norm": norm_init(d),
+        "lm_head": (d ** -0.5 * jax.random.normal(
+            ks[3], (d, cfg.vocab_pad))).astype(dtype),
+    }
+    return params
+
+
+# ------------------------------------------------------------- RG-LRU
+def _rg_lru(p, x, h0):
+    """x: (B, S, dl) f32; h0: (B, dl). Chunked scan."""
+    b, s, dl = x.shape
+    gate_a = jax.nn.sigmoid((x @ p["w_a"].astype(jnp.float32)))
+    log_a = -C_CONST * jax.nn.softplus(p["lam"]) * gate_a   # (B,S,dl) <0
+    log_a = jnp.maximum(log_a, MIN_LOG_A)
+    gate_i = jax.nn.sigmoid((x @ p["w_i"].astype(jnp.float32)))
+    u = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * (gate_i * x)
+
+    if s == 1:
+        a = jnp.exp(log_a[:, 0])
+        h = a * h0 + u[:, 0]
+        return h[:, None, :], h
+
+    chunk_len = CHUNK
+    while s % chunk_len != 0:  # short/odd sequences: largest divisor
+        chunk_len //= 2
+    nc = s // chunk_len
+
+    def chunk(h, inp):
+        la, uu = inp                       # (B, C, dl)
+        acc = jnp.cumsum(la, axis=1)       # cumulative log decay
+        # h_t = e^{acc_t} h0 + sum_{s<=t} e^{acc_t - acc_s} u_s
+        w_in = uu * jnp.exp(-acc)
+        pref = jnp.cumsum(w_in, axis=1)
+        ht = jnp.exp(acc) * (h[:, None, :] + pref)
+        return ht[:, -1, :], ht
+
+    la = log_a.reshape(b, nc, chunk_len, dl).transpose(1, 0, 2, 3)
+    uu = u.reshape(b, nc, chunk_len, dl).transpose(1, 0, 2, 3)
+    h_last, hs = jax.lax.scan(chunk, h0, (la, uu))
+    return hs.transpose(1, 0, 2, 3).reshape(b, s, dl), h_last
+
+
+def _temporal_conv(p, x, conv_state):
+    """Width-4 causal depthwise conv. conv_state: (B, 3, dl)."""
+    w = p["conv_w"]
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    out = sum(w[i] * xp[:, 3 - i:xp.shape[1] - i, :] for i in range(4))
+    return out, xp[:, -3:, :]
+
+
+def rec_block(p, x, cfg, state):
+    """state: {"h": (B, dl), "conv": (B, 3, dl)}."""
+    xn = norm(p["ln"], x)
+    gate = jax.nn.gelu((xn @ p["w_gate"]).astype(jnp.float32))
+    xi = (xn @ p["w_x"]).astype(jnp.float32)
+    xi, conv_state = _temporal_conv(p, xi, state["conv"])
+    y, h_last = _rg_lru(p, xi, state["h"])
+    y = (y * gate).astype(x.dtype) @ p["w_out"]
+    x = x + y
+    x = x + ffn(p["ffn"], norm(p["ln_ffn"], x))
+    return x, {"h": h_last, "conv": conv_state}
+
+
+def attn_block(p, x, cfg):
+    x = x + attention(p["attn"], norm(p["ln"], x), cfg, causal=True,
+                      window=cfg.window)
+    x = x + ffn(p["ffn"], norm(p["ln_ffn"], x))
+    return x
+
+
+def attn_block_decode(p, x, cfg, cache):
+    a, ck, cv = attention_decode(p["attn"], norm(p["ln"], x), cache["k"],
+                                 cache["v"], cache["len"], cfg,
+                                 window=cfg.window)
+    x = x + a
+    x = x + ffn(p["ffn"], norm(p["ln_ffn"], x))
+    return x, {"k": ck, "v": cv, "len": cache["len"] + 1}
+
+
+# ---------------------------------------------------------------- state
+def init_state(cfg, batch_size: int, max_len: int):
+    dtype = dtype_of(cfg)
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    n_super = cfg.n_layers // len(pat)
+    n_tail = cfg.n_layers - n_super * len(pat)
+    dl = cfg.lru_width
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    w = min(max_len, cfg.window or max_len)
+    st = {"supers": {}, "tail": []}
+    for i, kind in enumerate(pat):
+        if kind == "rec":
+            st["supers"][f"b{i}"] = {
+                "h": jnp.zeros((n_super, batch_size, dl), jnp.float32),
+                "conv": jnp.zeros((n_super, batch_size, 3, dl),
+                                  jnp.float32)}
+        else:
+            st["supers"][f"b{i}"] = {
+                "k": jnp.zeros((n_super, batch_size, kv, w, hd), dtype),
+                "v": jnp.zeros((n_super, batch_size, kv, w, hd), dtype),
+                "len": jnp.zeros((n_super,), jnp.int32)}
+    for _ in range(n_tail):
+        st["tail"].append({
+            "h": jnp.zeros((batch_size, dl), jnp.float32),
+            "conv": jnp.zeros((batch_size, 3, dl), jnp.float32)})
+    return st
+
+
+# --------------------------------------------------------------- forward
+def forward(params, cfg, batch, state=None):
+    tok = batch["tokens"]
+    b = tok.shape[0]
+    x = params["embed"][tok]
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    if state is None:
+        state = init_state(cfg, b, tok.shape[1])
+
+    def super_block(x, inp):
+        sp, sst = inp
+        new_st = {}
+        for i, kind in enumerate(pat):
+            if kind == "rec":
+                x, new_st[f"b{i}"] = rec_block(sp[f"b{i}"], x, cfg,
+                                               sst[f"b{i}"])
+            else:
+                x = attn_block(sp[f"b{i}"], x, cfg)
+                new_st[f"b{i}"] = sst[f"b{i}"]
+        return x, new_st
+
+    from repro.models.common import remat_policy
+    super_block = jax.checkpoint(super_block, policy=remat_policy())
+    x, new_super_st = _run_supers(super_block, x, params["supers"],
+                                  state["supers"])
+    new_tail = []
+    for p_t, st_t in zip(params["tail"], state["tail"]):
+        x, ns = rec_block(p_t, x, cfg, st_t)
+        new_tail.append(ns)
+    x = norm(params["final_norm"], x)
+    logits = cm_mask_vocab_pad(x @ params["lm_head"], cfg)
+    return logits, {"supers": new_super_st, "tail": new_tail}
+
+
+def _run_supers(super_block, x, supers_p, supers_st):
+    from repro.models.transformer import unroll_layers
+    if unroll_layers():
+        n = jax.tree_util.tree_leaves(supers_p)[0].shape[0]
+        outs = []
+        for i in range(n):
+            inp = jax.tree_util.tree_map(lambda a: a[i],
+                                         (supers_p, supers_st))
+            x, ns = super_block(x, inp)
+            outs.append(ns)
+        new_st = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+        return x, new_st
+    return jax.lax.scan(super_block, x, (supers_p, supers_st))
+
+
+def loss_fn(params, cfg, batch):
+    logits, _ = forward(params, cfg, {"tokens": batch["tokens"][:, :-1]})
+    loss, metrics = cross_entropy(logits, batch["tokens"][:, 1:])
+    return loss, metrics
+
+
+def decode_step(params, cfg, state, tokens):
+    x = params["embed"][tokens]
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+
+    def super_block(x, inp):
+        sp, sst = inp
+        new_st = {}
+        for i, kind in enumerate(pat):
+            if kind == "rec":
+                x, new_st[f"b{i}"] = rec_block(sp[f"b{i}"], x, cfg,
+                                               sst[f"b{i}"])
+            else:
+                x, new_st[f"b{i}"] = attn_block_decode(
+                    sp[f"b{i}"], x, cfg,
+                    {"k": sst[f"b{i}"]["k"], "v": sst[f"b{i}"]["v"],
+                     "len": sst[f"b{i}"]["len"]})
+        return x, new_st
+
+    x, new_super_st = _run_supers(super_block, x, params["supers"],
+                                  state["supers"])
+    new_tail = []
+    for p_t, st_t in zip(params["tail"], state["tail"]):
+        x, ns = rec_block(p_t, x, cfg, st_t)
+        new_tail.append(ns)
+    x = norm(params["final_norm"], x)
+    logits = cm_mask_vocab_pad(x @ params["lm_head"], cfg)
+    return logits, {"supers": new_super_st, "tail": new_tail}

@@ -1,0 +1,136 @@
+"""Architecture registry: one ArchConfig per assigned architecture.
+
+Families:
+  dense    — decoder-only transformer (GQA, optional SWA)
+  moe      — decoder-only with routed-expert FFN (EP/TP sharded)
+  ssm      — RWKV6 (attention-free, data-dependent decay)
+  hybrid   — RG-LRU recurrent blocks + local attention (recurrentgemma)
+  encdec   — encoder-decoder (seamless; audio frontend stubbed)
+  vlm      — decoder-only with prepended patch embeddings (frontend stub)
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense|moe|ssm|hybrid|encdec|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    window: Optional[int] = None     # sliding-window attention
+    # --- MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_shared_ff: int = 0           # shared-expert d_ff (llama4)
+    capacity_factor: float = 1.25
+    # --- enc-dec
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # --- vlm
+    n_patches: int = 0
+    # --- hybrid (recurrentgemma): pattern of block kinds, repeated
+    block_pattern: tuple = ()        # e.g. ("rec", "rec", "attn")
+    lru_width: int = 0
+    # --- rwkv
+    rwkv_head_dim: int = 64
+    # --- numerics / scale
+    dtype: str = "bfloat16"
+    rope_theta: float = 10000.0
+    # sub-quadratic? (decides long_500k participation)
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_pad(self) -> int:
+        """Embedding-table size: vocab rounded up to a multiple of 128
+        so the vocab axis shards on any mesh (standard production vocab
+        padding; pad rows are never valid targets, so the CE loss is
+        unchanged). internvl2's 151655 / granite's 49155 / seamless's
+        256206 otherwise force replicated embeddings + logits."""
+        return ((self.vocab + 127) // 128) * 128
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        emb = v * d * 2
+        if self.family == "moe":
+            per = (self.n_experts * 3 * d * ff + 3 * d * self.moe_shared_ff
+                   + d * self.n_experts  # router
+                   + 2 * d * self.n_heads * self.hd
+                   + 2 * d * self.n_kv_heads * self.hd)
+        elif self.family == "ssm":
+            per = 6 * d * d + 3 * d * ff
+        else:
+            per = (3 * d * ff + 2 * d * self.n_heads * self.hd
+                   + 2 * d * self.n_kv_heads * self.hd)
+        layers = self.n_layers + self.enc_layers + self.dec_layers
+        return emb + layers * per
+
+    def active_param_count(self) -> int:
+        if self.family != "moe":
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        per_active = (self.top_k * 3 * d * ff + 3 * d * self.moe_shared_ff
+                      + d * self.n_experts
+                      + 2 * d * self.n_heads * self.hd
+                      + 2 * d * self.n_kv_heads * self.hd)
+        return self.vocab * d * 2 + self.n_layers * per_active
+
+
+_ARCH_IDS = [
+    "internvl2-1b", "h2o-danube-3-4b", "internlm2-1.8b", "deepseek-7b",
+    "deepseek-67b", "seamless-m4t-medium", "rwkv6-1.6b",
+    "llama4-scout-17b-a16e", "granite-moe-3b-a800m", "recurrentgemma-9b",
+    "pfm-paper",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(_module_name(arch_id))
+    return mod.ARCH
+
+
+def list_archs():
+    return list(_ARCH_IDS)
+
+
+def smoke_config(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    return dataclasses.replace(
+        cfg,
+        n_layers=min(cfg.n_layers, 2),
+        enc_layers=min(cfg.enc_layers, 2),
+        dec_layers=min(cfg.dec_layers, 2),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads
+        else 4,
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        moe_shared_ff=128 if cfg.moe_shared_ff else 0,
+        window=min(cfg.window, 64) if cfg.window else None,
+        n_patches=16 if cfg.n_patches else 0,
+        lru_width=128 if cfg.lru_width else 0,
+        rwkv_head_dim=32,
+        block_pattern=cfg.block_pattern,
+        dtype="float32",
+    )

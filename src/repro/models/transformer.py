@@ -1,0 +1,267 @@
+"""Composable transformer covering the dense / moe / vlm / encdec
+families.
+
+Layout decisions for scale:
+  * layers are stacked (L, ...) and iterated with lax.scan — keeps HLO
+    size O(1) in depth (deepseek-67b's 95 layers compile as one block)
+    and gives XLA a uniform unit for collective/compute overlap;
+  * per-layer activations rematerialized (jax.checkpoint with
+    dots-saveable policy) — activation memory O(sqrt-ish), the standard
+    large-model trade;
+  * attention runs through the Pallas flash kernel (ops.flash_attention)
+    on TPU; decode uses an XLA path (memory-bound, MXU irrelevant).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models.common import (attention, attention_decode, attn_init,
+                                 cross_entropy, dtype_of, ffn, ffn_init,
+                                 norm, norm_init)
+
+from repro.models.common import remat_policy
+from repro.models.common import mask_vocab_pad as cm_mask_vocab_pad
+
+
+# ------------------------------------------------------------------ init
+def _layer_init(key, cfg, dtype, *, cross: bool = False,
+                model_axis: int = 16):
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln_attn": norm_init(cfg.d_model),
+        "attn": attn_init(ks[0], cfg, dtype),
+        "ln_ffn": norm_init(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype, model_axis)
+    else:
+        p["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    if cross:
+        p["ln_cross"] = norm_init(cfg.d_model)
+        p["cross"] = attn_init(ks[2], cfg, dtype)
+    return p
+
+
+def _stack_layers(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg, *, model_axis: int = 16):
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    params = {
+        "embed": (d ** -0.5 * jax.random.normal(
+            ks[0], (cfg.vocab_pad, d))).astype(dtype),
+        "final_norm": norm_init(d),
+        "lm_head": (d ** -0.5 * jax.random.normal(
+            ks[1], (d, cfg.vocab_pad))).astype(dtype),
+    }
+    if cfg.family == "encdec":
+        params["enc_layers"] = _stack_layers(
+            ks[2], cfg.enc_layers,
+            lambda k: _layer_init(k, cfg, dtype, model_axis=model_axis))
+        params["dec_layers"] = _stack_layers(
+            ks[3], cfg.dec_layers,
+            lambda k: _layer_init(k, cfg, dtype, cross=True,
+                                  model_axis=model_axis))
+        params["enc_norm"] = norm_init(d)
+    else:
+        params["layers"] = _stack_layers(
+            ks[2], cfg.n_layers,
+            lambda k: _layer_init(k, cfg, dtype, model_axis=model_axis))
+    if cfg.family == "vlm":
+        # frontend stub: patch embeddings arrive precomputed; a single
+        # learned projection stands in for the mm-projector
+        params["patch_proj"] = (d ** -0.5 * jax.random.normal(
+            ks[4], (d, d))).astype(dtype)
+    return params
+
+
+# --------------------------------------------------------------- forward
+def _block(layer_p, x, cfg, *, positions, causal, window, enc_out=None):
+    h = x + attention(layer_p["attn"], norm(layer_p["ln_attn"], x), cfg,
+                      positions=positions, causal=causal, window=window)
+    aux = {}
+    if enc_out is not None:
+        h = h + attention(layer_p["cross"], norm(layer_p["ln_cross"], h),
+                          cfg, causal=False, kv_x=enc_out)
+    if cfg.family == "moe":
+        mo, aux = moe_mod.moe_ffn(layer_p["moe"],
+                                  norm(layer_p["ln_ffn"], h), cfg)
+        h = h + mo
+    else:
+        h = h + ffn(layer_p["ffn"], norm(layer_p["ln_ffn"], h))
+    return h, aux
+
+
+def unroll_layers() -> bool:
+    """Analysis mode: python-loop the layer stack instead of lax.scan.
+    XLA's cost analysis counts a while-loop body ONCE, so scanned layers
+    under-report flops/bytes/collectives by n_layers x; the dry-run sets
+    this to get true whole-program numbers (at the cost of HLO size)."""
+    import os
+    return os.environ.get("REPRO_ANALYSIS_UNROLL", "0") == "1"
+
+
+def _scan_blocks(layers_p, x, cfg, *, positions, causal, window,
+                 enc_out=None):
+    block = functools.partial(_block, cfg=cfg, positions=positions,
+                              causal=causal, window=window,
+                              enc_out=enc_out)
+    block = jax.checkpoint(block, policy=remat_policy())
+
+    if unroll_layers():
+        n = jax.tree_util.tree_leaves(layers_p)[0].shape[0]
+        aux = {}
+        for i in range(n):
+            lp = jax.tree_util.tree_map(lambda a: a[i], layers_p)
+            x, aux = block(lp, x)
+        return x, aux
+
+    def body(h, layer_p):
+        h, aux = block(layer_p, h)
+        return h, aux
+
+    x, auxs = jax.lax.scan(body, x, layers_p)
+    aux = jax.tree_util.tree_map(jnp.mean, auxs) if auxs else {}
+    return x, aux
+
+
+def forward(params, cfg, batch):
+    """Training/prefill forward -> logits (B, S, V), aux metrics.
+
+    batch: {"tokens": (B, S)} plus per-family extras:
+      vlm:    {"patches": (B, n_patches, d)}
+      encdec: {"frames": (B, S_enc, d), "tokens": decoder tokens}
+    """
+    dtype = dtype_of(cfg)
+    if cfg.family == "encdec":
+        frames = batch["frames"].astype(dtype)
+        enc = frames
+        pos_e = jnp.arange(frames.shape[1])
+        enc, _ = _scan_blocks(params["enc_layers"], enc, cfg,
+                              positions=pos_e, causal=False, window=None)
+        enc = norm(params["enc_norm"], enc)
+        tok = batch["tokens"]
+        x = params["embed"][tok]
+        pos_d = jnp.arange(tok.shape[1])
+        x, aux = _scan_blocks(params["dec_layers"], x, cfg,
+                              positions=pos_d, causal=True, window=None,
+                              enc_out=enc)
+    else:
+        tok = batch["tokens"]
+        x = params["embed"][tok]
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(dtype) @ params["patch_proj"]
+            x = jnp.concatenate([patches, x], axis=1)
+        pos = jnp.arange(x.shape[1])
+        x, aux = _scan_blocks(params["layers"], x, cfg, positions=pos,
+                              causal=True, window=cfg.window)
+        if cfg.family == "vlm":
+            x = x[:, batch["patches"].shape[1]:]
+    x = norm(params["final_norm"], x)
+    logits = cm_mask_vocab_pad(x @ params["lm_head"], cfg)
+    return logits, aux
+
+
+def loss_fn(params, cfg, batch):
+    logits, aux = forward(params, cfg, {
+        **batch, "tokens": batch["tokens"][:, :-1]})
+    labels = batch["tokens"][:, 1:]
+    loss, metrics = cross_entropy(logits, labels)
+    if "moe_aux" in aux:
+        loss = loss + 0.01 * aux["moe_aux"]
+        metrics["moe_aux"] = aux["moe_aux"]
+    return loss, metrics
+
+
+# ----------------------------------------------------------------- decode
+def kv_quantized() -> bool:
+    """REPRO_KV_QUANT=1: int8 KV cache (+ per-vector f32 scales) —
+    halves the decode HBM stream (§Perf decode lever)."""
+    import os
+    return os.environ.get("REPRO_KV_QUANT", "0") == "1"
+
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    """KV cache pytree: stacked over layers for scan."""
+    dtype = dtype_of(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    s = min(max_len, cfg.window) if cfg.window else max_len
+    n = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+    if kv_quantized():
+        return {
+            "k": jnp.zeros((n, batch_size, kv, s, hd), jnp.int8),
+            "v": jnp.zeros((n, batch_size, kv, s, hd), jnp.int8),
+            "k_scale": jnp.zeros((n, batch_size, kv, s, 1), jnp.float32),
+            "v_scale": jnp.zeros((n, batch_size, kv, s, 1), jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((n, batch_size, kv, s, hd), dtype),
+        "v": jnp.zeros((n, batch_size, kv, s, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg, cache, tokens, enc_out=None):
+    """One decode step. tokens: (B, 1) int32. Returns (logits, cache)."""
+    x = params["embed"][tokens]
+    layers = params["dec_layers"] if cfg.family == "encdec" \
+        else params["layers"]
+    quant = "k_scale" in cache
+
+    def body(h, inp):
+        if quant:
+            layer_p, ck, cv, ks, vs = inp
+            a, ck, cv, ks, vs = attention_decode(
+                layer_p["attn"], norm(layer_p["ln_attn"], h), ck, cv,
+                cache["len"], cfg, window=cfg.window, k_scale=ks,
+                v_scale=vs)
+        else:
+            layer_p, ck, cv = inp
+            a, ck, cv = attention_decode(
+                layer_p["attn"], norm(layer_p["ln_attn"], h), ck, cv,
+                cache["len"], cfg, window=cfg.window)
+        h = h + a
+        if enc_out is not None:
+            h = h + attention(layer_p["cross"],
+                              norm(layer_p["ln_cross"], h), cfg,
+                              causal=False, kv_x=enc_out)
+        if cfg.family == "moe":
+            mo, _ = moe_mod.moe_ffn(layer_p["moe"],
+                                    norm(layer_p["ln_ffn"], h), cfg)
+            h = h + mo
+        else:
+            h = h + ffn(layer_p["ffn"], norm(layer_p["ln_ffn"], h))
+        if quant:
+            return h, (ck, cv, ks, vs)
+        return h, (ck, cv)
+
+    xs = (layers, cache["k"], cache["v"])
+    if quant:
+        xs = xs + (cache["k_scale"], cache["v_scale"])
+    if unroll_layers():
+        n = cache["k"].shape[0]
+        outs = []
+        for i in range(n):
+            inp = jax.tree_util.tree_map(lambda a: a[i], xs)
+            x, out_i = body(x, inp)
+            outs.append(out_i)
+        new = jax.tree_util.tree_map(lambda *z: jnp.stack(z), *outs)
+    else:
+        x, new = jax.lax.scan(body, x, xs)
+    x = norm(params["final_norm"], x)
+    logits = cm_mask_vocab_pad(x @ params["lm_head"], cfg)
+    if quant:
+        cache = {"k": new[0], "v": new[1], "k_scale": new[2],
+                 "v_scale": new[3], "len": cache["len"] + 1}
+    else:
+        cache = {"k": new[0], "v": new[1], "len": cache["len"] + 1}
+    return logits, cache

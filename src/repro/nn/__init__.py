@@ -1,0 +1,12 @@
+"""Minimal functional NN substrate (no flax dependency).
+
+Modules are (init, apply) pairs over plain dict pytrees of jnp arrays.
+"""
+from repro.nn import init as initializers  # noqa: F401
+from repro.nn.layers import (  # noqa: F401
+    dense,
+    dense_init,
+    layer_norm,
+    rms_norm,
+    embed_init,
+)

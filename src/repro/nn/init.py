@@ -1,0 +1,36 @@
+"""Parameter initializers."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def lecun_normal(key, shape, dtype=jnp.float32, fan_in_axis=0):
+    fan_in = shape[fan_in_axis] if isinstance(fan_in_axis, int) else int(
+        math.prod(shape[a] for a in fan_in_axis))
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def glorot_uniform(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], shape[-1]
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def normal(std=0.02):
+    def init(key, shape, dtype=jnp.float32):
+        return std * jax.random.normal(key, shape, dtype)
+    return init
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)

@@ -1,0 +1,50 @@
+"""Core layers: dense, norms, embeddings — functional (params dict in/out)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, use_bias: bool = True,
+               dtype=jnp.float32, init=initializers.lecun_normal):
+    kw, kb = jax.random.split(key)
+    p = {"w": init(kw, (in_dim, out_dim), dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32, std=0.02):
+    return {"embedding": std * jax.random.normal(key, (vocab, dim), dtype)}
+
+
+def layer_norm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * params["scale"] + params["bias"]
+
+
+def rms_norm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    # compute in f32 for stability regardless of activation dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)

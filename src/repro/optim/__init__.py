@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adam,
+    adamw,
+    sgd,
+    clip_by_global_norm,
+    chain,
+    apply_updates,
+)
+from repro.optim.schedules import (  # noqa: F401
+    cosine_schedule,
+    linear_warmup_cosine,
+    constant_schedule,
+)
+from repro.optim.compression import (  # noqa: F401
+    int8_compress,
+    int8_decompress,
+    ErrorFeedbackState,
+    error_feedback_compress,
+)

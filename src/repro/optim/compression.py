@@ -1,0 +1,53 @@
+"""Gradient compression for cross-pod data parallelism.
+
+int8 quantization with per-tensor scale + error feedback (EF-SGD style):
+the quantization residual is carried to the next step so compression is
+unbiased in the long run. Used on the `pod` axis all-reduce where ICI/DCN
+bandwidth is the scarcest resource.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: dict  # pytree matching grads
+
+
+def int8_compress(x: jnp.ndarray):
+    """Quantize to int8 with a per-tensor symmetric scale."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray):
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_compress(grads, ef_state: ErrorFeedbackState):
+    """Quantize grads+residual; return (dequantized grads for the reduce,
+    new residual). The caller all-reduces the dequantized value (numerics
+    identical to reducing int8 then dequantizing with a shared scale,
+    which is what the wire format would do on real DCN links)."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = int8_compress(g32)
+        deq = int8_decompress(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(ef_state.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    deq = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    res = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return deq, ErrorFeedbackState(residual=res)
+
+
+def init_error_feedback(grads_like) -> ErrorFeedbackState:
+    return ErrorFeedbackState(residual=jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))

@@ -1,0 +1,152 @@
+"""Optimizers as (init, update) pairs over arbitrary pytrees (optax-style,
+implemented from scratch — optax is not available offline)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def _tree_zeros_like(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def scale_by_adam(b1=0.9, b2=0.999, eps=1e-8):
+    def init(params):
+        return {"mu": _tree_zeros_like(params), "nu": _tree_zeros_like(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        del params
+        count = state["count"] + 1
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    state["mu"], grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree_util.tree_map(
+            lambda m, v: (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu)
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def scale(factor):
+    def init(params):
+        del params
+        return {}
+
+    def update(grads, state, params=None):
+        del params
+        return jax.tree_util.tree_map(lambda g: factor * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def scale_by_schedule(schedule):
+    def init(params):
+        del params
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        del params
+        count = state["count"] + 1
+        lr = schedule(count)
+        return (jax.tree_util.tree_map(lambda g: -lr * g, grads),
+                {"count": count})
+
+    return Optimizer(init, update)
+
+
+def add_decayed_weights(weight_decay):
+    def init(params):
+        del params
+        return {}
+
+    def update(grads, state, params=None):
+        if weight_decay == 0.0 or params is None:
+            return grads, state
+        upd = jax.tree_util.tree_map(
+            lambda g, p: g + weight_decay * p, grads, params)
+        return upd, state
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm):
+    def init(params):
+        del params
+        return {}
+
+    def update(grads, state, params=None):
+        del params
+        leaves = jax.tree_util.tree_leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in leaves))
+        factor = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+        return jax.tree_util.tree_map(lambda g: g * factor, grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*transforms):
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8):
+    if callable(lr):
+        return chain(scale_by_adam(b1, b2, eps), scale_by_schedule(lr))
+    return chain(scale_by_adam(b1, b2, eps), scale(-lr))
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+          max_grad_norm=None):
+    parts = []
+    if max_grad_norm is not None:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    parts.append(scale_by_adam(b1, b2, eps))
+    parts.append(add_decayed_weights(weight_decay))
+    if callable(lr):
+        parts.append(scale_by_schedule(lr))
+    else:
+        parts.append(scale(-lr))
+    return chain(*parts)
+
+
+def sgd(lr, momentum=0.0):
+    def init(params):
+        if momentum:
+            return {"v": _tree_zeros_like(params)}
+        return {}
+
+    def update(grads, state, params=None):
+        del params
+        if momentum:
+            v = jax.tree_util.tree_map(
+                lambda v, g: momentum * v + g, state["v"], grads)
+            return (jax.tree_util.tree_map(lambda v: -lr * v, v), {"v": v})
+        return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)

@@ -1,0 +1,31 @@
+"""Learning-rate schedules (step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr):
+    def schedule(step):
+        return jnp.asarray(lr, jnp.float32)
+    return schedule
+
+
+def cosine_schedule(peak_lr, total_steps, final_frac=0.1):
+    def schedule(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak_lr * (final_frac + (1 - final_frac) * cos)
+    return schedule
+
+
+def linear_warmup_cosine(peak_lr, warmup_steps, total_steps, final_frac=0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(1.0, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule

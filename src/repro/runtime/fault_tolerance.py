@@ -1,0 +1,120 @@
+"""Fault-tolerance runtime: step retries, straggler detection, restart
+policy.
+
+At 1000+ nodes, failures are routine: the design is (1) deterministic
+data cursor (repro.data.tokens) so any step is reconstructable, (2)
+atomic checkpoints (repro.checkpoint) every N steps, (3) a supervisor
+loop that classifies failures and restarts from the last checkpoint with
+bounded backoff, (4) a straggler monitor that tracks per-step latency
+EWMA and flags hosts whose step time exceeds the p50-derived budget —
+on real fleets the scheduler uses that signal to re-microbatch or evict.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 5
+    backoff_s: float = 1.0
+    backoff_mult: float = 2.0
+    max_backoff_s: float = 60.0
+
+    def delay(self, attempt: int) -> float:
+        return min(self.backoff_s * self.backoff_mult ** attempt,
+                   self.max_backoff_s)
+
+
+class StragglerMonitor:
+    """EWMA step-latency tracker with a multiplicative straggler gate."""
+
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
+                 warmup: int = 3):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup
+        self.ewma: Optional[float] = None
+        self.count = 0
+        self.flags = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = (self.count > self.warmup
+                        and dt > self.threshold * self.ewma)
+        if is_straggler:
+            self.flags.append((step, dt, self.ewma))
+        else:
+            # only non-straggler steps update the baseline
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+    def mitigation(self) -> str:
+        """What a fleet controller would do with the current signal."""
+        if len(self.flags) >= 3:
+            return "rebalance"   # persistent: shrink microbatch / evict
+        if self.flags:
+            return "observe"
+        return "none"
+
+
+def run_with_retries(step_fn: Callable, *, n_steps: int, state,
+                     ckpt_manager=None, policy: RestartPolicy = None,
+                     monitor: StragglerMonitor = None,
+                     fail_injector: Callable = None,
+                     start_step: int = 0, log=None):
+    """Supervised step loop.
+
+    step_fn(step, state) -> state. Exceptions trigger restore from the
+    last checkpoint + bounded-backoff retry; state is checkpointed via
+    ckpt_manager. fail_injector(step) -> Exception|None is the test hook
+    that simulates node failures.
+    """
+    policy = policy or RestartPolicy()
+    monitor = monitor or StragglerMonitor()
+    restarts = 0
+    step = start_step
+    history = {"restarts": 0, "stragglers": 0, "completed": 0}
+
+    while step < n_steps:
+        try:
+            t0 = time.perf_counter()
+            if fail_injector is not None:
+                exc = fail_injector(step)
+                if exc is not None:
+                    raise exc
+            state = step_fn(step, state)
+            dt = time.perf_counter() - t0
+            if monitor.record(step, dt):
+                history["stragglers"] += 1
+                if log:
+                    log(f"step {step}: straggler ({dt:.3f}s, "
+                        f"ewma {monitor.ewma:.3f}s) -> "
+                        f"{monitor.mitigation()}")
+            if ckpt_manager is not None:
+                ckpt_manager.maybe_save(step, state)
+            step += 1
+            history["completed"] += 1
+        except Exception as e:  # noqa: BLE001 — supervisor boundary
+            restarts += 1
+            history["restarts"] = restarts
+            if restarts > policy.max_restarts:
+                raise RuntimeError(
+                    f"exceeded max_restarts={policy.max_restarts}") from e
+            delay = policy.delay(restarts - 1)
+            if log:
+                log(f"step {step}: {type(e).__name__}: {e} -> restart "
+                    f"#{restarts} after {delay:.1f}s")
+            time.sleep(min(delay, 0.05))  # clamped for tests
+            if ckpt_manager is not None:
+                restored = ckpt_manager.restore_latest(state)
+                if restored[0] is not None:
+                    step_restored, state = restored
+                    step = step_restored + 1
+    return state, history

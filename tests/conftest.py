@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests must see the default single CPU device (the dry-run alone uses
+# the 512-device flag); also keep compile caches warm across tests
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,73 @@
+"""Data pipeline: determinism, host sharding, matrix generators."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (TokenPipeline, delaunay_like, fem_like, grid_2d,
+                        grid_3d, make_test_set, make_training_set)
+from repro.core.graph import symmetrize_pattern
+
+
+def test_token_pipeline_deterministic():
+    p1 = TokenPipeline(vocab=1000, seq_len=32, global_batch=4, seed=7)
+    p2 = TokenPipeline(vocab=1000, seq_len=32, global_batch=4, seed=7)
+    np.testing.assert_array_equal(p1.batch(5)["tokens"],
+                                  p2.batch(5)["tokens"])
+    assert not np.array_equal(p1.batch(5)["tokens"],
+                              p1.batch(6)["tokens"])
+
+
+def test_token_pipeline_host_sharding_disjoint():
+    full = TokenPipeline(vocab=500, seq_len=16, global_batch=8, seed=3)
+    h0 = TokenPipeline(vocab=500, seq_len=16, global_batch=8, seed=3,
+                       num_hosts=2, host_id=0)
+    h1 = TokenPipeline(vocab=500, seq_len=16, global_batch=8, seed=3,
+                       num_hosts=2, host_id=1)
+    assert h0.local_batch == 4 and h1.local_batch == 4
+    b0, b1 = h0.batch(0)["tokens"], h1.batch(0)["tokens"]
+    assert not np.array_equal(b0, b1)
+    del full
+
+
+@pytest.mark.parametrize("gen,args", [
+    (grid_2d, (10,)), (grid_3d, (5,)),
+    (delaunay_like, (150, "gradel")), (delaunay_like, (150, "hole3")),
+    (fem_like, (150, "hole6")),
+])
+def test_generators_produce_spd(gen, args):
+    A = gen(*args, seed=0)
+    assert (abs(A - A.T) > 1e-12).nnz == 0  # symmetric
+    # diagonally dominant => SPD
+    d = A.diagonal()
+    off = np.asarray(abs(A).sum(axis=1)).ravel() - abs(d)
+    assert (d > off - 1e-9).all()
+    # and factorizable without pivoting trouble
+    import scipy.sparse.linalg as spla
+    lu = spla.splu(A.tocsc(), permc_spec="NATURAL",
+                   options=dict(SymmetricMode=True))
+    assert lu.L.nnz > 0
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_delaunay_connected(seed):
+    A = delaunay_like(100, "gradel", seed=seed)
+    from scipy.sparse.csgraph import connected_components
+    n, _ = connected_components(symmetrize_pattern(A), directed=False)
+    assert n == 1
+
+
+def test_training_set_mix_and_sizes():
+    ts = make_training_set(n_matrices=8, n_min=100, n_max=300, seed=0)
+    assert len(ts) == 8
+    kinds = {name.split("-")[0] for name, _ in ts}
+    assert {"grid2d", "grid3d", "delaunay", "fem"} <= kinds
+    for _, A in ts:
+        assert 50 <= A.shape[0] <= 400
+
+
+def test_test_set_categories():
+    cases = make_test_set()
+    cats = {c for c, _ in cases}
+    assert {"2D3D", "SP", "CFD", "TP", "MRP", "Other"} <= cats

@@ -1,0 +1,150 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret
+mode on CPU) + hypothesis property tests on kernel invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.prox_tril import prox_tril_pallas
+from repro.kernels.sinkhorn import sinkhorn_pallas
+from repro.kernels.spmm import bcsr_ell_pack, spmm_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- sinkhorn
+@pytest.mark.parametrize("n", [128, 256, 512])
+@pytest.mark.parametrize("iters", [1, 5, 20])
+def test_sinkhorn_matches_ref(n, iters):
+    x = 3.0 * jax.random.normal(jax.random.fold_in(KEY, n + iters),
+                                (n, n))
+    out = sinkhorn_pallas(x, iters, interpret=True)
+    expect = ref.sinkhorn_ref(x, iters)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sinkhorn_doubly_stochastic():
+    x = jax.random.normal(KEY, (128, 128)) * 2.0
+    p = jnp.exp(sinkhorn_pallas(x, 40, interpret=True))
+    np.testing.assert_allclose(np.asarray(p.sum(0)), 1.0, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(p.sum(1)), 1.0, atol=1e-3)
+
+
+def test_sinkhorn_grad_matches_ref():
+    x = jax.random.normal(KEY, (128, 128))
+    g1 = jax.grad(lambda a: jnp.sum(jnp.tanh(ops.sinkhorn(a, 5))))(x)
+    g2 = jax.grad(lambda a: jnp.sum(jnp.tanh(ref.sinkhorn_ref(a, 5))))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------- prox_tril
+@pytest.mark.parametrize("n", [128, 256, 512])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_prox_tril_matches_ref(n, dtype):
+    L = jax.random.normal(KEY, (n, n), dtype)
+    G = jax.random.normal(jax.random.fold_in(KEY, 1), (n, n), dtype)
+    out = prox_tril_pallas(L, G, 0.02, 0.01, interpret=True)
+    expect = ref.prox_tril_ref(L, G, 0.02, 0.01)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(eta=st.floats(1e-4, 0.5), thresh=st.floats(1e-4, 0.5))
+def test_prox_tril_properties(eta, thresh):
+    """Output is lower-triangular and soft-thresholding shrinks."""
+    L = jax.random.normal(KEY, (128, 128))
+    G = jax.random.normal(jax.random.fold_in(KEY, 2), (128, 128))
+    out = np.asarray(prox_tril_pallas(L, G, eta, thresh, interpret=True))
+    assert np.allclose(out, np.tril(out))
+    raw = np.asarray(L - eta * G)
+    assert (np.abs(out) <= np.maximum(np.abs(raw) - thresh, 0)
+            + 1e-5).all()
+
+
+# --------------------------------------------------------------- attention
+@pytest.mark.parametrize("sq,sk", [(128, 128), (256, 512), (512, 256)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(sq, sk, hq, hkv, dtype):
+    if sk < sq:
+        return  # decode-style offset requires sk >= sq
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (2, hq, sq, 64), dtype)
+    k = jax.random.normal(k2, (2, hkv, sk, 64), dtype)
+    v = jax.random.normal(k3, (2, hkv, sk, 64), dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=128,
+                                 block_k=128, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_sliding_window(window):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, 2, 256, 32))
+    k = jax.random.normal(k2, (1, 2, 256, 32))
+    v = jax.random.normal(k3, (1, 2, 256, 32))
+    out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_matches_ref():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (2, 4, 256, 32))
+    k = jax.random.normal(k2, (2, 2, 256, 32))
+    v = jax.random.normal(k3, (2, 2, 256, 32))
+    out = ref.attention_chunked(q, k, v, causal=True, block_q=64)
+    expect = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_backward_matches_ref():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, 4, 128, 32))
+    k = jax.random.normal(k2, (1, 2, 128, 32))
+    v = jax.random.normal(k3, (1, 2, 128, 32))
+
+    def f_kernel(q, k, v):
+        return jnp.sum(jnp.square(ops.flash_attention(q, k, v)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.square(ref.attention_ref(q, k, v)))
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+# -------------------------------------------------------------------- spmm
+@pytest.mark.parametrize("n,density", [(256, 0.02), (300, 0.05),
+                                       (512, 0.01)])
+def test_spmm_matches_dense(n, density):
+    A = sp.random(n, n, density=density, random_state=n, format="csr")
+    vals, cids, nbc = bcsr_ell_pack(A, bs=128)
+    x = np.random.default_rng(0).normal(
+        size=(nbc * 128, 128)).astype(np.float32)
+    out = spmm_pallas(vals, cids, jnp.asarray(x), interpret=True)
+    expect = ref.spmm_ref(vals, cids, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+    nbr = -(-n // 128)
+    dense = np.zeros((nbr * 128, nbc * 128), np.float32)
+    dense[:n, :n] = A.toarray()
+    np.testing.assert_allclose(np.asarray(out), dense @ x,
+                               rtol=1e-4, atol=1e-4)

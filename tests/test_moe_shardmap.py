@@ -1,0 +1,48 @@
+"""shard_map EP dispatch == single-device dispatch (numerics), verified
+in a subprocess with 8 host devices (2 data x 4 model mesh)."""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+
+def test_shard_map_moe_matches_gspmd():
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        os.environ["REPRO_MOE_IMPL"] = "shard_map"
+        import sys
+        sys.path.insert(0, {str(pathlib.Path("src").resolve())!r})
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models import moe as moe_mod
+        from repro.models.registry import get_config, smoke_config
+
+        cfg = smoke_config(get_config("llama4-scout-17b-a16e"))
+        # ample capacity so neither path drops tokens
+        cfg = dataclasses.replace(cfg, capacity_factor=4.0)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        params = moe_mod.moe_init(key, cfg, jnp.float32, model_axis=4)
+        # 2 batch x 8 seq so seq splits over model=4
+        x = jax.random.normal(jax.random.fold_in(key, 1),
+                              (2, 8, cfg.d_model))
+
+        # reference: plain (no mesh) GSPMD path
+        moe_mod.set_dist_mesh(None)
+        ref, _ = jax.jit(lambda p, x: moe_mod.moe_ffn(p, x, cfg))(
+            params, x)
+
+        # shard_map path under the mesh
+        moe_mod.set_dist_mesh(mesh)
+        with mesh:
+            out, aux = jax.jit(
+                lambda p, x: moe_mod.moe_ffn(p, x, cfg))(params, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+        print("SHARDMAP_MOE_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=420)
+    assert "SHARDMAP_MOE_OK" in res.stdout, res.stderr[-3000:]

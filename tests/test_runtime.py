@@ -1,0 +1,76 @@
+"""Fault-tolerance runtime: retry/restore loop, straggler detection."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime import RestartPolicy, StragglerMonitor, run_with_retries
+
+
+def test_runs_to_completion_without_failures():
+    state, hist = run_with_retries(lambda step, s: s + 1, n_steps=10,
+                                   state=0)
+    assert state == 10
+    assert hist["restarts"] == 0
+    assert hist["completed"] == 10
+
+
+def test_recovers_from_injected_failures(tmp_path):
+    """Nodes 'die' at steps 3 and 7; the loop restores from checkpoint
+    and finishes with the correct final state."""
+    mgr = CheckpointManager(tmp_path, interval=2)
+    fired = set()
+
+    def injector(step):
+        if step in (3, 7) and step not in fired:
+            fired.add(step)
+            return RuntimeError(f"simulated node failure at {step}")
+        return None
+
+    def step_fn(step, state):
+        # state counts steps deterministically: resume must not double-
+        # count (np scalar keeps checkpoint happy)
+        return {"steps": state["steps"] + 1}
+
+    state, hist = run_with_retries(
+        step_fn, n_steps=10, state={"steps": np.asarray(0)},
+        ckpt_manager=mgr, fail_injector=injector,
+        policy=RestartPolicy(max_restarts=5))
+    assert hist["restarts"] == 2
+    assert hist["completed"] >= 10
+
+
+def test_gives_up_after_max_restarts(tmp_path):
+    def injector(step):
+        return RuntimeError("always fails")
+
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        run_with_retries(lambda s, st: st, n_steps=3, state=0,
+                         fail_injector=injector,
+                         policy=RestartPolicy(max_restarts=2))
+
+
+def test_straggler_monitor_flags_slow_steps():
+    mon = StragglerMonitor(threshold=2.0, warmup=2)
+    for step in range(10):
+        mon.record(step, 0.1)
+    assert mon.record(10, 0.5)  # 5x the ewma -> straggler
+    assert mon.flags
+    assert mon.mitigation() in ("observe", "rebalance")
+
+
+def test_straggler_does_not_poison_baseline():
+    mon = StragglerMonitor(threshold=2.0, warmup=1)
+    for step in range(5):
+        mon.record(step, 0.1)
+    ewma_before = mon.ewma
+    mon.record(5, 10.0)  # extreme straggler
+    assert mon.ewma == ewma_before  # baseline unchanged
+
+
+def test_restart_policy_backoff_bounded():
+    pol = RestartPolicy(backoff_s=1.0, backoff_mult=3.0, max_backoff_s=5.0)
+    assert pol.delay(0) == 1.0
+    assert pol.delay(1) == 3.0
+    assert pol.delay(5) == 5.0
