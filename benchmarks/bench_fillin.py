@@ -79,6 +79,51 @@ def load_trained_pfm() -> PFM | None:
     return pfm
 
 
+def fit_throughput(quick: bool = False):
+    """Sequential vs bucketed PFM.fit epoch wall-clock (DESIGN.md §2).
+
+    Trains the same matrix set twice — batched=False (one
+    admm_train_matrix call per matrix) vs the default bucketed path (one
+    admm_train_batch call per shape bucket) — and compares the
+    steady-state epoch wall-clock (epoch 0 absorbs compilation; epoch 1
+    is measured from the recorded per-matrix wall_s)."""
+    from repro.data import delaunay_like
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=8)
+    reps = 3 if quick else 5
+    rows = []
+    for B in (1, 8) if quick else (1, 8, 32):
+        # interleave the two modes and take the min epoch over reps:
+        # host timing noise (shared container CPU) then hits both paths
+        # alike instead of biasing whichever ran in the noisy window
+        pfms = {"sequential": PFM(cfg, seed=0, x_mode="random"),
+                "bucketed": PFM(cfg, seed=0, x_mode="random")}
+        prep = pfms["sequential"]
+        mats = [prep.prepare(delaunay_like(100 + 3 * (i % 8), "gradel",
+                                           seed=i), f"m{i}")
+                for i in range(B)]  # prep once, outside the timed loop
+        epoch_s = {m: [] for m in pfms}
+        for rep in range(reps + 1):  # rep 0 absorbs compilation
+            for mode, pfm in pfms.items():
+                pfm.history.clear()
+                pfm.fit(mats, epochs=1, batched=(mode == "bucketed"))
+                if rep > 0:
+                    epoch_s[mode].append(
+                        sum(r["wall_s"] for r in pfm.history))
+        epoch_s = {m: min(v) for m, v in epoch_s.items()}
+        rows.append({
+            "B": B,
+            "sequential_epoch_s": epoch_s["sequential"],
+            "bucketed_epoch_s": epoch_s["bucketed"],
+            "speedup": epoch_s["sequential"] / epoch_s["bucketed"],
+        })
+        print(f"fit B={B}: seq={epoch_s['sequential'] * 1e3:.1f}ms "
+              f"bucketed={epoch_s['bucketed'] * 1e3:.1f}ms "
+              f"speedup={rows[-1]['speedup']:.2f}x")
+    OUT.mkdir(exist_ok=True)
+    (OUT / "fit_throughput.json").write_text(json.dumps(rows, indent=2))
+    return rows
+
+
 def run(pfm: PFM | None = None, quick: bool = False):
     cases = make_test_set()
     if quick:
@@ -106,6 +151,7 @@ def run(pfm: PFM | None = None, quick: bool = False):
 
 
 def main(quick=False):
+    tp = fit_throughput(quick=quick)
     rows = run(quick=quick)
     cats = [k for k in rows[0] if k not in ("method",)
             and not k.endswith("_ms")]
@@ -114,7 +160,7 @@ def main(quick=False):
         print(r["method"] + "," + ",".join(
             f"{r[c]:.2f}" for c in cats)
             + f",{r['All_lu_ms']:.1f},{r['All_order_ms']:.1f}")
-    return rows
+    return {"table2": rows, "fit_throughput": tp}
 
 
 if __name__ == "__main__":

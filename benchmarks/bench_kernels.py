@@ -43,6 +43,33 @@ def run():
     rows.append(("attention_chunked_1k", dt_c * 1e6,
                  f"speedup={dt_n / dt_c:.2f}x"))
 
+    # batched sinkhorn / prox_tril throughput: one (B, n, n) call vs B
+    # sequential (n, n) calls (the bucketed-training dispatch win; XLA
+    # reference path — kernel-path numbers come from the TPU roofline)
+    for n in (256, 512):
+        sink1 = jax.jit(lambda a: ref.sinkhorn_ref(a, 20))
+        sinkb = jax.jit(lambda a: ref.sinkhorn_ref(a, 20))
+        prox1 = jax.jit(lambda l, g: ref.prox_tril_ref(l, g, 0.01, 0.01))
+        proxb = jax.jit(lambda l, g, e, t: ref.prox_tril_ref(l, g, e, t))
+        for B in (1, 8, 32):
+            xb = jax.random.normal(jax.random.fold_in(KEY, n + B),
+                                   (B, n, n))
+            _, dt_seq = timed(lambda: [sink1(xb[i]).block_until_ready()
+                                       for i in range(B)])
+            _, dt_bat = timed(lambda: sinkb(xb).block_until_ready())
+            rows.append((f"sinkhorn_b{B}_{n}", dt_bat * 1e6,
+                         f"vs_seq={dt_seq / dt_bat:.2f}x"))
+            gb = jax.random.normal(jax.random.fold_in(KEY, n + B + 1),
+                                   (B, n, n))
+            eta = jnp.full((B,), 0.01)
+            _, dt_seq = timed(lambda: [prox1(xb[i], gb[i])
+                                       .block_until_ready()
+                                       for i in range(B)])
+            _, dt_bat = timed(lambda: proxb(xb, gb, eta, eta)
+                              .block_until_ready())
+            rows.append((f"prox_tril_b{B}_{n}", dt_bat * 1e6,
+                         f"vs_seq={dt_seq / dt_bat:.2f}x"))
+
     # spmm vs dense matmul
     import scipy.sparse as sp
     import numpy as np

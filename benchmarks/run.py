@@ -2,12 +2,18 @@
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 
-Emits per-table CSV blocks and writes JSON artifacts to experiments/.
+Emits per-table CSV blocks and writes JSON artifacts to experiments/ —
+including a combined experiments/bench_results.json so the perf
+trajectory across PRs is recorded in one machine-readable place.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
 
 
 def main() -> None:
@@ -33,16 +39,26 @@ def main() -> None:
     if args.only in (None, "roofline"):
         benches.append(("Roofline (from dry-run)", "roofline", {}))
 
+    results = {}
     for title, mod_name, kw in benches:
         print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
         t0 = time.perf_counter()
         mod = __import__(f"benchmarks.{mod_name}",
                          fromlist=["main"])
         try:
-            mod.main(**kw)
+            out = mod.main(**kw)
         except TypeError:
-            mod.main()
-        print(f"-- {title}: {time.perf_counter() - t0:.1f}s")
+            out = mod.main()
+        wall = time.perf_counter() - t0
+        results[mod_name] = {"wall_s": wall, "result": out}
+        print(f"-- {title}: {wall:.1f}s")
+
+    OUT.mkdir(exist_ok=True)
+    path = OUT / "bench_results.json"
+    path.write_text(json.dumps(
+        {"time": time.time(), "quick": args.quick, "results": results},
+        indent=2, default=str))
+    print(f"\nwrote {path}")
 
 
 if __name__ == "__main__":

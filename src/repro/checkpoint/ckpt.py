@@ -1,4 +1,6 @@
-"""Sharded, atomic, mesh-elastic checkpointing (msgpack + zstd).
+"""Sharded, atomic, mesh-elastic checkpointing (msgpack + zstd, with a
+stdlib-zlib fallback codec when zstandard is not installed; the codec is
+recorded in the meta sidecar so restores are codec-exact).
 
 Production posture:
   * ATOMIC two-phase commit: write to step_<n>.tmp/, fsync, rename.
@@ -27,7 +29,32 @@ from typing import Any
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd is the preferred codec but optional: clean environments
+    import zstandard  # (e.g. CI) fall back to stdlib zlib transparently
+except ImportError:  # pragma: no cover - exercised in zstd-less envs
+    zstandard = None
+
+
+def _compressor():
+    """Returns (codec_name, compress_fn) for the best available codec."""
+    if zstandard is not None:
+        cctx = zstandard.ZstdCompressor(level=3)
+        return "zstd", cctx.compress
+    return "zlib", lambda raw: zlib.compress(raw, 3)
+
+
+def _decompressor(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with the zstd codec but the "
+                "'zstandard' package is not installed; pip install "
+                "zstandard to restore it")
+        return zstandard.ZstdDecompressor().decompress
+    if codec == "zlib":
+        return zlib.decompress
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(tree):
@@ -55,13 +82,13 @@ def save_checkpoint(ckpt_dir, step: int, tree, metadata: dict | None = None,
     tmp.mkdir()
 
     flat, _ = _flatten(tree)
-    cctx = zstandard.ZstdCompressor(level=3)
+    codec, compress = _compressor()
     index = {}
     with open(tmp / "data.bin", "wb") as f:
         for key, leaf in flat.items():
             arr = np.asarray(jax.device_get(leaf))
             raw = arr.tobytes()
-            comp = cctx.compress(raw)
+            comp = compress(raw)
             off = f.tell()
             f.write(comp)
             index[key] = {
@@ -72,7 +99,7 @@ def save_checkpoint(ckpt_dir, step: int, tree, metadata: dict | None = None,
         f.flush()
         os.fsync(f.fileno())
     meta = {"step": step, "time": time.time(), "index": index,
-            "user": metadata or {}}
+            "codec": codec, "user": metadata or {}}
     with open(tmp / "meta.json", "w") as f:
         json.dump(meta, f)
         f.flush()
@@ -109,7 +136,8 @@ def restore_checkpoint(ckpt_dir, step: int, target_tree,
     final = ckpt_dir / f"step_{step:010d}"
     meta = json.loads((final / "meta.json").read_text())
     index = meta["index"]
-    dctx = zstandard.ZstdDecompressor()
+    # older checkpoints predate the codec field and are always zstd
+    decompress = _decompressor(meta.get("codec", "zstd"))
 
     flat_target, treedef = _flatten(target_tree)
     flat_shard = None
@@ -121,7 +149,7 @@ def restore_checkpoint(ckpt_dir, step: int, target_tree,
         for key, spec in flat_target.items():
             ent = index[key]
             f.seek(ent["offset"])
-            raw = dctx.decompress(f.read(ent["nbytes"]))
+            raw = decompress(f.read(ent["nbytes"]))
             assert zlib.crc32(raw) & 0xFFFFFFFF == ent["crc32"], \
                 f"checksum mismatch for {key}"
             arr = np.frombuffer(raw, dtype=ent["dtype"]).reshape(

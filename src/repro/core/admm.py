@@ -30,6 +30,7 @@ from repro.core import encoder as enc
 from repro.core import reorder
 from repro.core.reorder import _ndtr
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.optim import apply_updates
 
 
@@ -57,15 +58,18 @@ class PFMConfig(NamedTuple):
 
 
 def _mm(a, b, cfg: "PFMConfig"):
-    """n^3 matmul honouring the matmul_dtype lever (f32 accumulation)."""
+    """n^3 matmul honouring the matmul_dtype lever (f32 accumulation).
+    jnp.matmul (not jnp.dot): leading batch dims must broadcast, and for
+    2-D operands the two are identical."""
     if cfg.matmul_dtype == "bf16":
-        return jnp.dot(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
-                       preferred_element_type=jnp.float32)
+        return jnp.matmul(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+                          preferred_element_type=jnp.float32)
     return a @ b
 
 
 def reordered(P, A, cfg: "PFMConfig"):
-    return _mm(_mm(P, A, cfg), P.T, cfg)
+    """P A P^T; batch-generic (leading dims broadcast through matmul)."""
+    return _mm(_mm(P, A, cfg), jnp.swapaxes(P, -1, -2), cfg)
 
 
 def smooth_terms(L, P, A, Gamma, rho, cfg: "PFMConfig" = PFMConfig(),
@@ -77,6 +81,33 @@ def smooth_terms(L, P, A, Gamma, rho, cfg: "PFMConfig" = PFMConfig(),
         M = reordered(P, A, cfg)
     R = M - _mm(L, L.T, cfg)
     return jnp.sum(Gamma * R) + 0.5 * rho * jnp.sum(R * R)
+
+
+def _lipschitz_step(L, A, n, cfg: "PFMConfig"):
+    """Lipschitz-scaled step: curvature of the l2 term grows with
+    ||L||^2 and ||M||, so scale eta down accordingly (keeps the
+    fixed-eta prox stable at any n). Shared by the sequential and
+    batched trainers."""
+    lip = 1.0 + cfg.rho * (2.0 * jnp.sum(L * L) / n
+                           + jnp.sqrt(jnp.sum(A * A)))
+    return cfg.eta / lip
+
+
+def _warm_start_L(M0, k_L, n):
+    """L0 = chol(diag(M0)) + small sub-diagonal noise — the paper's
+    tril(randn) init diverges under the quartic l2 term at n>=128, see
+    DESIGN.md §6; the diagonal warm start preserves the algorithm while
+    keeping the smooth term in its stable basin."""
+    L0 = jnp.diag(jnp.sqrt(jnp.maximum(jnp.diag(M0), 1e-3)))
+    return L0 + 1e-3 * jnp.tril(jax.random.normal(k_L, (n, n)), -1)
+
+
+def _prox_step(L, gL, t, cfg: "PFMConfig"):
+    """One L-update: fused Pallas prox/tril kernel, or its oracle when
+    kernels are disabled. Batch-generic (t may be a (B,) vector)."""
+    if cfg.use_kernels:
+        return kops.prox_tril(L, gL, t, t)
+    return kref.prox_tril_ref(L, gL, t, t)
 
 
 def predict_scores(params, cfg: PFMConfig, levels, x_g):
@@ -117,13 +148,8 @@ def admm_train_matrix(params, opt_state, A, levels_tuple, x_g, node_mask,
         y0, k_init, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
         node_mask=node_mask, noise_scale=cfg.noise_scale,
         use_kernel=cfg.use_kernels)
-    # Warm-start: L0 = chol(diag(M)), Gamma0 = 0 — the paper's
-    # tril(randn) init diverges under the quartic l2 term at n>=128, see
-    # DESIGN.md §6; the diagonal warm start preserves the algorithm while
-    # keeping the smooth term in its stable basin.
     M0 = reordered(P0, A, cfg)
-    L0 = jnp.diag(jnp.sqrt(jnp.maximum(jnp.diag(M0), 1e-3)))
-    L0 = L0 + 1e-3 * jnp.tril(jax.random.normal(k_L, (n, n)), -1)
+    L0 = _warm_start_L(M0, k_L, n)   # Gamma0 = 0 (DESIGN.md §6)
     G0 = jnp.zeros((n, n))
     from repro.distributed.constrain import constrain, pfm_2d
     if pfm_2d():
@@ -133,14 +159,6 @@ def admm_train_matrix(params, opt_state, A, levels_tuple, x_g, node_mask,
 
     grad_L = jax.grad(smooth_terms, argnums=0)
     grad_theta = jax.grad(_theta_loss, argnums=0, has_aux=True)
-
-    def _step_size(L, A):
-        """Lipschitz-scaled step: curvature of the l2 term grows with
-        ||L||^2 and ||M||, so scale eta down accordingly (keeps the
-        fixed-eta prox stable at any n)."""
-        lip = 1.0 + cfg.rho * (2.0 * jnp.sum(L * L) / n
-                               + jnp.sqrt(jnp.sum(A * A)))
-        return cfg.eta / lip
 
     def body(k, carry):
         L, Gamma, P, M, params, opt_state = carry
@@ -152,12 +170,7 @@ def admm_train_matrix(params, opt_state, A, levels_tuple, x_g, node_mask,
         # here, so reusing the value is exact (§Perf lever 6).
         gL = grad_L(L, P, A, Gamma, cfg.rho, cfg,
                     M if cfg.reuse_m else None)
-        t = _step_size(L, A)
-        if cfg.use_kernels:
-            L = kops.prox_tril(L, gL, t, t)
-        else:
-            X = L - t * gL
-            L = jnp.tril(jnp.sign(X) * jnp.maximum(jnp.abs(X) - t, 0.0))
+        L = _prox_step(L, gL, _lipschitz_step(L, A, n, cfg), cfg)
 
         # ---- theta-update: one Adam step (lines 14-15)
         gT, _ = grad_theta(params, cfg, levels, x_g, node_mask, A, L,
@@ -188,6 +201,133 @@ def admm_train_matrix(params, opt_state, A, levels_tuple, x_g, node_mask,
                 + 0.5 * cfg.rho * jnp.sum(R * R),
     }
     return params, opt_state, metrics
+
+
+# ------------------------------ bucketed batch training (DESIGN.md §2) --
+def _predict_scores_batch(params, cfg: PFMConfig, levels, x_g):
+    """levels: list of level dicts whose leaves carry a leading batch
+    axis; x_g: (B, n_pad, in_dim). Shared params, vmapped graph."""
+    return jax.vmap(lambda lv, x: predict_scores(params, cfg, lv, x))(
+        levels, x_g)
+
+
+def _theta_loss_batch(params, cfg: PFMConfig, levels, x_g, node_mask, A,
+                      L, Gamma, keys):
+    """Sum of per-matrix augmented-Lagrangian smooth terms over the
+    bucket — grads w.r.t. the shared params accumulate across the batch
+    (one Adam step per ADMM iteration for the whole bucket)."""
+    y = _predict_scores_batch(params, cfg, levels, x_g)
+    P = reorder.soft_permutation_batch(
+        y, keys, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
+        node_mask=node_mask, noise_scale=cfg.noise_scale,
+        use_kernel=cfg.use_kernels)
+    M = reordered(P, A, cfg)
+    losses = jax.vmap(
+        lambda l, p, a, g, m: smooth_terms(l, p, a, g, cfg.rho, cfg, M=m)
+    )(L, P, A, Gamma, M)
+    return jnp.sum(losses), (P, M)
+
+
+def _admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
+                      keys, *, cfg: PFMConfig, opt):
+    """Batched Algorithm 1 inner loop over a shape bucket.
+
+    A: (B, n, n) stacked padded matrices; levels_tuple: stacked hierarchy
+    (graph.stack_hierarchies); x_g: (B, n, in_dim); node_mask: (B, n);
+    keys: (B, 2) stacked PRNG keys (one per matrix, matching the keys the
+    sequential path would use).
+
+    The whole (L, Gamma, P, M) state carries a leading batch dim through
+    one lax.fori_loop; per-matrix L/Gamma/dual updates are independent
+    (vmapped / batched kernels), while the theta-update accumulates
+    gradients across the bucket into ONE shared Adam step per ADMM
+    iteration. Relative to the sequential path this changes only the
+    gradient-accumulation order of the theta steps (B Adam steps with
+    per-matrix grads -> 1 Adam step with summed grads); with a frozen
+    encoder (lr=0) the two paths are numerically identical per matrix.
+
+    Returns (params, opt_state, metrics) with per-matrix (B,) metric
+    vectors."""
+    levels = list(levels_tuple)
+    n = A.shape[-1]
+
+    ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+    k_init, k_L, k_loop = ks[:, 0], ks[:, 1], ks[:, 2]
+
+    y0 = _predict_scores_batch(params, cfg, levels, x_g)
+    P0 = reorder.soft_permutation_batch(
+        y0, k_init, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
+        node_mask=node_mask, noise_scale=cfg.noise_scale,
+        use_kernel=cfg.use_kernels)
+    M0 = reordered(P0, A, cfg)
+    L0 = jax.vmap(lambda m0, kl: _warm_start_L(m0, kl, n))(M0, k_L)
+    G0 = jnp.zeros_like(M0)
+
+    grad_L = jax.grad(smooth_terms, argnums=0)
+    grad_theta = jax.grad(_theta_loss_batch, argnums=0, has_aux=True)
+
+    def body(k, carry):
+        L, Gamma, P, M, params, opt_state = carry
+        kk = jax.vmap(lambda c: jax.random.fold_in(c, k))(k_loop)
+
+        # ---- L-update: per-matrix grad, ONE batched prox/tril launch
+        gL = jax.vmap(
+            lambda l, p, a, g, m: grad_L(l, p, a, g, cfg.rho, cfg,
+                                         m if cfg.reuse_m else None)
+        )(L, P, A, Gamma, M)
+        t = jax.vmap(lambda l, a: _lipschitz_step(l, a, n, cfg))(L, A)
+        L = _prox_step(L, gL, t, cfg)                        # t: (B,)
+
+        # ---- theta-update: grads summed over the bucket, one Adam step
+        gT, _ = grad_theta(params, cfg, levels, x_g, node_mask, A, L,
+                           Gamma, kk)
+        updates, opt_state = opt.update(gT, opt_state, params)
+        params = apply_updates(params, updates)
+
+        # ---- recompute scores / permutations with the stepped params
+        y = _predict_scores_batch(params, cfg, levels, x_g)
+        kk1 = jax.vmap(lambda c: jax.random.fold_in(c, 1))(kk)
+        P = reorder.soft_permutation_batch(
+            y, kk1, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
+            node_mask=node_mask, noise_scale=cfg.noise_scale,
+            use_kernel=cfg.use_kernels)
+        M = reordered(P, A, cfg)
+
+        # ---- dual update — shares M with the carry
+        Gamma = Gamma + cfg.rho * (M - _mm(L, jnp.swapaxes(L, -1, -2),
+                                           cfg))
+        return (L, Gamma, P, M, params, opt_state)
+
+    L, Gamma, P, M, params, opt_state = jax.lax.fori_loop(
+        0, cfg.n_admm, body, (L0, G0, P0, M0, params, opt_state))
+
+    # final metrics in plain f32 (matching the sequential path, which
+    # ignores the matmul_dtype lever for reporting)
+    R = M - L @ jnp.swapaxes(L, -1, -2)
+    l1 = jnp.sum(jnp.abs(L), axis=(-2, -1))
+    dual = jnp.sum(Gamma * R, axis=(-2, -1))
+    rr = jnp.sum(R * R, axis=(-2, -1))
+    metrics = {
+        "l1": l1,
+        "residual": jnp.sqrt(rr),
+        "loss": l1 + dual + 0.5 * cfg.rho * rr,
+    }
+    return params, opt_state, metrics
+
+
+@functools.lru_cache(maxsize=64)
+def _batch_trainer(cfg: PFMConfig, opt):
+    """Compile cache: one jitted trainer per (cfg, opt); jax.jit then
+    caches one XLA program per bucket signature (B, n, hierarchy shapes)
+    underneath it, so revisiting a bucket never retraces."""
+    return jax.jit(functools.partial(_admm_train_batch, cfg=cfg, opt=opt))
+
+
+def admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
+                     keys, *, cfg: PFMConfig, opt):
+    """Public batched entry point (see _admm_train_batch)."""
+    return _batch_trainer(cfg, opt)(params, opt_state, A, levels_tuple,
+                                    x_g, node_mask, keys)
 
 
 # ------------------------- alternative losses (ablation baselines) ------

@@ -58,6 +58,62 @@ class GraphData:
         )
 
 
+def stack_hierarchies(levels_list):
+    """Stack per-matrix `GraphData.as_jnp()` hierarchies into one bucket
+    pytree with a leading batch axis on every leaf (DESIGN.md §2).
+
+    Requirements: equal depth and equal finest-level node pad (the
+    bucketing key in PFM.fit). Within a bucket, per-level edge buckets
+    and coarse node pads may differ (pow2 of per-matrix counts); each is
+    padded to the bucket max first:
+      * extra edge slots point at the dummy node (new node pad - 1) with
+        mask 0 — the same convention build_hierarchy uses, so masked
+        aggregation is unchanged;
+      * extra fine-node cluster slots map to a freshly allocated dummy
+        coarse slot (the coarse pad is grown by one whenever any member
+        gains cluster slots), which by construction is a real cluster
+        for NO member — unlike reusing `coarse pad - 1`, which is a real
+        cluster for a member whose coarse count exactly fills its pow2
+        pad. Pooling at real coarse nodes is therefore bit-identical to
+        the unbatched hierarchy for every member.
+
+    Edge-slot fills need no such care: padded edges carry mask 0 and the
+    masked aggregation ignores them wherever they point.
+    """
+    depth = len(levels_list[0])
+    assert all(len(lv) == depth for lv in levels_list), \
+        "bucket members must share hierarchy depth"
+    out = []
+    # pad/stack host-side in numpy: one device transfer per stacked leaf
+    # instead of hundreds of tiny pad/stack dispatches per bucket
+    tgt_n = max(lv[0]["cluster"].shape[0] for lv in levels_list)
+    for li in range(depth):
+        tgt_e = max(lv[li]["senders"].shape[0] for lv in levels_list)
+        tgt_c = max(lv[li]["coarse"].shape[0] for lv in levels_list)
+        if any(lv[li]["cluster"].shape[0] < tgt_n for lv in levels_list):
+            tgt_c += 1  # fresh dummy slot for the padded cluster fill
+        s, r, m, cl = [], [], [], []
+        for lv in levels_list:
+            d = lv[li]
+            pad_e = (0, tgt_e - d["senders"].shape[0])
+            pad_n = (0, tgt_n - d["cluster"].shape[0])
+            s.append(np.pad(np.asarray(d["senders"]), pad_e,
+                            constant_values=tgt_n - 1))
+            r.append(np.pad(np.asarray(d["receivers"]), pad_e,
+                            constant_values=tgt_n - 1))
+            m.append(np.pad(np.asarray(d["edge_mask"]), pad_e))
+            cl.append(np.pad(np.asarray(d["cluster"]), pad_n,
+                             constant_values=tgt_c - 1))
+        out.append(dict(
+            senders=jnp.asarray(np.stack(s)),
+            receivers=jnp.asarray(np.stack(r)),
+            edge_mask=jnp.asarray(np.stack(m)),
+            cluster=jnp.asarray(np.stack(cl)),
+            coarse=jnp.zeros((len(levels_list), tgt_c), jnp.float32)))
+        tgt_n = tgt_c  # next level's node pad = this level's coarse pad
+    return tuple(out)
+
+
 def symmetrize_pattern(A: sp.spmatrix) -> sp.csr_matrix:
     A = sp.csr_matrix(A)
     S = (abs(A) + abs(A).T)

@@ -20,8 +20,10 @@ import scipy.sparse as sp
 from repro.core import admm as admm_mod
 from repro.core import encoder as enc
 from repro.core import reorder
-from repro.core.admm import PFMConfig, admm_train_matrix, predict_scores
-from repro.core.graph import GraphData, build_hierarchy, dense_padded
+from repro.core.admm import (PFMConfig, admm_train_batch,
+                             admm_train_matrix, predict_scores)
+from repro.core.graph import (GraphData, build_hierarchy, dense_padded,
+                              stack_hierarchies)
 from repro.core.spectral import (pretrain_spectral_net, spectral_embedding)
 from repro.optim import adam, apply_updates
 
@@ -35,6 +37,45 @@ class PreparedMatrix:
     A_dense: jnp.ndarray
     x_g: jnp.ndarray
     node_mask: jnp.ndarray
+
+
+@dataclasses.dataclass
+class BucketBatch:
+    """One training bucket: B same-shaped (padded) matrices stacked for
+    a single batched ADMM call (DESIGN.md §2)."""
+    names: List[str]
+    A: jnp.ndarray          # (B, n_pad, n_pad)
+    levels: tuple           # stacked hierarchy, leading B on every leaf
+    x_g: jnp.ndarray        # (B, n_pad, in_dim)
+    node_mask: jnp.ndarray  # (B, n_pad)
+
+    @property
+    def size(self) -> int:
+        return self.A.shape[0]
+
+
+def pack_buckets(prepped: Sequence[PreparedMatrix],
+                 max_batch: int = 32) -> List[BucketBatch]:
+    """Group PreparedMatrix instances into shape buckets keyed on
+    (n_pad, hierarchy depth) — the two static properties a single XLA
+    program is specialized on — then stack each group (chunked to
+    max_batch) into BucketBatch tensors. Ragged true sizes n within a
+    bucket are handled by the per-matrix node masks."""
+    groups: Dict[tuple, List[PreparedMatrix]] = {}
+    for pm in prepped:
+        groups.setdefault((pm.gd.n_pad, len(pm.levels)), []).append(pm)
+    buckets = []
+    for bkey in sorted(groups):
+        pms = groups[bkey]
+        for i in range(0, len(pms), max_batch):
+            chunk = pms[i:i + max_batch]
+            buckets.append(BucketBatch(
+                names=[pm.name for pm in chunk],
+                A=jnp.stack([pm.A_dense for pm in chunk]),
+                levels=stack_hierarchies([pm.levels for pm in chunk]),
+                x_g=jnp.stack([pm.x_g for pm in chunk]),
+                node_mask=jnp.stack([pm.node_mask for pm in chunk])))
+    return buckets
 
 
 class PFM:
@@ -85,29 +126,79 @@ class PFM:
         return losses
 
     # ------------------------------------------------------------ train
-    def fit(self, matrices: Sequence, epochs: int = 1, verbose=False):
+    def fit(self, matrices: Sequence, epochs: int = 1, verbose=False, *,
+            batched: bool = True, max_batch: int = 32):
         """Algorithm 1: outer epochs over the training set, inner ADMM
-        per matrix. `matrices` may be scipy matrices or (name, A) pairs."""
+        per matrix. `matrices` may be scipy matrices or (name, A) pairs.
+
+        batched=True (default) packs the set into shape buckets
+        (pack_buckets) and runs one admm_train_batch call per bucket —
+        epoch wall-clock scales with bucket count, not matrix count, and
+        theta-gradients accumulate across each bucket into one shared
+        Adam step per ADMM iteration (DESIGN.md §2). batched=False keeps
+        the paper-literal sequential path (one Adam step per matrix per
+        iteration; also the path used under 2-D sharding)."""
         prepped = []
         for i, item in enumerate(matrices):
+            if isinstance(item, PreparedMatrix):
+                prepped.append(item)  # corpus-scale callers prep once
+                continue
             name, A = item if isinstance(item, tuple) else (f"m{i}", item)
             prepped.append(self.prepare(A, name))
 
+        from repro.distributed.constrain import pfm_2d
+        if pfm_2d():
+            # 2-D (data, model) sharded training lowers the sequential
+            # admm_train_matrix (the batched path carries no sharding
+            # constraints yet — DESIGN.md §2 residual scope)
+            batched = False
+
         key = jax.random.PRNGKey(self.seed + 1)
+        if not batched:
+            for epoch in range(epochs):
+                for pm in prepped:
+                    key, sub = jax.random.split(key)
+                    t0 = time.perf_counter()
+                    self.params, self.opt_state, metrics = \
+                        admm_train_matrix(
+                            self.params, self.opt_state, pm.A_dense,
+                            pm.levels, pm.x_g, pm.node_mask, sub,
+                            cfg=self.cfg, opt=self.opt)
+                    rec = {k: float(v) for k, v in metrics.items()}
+                    jax.block_until_ready(self.params)
+                    rec.update(epoch=epoch, matrix=pm.name,
+                               wall_s=time.perf_counter() - t0)
+                    self.history.append(rec)
+                    if verbose:
+                        print(f"  epoch {epoch} {pm.name}: "
+                              f"l1={rec['l1']:.1f} "
+                              f"res={rec['residual']:.2f}")
+            return self.history
+
+        buckets = pack_buckets(prepped, max_batch=max_batch)
         for epoch in range(epochs):
-            for pm in prepped:
+            for bucket in buckets:
                 key, sub = jax.random.split(key)
+                keys = jax.random.split(sub, bucket.size)
                 t0 = time.perf_counter()
-                self.params, self.opt_state, metrics = admm_train_matrix(
-                    self.params, self.opt_state, pm.A_dense, pm.levels,
-                    pm.x_g, pm.node_mask, sub, cfg=self.cfg, opt=self.opt)
-                rec = {k: float(v) for k, v in metrics.items()}
-                rec.update(epoch=epoch, matrix=pm.name,
-                           wall_s=time.perf_counter() - t0)
-                self.history.append(rec)
-                if verbose:
-                    print(f"  epoch {epoch} {pm.name}: "
-                          f"l1={rec['l1']:.1f} res={rec['residual']:.2f}")
+                self.params, self.opt_state, metrics = admm_train_batch(
+                    self.params, self.opt_state, bucket.A, bucket.levels,
+                    bucket.x_g, bucket.node_mask, keys, cfg=self.cfg,
+                    opt=self.opt)
+                # block on the async dispatch so wall_s measures compute
+                metrics = {k: np.asarray(v) for k, v in metrics.items()}
+                jax.block_until_ready(self.params)
+                wall = time.perf_counter() - t0
+                for bi, name in enumerate(bucket.names):
+                    rec = {k: float(v[bi]) for k, v in metrics.items()}
+                    rec.update(epoch=epoch, matrix=name,
+                               wall_s=wall / bucket.size,
+                               bucket_size=bucket.size)
+                    self.history.append(rec)
+                    if verbose:
+                        print(f"  epoch {epoch} {name} "
+                              f"[B={bucket.size}]: l1={rec['l1']:.1f} "
+                              f"res={rec['residual']:.2f}")
         return self.history
 
     # -------------------------------------------------------- inference

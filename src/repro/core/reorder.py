@@ -57,24 +57,35 @@ def rank_distribution(scores: jnp.ndarray, sigma: float,
     return p_hat
 
 
+def _gumbel_log_p(p_hat, u, tau, noise_scale):
+    """log P_hat + Gumbel noise (from uniform draws u), tempered."""
+    eps = 1e-20
+    u = jnp.clip(u, eps, 1.0 - 1e-7)
+    gumbel = -jnp.log(-jnp.log(u))
+    return (jnp.log(p_hat + eps) + noise_scale * gumbel) / tau
+
+
+def _sinkhorn_normalize(log_p, n_iters, use_kernel):
+    """Alternating log-space normalization over the trailing two axes
+    (batch-generic); the kernel path dispatches through ops.sinkhorn."""
+    if use_kernel:
+        return kops.sinkhorn(log_p, n_iters=n_iters)
+    for _ in range(n_iters):
+        log_p = log_p - jax.nn.logsumexp(log_p, axis=-2, keepdims=True)
+        log_p = log_p - jax.nn.logsumexp(log_p, axis=-1, keepdims=True)
+    return log_p
+
+
 def gumbel_sinkhorn(p_hat: jnp.ndarray, key, *, tau: float = 0.3,
                     n_iters: int = 20, noise_scale: float = 1.0,
                     use_kernel: bool = True):
     """Gumbel-Sinkhorn on log P_hat (paper Algorithm 2)."""
-    eps = 1e-20
-    u = jnp.clip(jax.random.uniform(key, p_hat.shape), eps, 1.0 - 1e-7)
-    gumbel = -jnp.log(-jnp.log(u))
-    log_p = (jnp.log(p_hat + eps) + noise_scale * gumbel) / tau
+    u = jax.random.uniform(key, p_hat.shape)
+    log_p = _gumbel_log_p(p_hat, u, tau, noise_scale)
     from repro.distributed.constrain import constrain, pfm_2d
     if pfm_2d():
         log_p = constrain(log_p, "data", "model")
-    if use_kernel:
-        log_p = kops.sinkhorn(log_p, n_iters=n_iters)
-    else:
-        for _ in range(n_iters):
-            log_p = log_p - jax.nn.logsumexp(log_p, axis=0, keepdims=True)
-            log_p = log_p - jax.nn.logsumexp(log_p, axis=1, keepdims=True)
-    return jnp.exp(log_p)
+    return jnp.exp(_sinkhorn_normalize(log_p, n_iters, use_kernel))
 
 
 def soft_permutation(scores, key, *, sigma: float = 1e-3, tau: float = 0.3,
@@ -86,6 +97,32 @@ def soft_permutation(scores, key, *, sigma: float = 1e-3, tau: float = 0.3,
     p_ui = gumbel_sinkhorn(p_hat, key, tau=tau, n_iters=n_iters,
                            noise_scale=noise_scale, use_kernel=use_kernel)
     return p_ui.T
+
+
+def soft_permutation_batch(scores, keys, *, sigma: float = 1e-3,
+                           tau: float = 0.3, n_iters: int = 20,
+                           node_mask=None, noise_scale=1.0,
+                           use_kernel: bool = True):
+    """Bucket-batched soft_permutation: scores (B, n), keys (B, 2)
+    stacked PRNG keys, node_mask (B, n) or None. Per-matrix math is
+    identical to soft_permutation with the matching key (the Gumbel draw
+    is vmapped over keys), but the Sinkhorn normalization runs as ONE
+    batched kernel launch for the whole bucket (DESIGN.md §2). Returns
+    (B, n, n) with rows = positions per matrix."""
+    if node_mask is None:
+        p_hat = jax.vmap(lambda y: rank_distribution(y, sigma))(scores)
+    else:
+        p_hat = jax.vmap(lambda y, m: rank_distribution(y, sigma, m))(
+            scores, node_mask)
+    # per-matrix Gumbel draws (vmapped over keys) so each bucket member
+    # sees exactly the noise the sequential path would draw from its key
+    u = jax.vmap(lambda k, p: jax.random.uniform(k, p.shape))(keys, p_hat)
+    log_p = _gumbel_log_p(p_hat, u, tau, noise_scale)
+    from repro.distributed.constrain import constrain, pfm_2d
+    if pfm_2d():
+        log_p = constrain(log_p, None, "data", "model")
+    log_p = _sinkhorn_normalize(log_p, n_iters, use_kernel)
+    return jnp.swapaxes(jnp.exp(log_p), -1, -2)
 
 
 def permutation_from_scores(scores, node_mask=None):

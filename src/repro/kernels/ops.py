@@ -79,17 +79,24 @@ _sinkhorn_cvjp.defvjp(_sinkhorn_fwd, _sinkhorn_bwd)
 
 
 def sinkhorn(log_p: jnp.ndarray, n_iters: int = 20) -> jnp.ndarray:
-    if _force_ref() or log_p.shape[0] > SINKHORN_VMEM_LIMIT \
-            or log_p.shape[0] % 128 != 0:
+    """log_p: (n, m) or batched (B, n, m) — a batched input runs the
+    whole bucket in one kernel launch (leading grid axis). The VMEM
+    envelope is per-matrix (each grid step holds one (n, m) panel), so
+    the n limit is independent of B."""
+    n, m = log_p.shape[-2:]
+    if _force_ref() or log_p.ndim > 3 or n > SINKHORN_VMEM_LIMIT \
+            or n % 128 != 0 or m % 128 != 0:
         return ref.sinkhorn_ref(log_p, n_iters)
     return _sinkhorn_cvjp(log_p, n_iters)
 
 
 # ------------------------------------------------------------ prox_tril
 def prox_tril(L, G, eta, thresh) -> jnp.ndarray:
-    """eta/thresh may be traced scalars (Lipschitz-scaled ADMM step)."""
-    n, m = L.shape
-    if _force_ref() or n % 128 != 0 or m % 128 != 0:
+    """eta/thresh may be traced scalars (Lipschitz-scaled ADMM step).
+    L, G: (n, m) or batched (B, n, m); in the batched form eta/thresh may
+    be per-matrix (B,) vectors — one launch covers the whole bucket."""
+    n, m = L.shape[-2:]
+    if _force_ref() or L.ndim > 3 or n % 128 != 0 or m % 128 != 0:
         return ref.prox_tril_ref(L, G, eta, thresh)
     block = 256 if n % 256 == 0 else 128
     return prox_tril_pallas(L, G, eta, thresh, block=block,

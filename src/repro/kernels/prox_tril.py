@@ -10,6 +10,12 @@ global indices derived off program_id, so strictly-upper tiles write
 zeros, diagonal tiles mask elementwise, and strictly-lower tiles pass
 through. The step/threshold scalars are runtime values (the ADMM loop
 uses a Lipschitz-scaled step), so they ride in SMEM.
+
+Batch axis (DESIGN.md §2): (B, n, n) inputs add a leading grid dimension
+— grid = (B, n//block, m//block) — so the whole bucket's L-update is one
+kernel launch. eta/thresh become per-matrix (B,) vectors (each matrix in
+the bucket has its own Lipschitz-scaled step); they ride in the scalar
+prefetch operand as a (2, B) panel indexed by the batch program id.
 """
 from __future__ import annotations
 
@@ -22,37 +28,47 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _prox_tril_kernel(scal_ref, l_ref, g_ref, o_ref, *, block: int):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    eta = scal_ref[0]
-    thr = scal_ref[1]
-    x = l_ref[...].astype(jnp.float32) - eta * g_ref[...].astype(jnp.float32)
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    eta = scal_ref[0, b]
+    thr = scal_ref[1, b]
+    x = l_ref[0].astype(jnp.float32) - eta * g_ref[0].astype(jnp.float32)
     s = jnp.sign(x) * jnp.maximum(jnp.abs(x) - thr, 0.0)
     rows = i * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
     cols = j * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    o_ref[...] = jnp.where(rows >= cols, s, 0.0).astype(o_ref.dtype)
+    o_ref[0] = jnp.where(rows >= cols, s, 0.0).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def prox_tril_pallas(L: jnp.ndarray, G: jnp.ndarray, eta, thresh,
                      block: int = 256, interpret: bool = False):
-    n, m = L.shape
+    """L, G: (n, m) or (B, n, m); a 2-D input is lifted to B=1 so one
+    code path serves both. eta/thresh may be scalars (shared) or (B,)
+    vectors (per-matrix step sizes)."""
+    squeeze = L.ndim == 2
+    if squeeze:
+        L, G = L[None], G[None]
+    b, n, m = L.shape
     block = min(block, n, m)
     assert n % block == 0 and m % block == 0, (n, m, block)
-    scal = jnp.stack([jnp.asarray(eta, jnp.float32),
-                      jnp.asarray(thresh, jnp.float32)])
+    scal = jnp.stack([jnp.broadcast_to(jnp.asarray(eta, jnp.float32), (b,)),
+                      jnp.broadcast_to(jnp.asarray(thresh, jnp.float32),
+                                       (b,))])
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n // block, m // block),
+        grid=(b, n // block, m // block),
         in_specs=[
-            pl.BlockSpec((block, block), lambda i, j, s: (i, j)),
-            pl.BlockSpec((block, block), lambda i, j, s: (i, j)),
+            pl.BlockSpec((1, block, block), lambda k, i, j, s: (k, i, j)),
+            pl.BlockSpec((1, block, block), lambda k, i, j, s: (k, i, j)),
         ],
-        out_specs=pl.BlockSpec((block, block), lambda i, j, s: (i, j)),
+        out_specs=pl.BlockSpec((1, block, block),
+                               lambda k, i, j, s: (k, i, j)),
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_prox_tril_kernel, block=block),
-        out_shape=jax.ShapeDtypeStruct((n, m), L.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, n, m), L.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
     )(scal, L, G)
+    return out[0] if squeeze else out

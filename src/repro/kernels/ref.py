@@ -9,19 +9,29 @@ import jax.numpy as jnp
 
 def sinkhorn_ref(log_p: jnp.ndarray, n_iters: int) -> jnp.ndarray:
     """Log-space Sinkhorn normalization (col then row, matching paper
-    Algorithm 2 lines 10-11)."""
+    Algorithm 2 lines 10-11). Accepts (n, m) or batched (B, n, m); the
+    normalization axes are always the trailing two."""
     x = log_p.astype(jnp.float32)
     for _ in range(n_iters):
-        x = x - jax.nn.logsumexp(x, axis=0, keepdims=True)
-        x = x - jax.nn.logsumexp(x, axis=1, keepdims=True)
+        x = x - jax.nn.logsumexp(x, axis=-2, keepdims=True)
+        x = x - jax.nn.logsumexp(x, axis=-1, keepdims=True)
     return x
 
 
-def prox_tril_ref(L: jnp.ndarray, G: jnp.ndarray, eta: float,
-                  thresh: float) -> jnp.ndarray:
-    """Fused proximal step: tril(soft_threshold(L - eta*G, thresh))."""
-    X = L - eta * G
-    S = jnp.sign(X) * jnp.maximum(jnp.abs(X) - thresh, 0.0)
+def _bcast_scalar(s, ndim: int):
+    """Lift a scalar or (B,) per-matrix vector to broadcast against a
+    (..., n, m) operand."""
+    s = jnp.asarray(s, jnp.float32)
+    return s.reshape(s.shape + (1,) * (ndim - s.ndim))
+
+
+def prox_tril_ref(L: jnp.ndarray, G: jnp.ndarray, eta,
+                  thresh) -> jnp.ndarray:
+    """Fused proximal step: tril(soft_threshold(L - eta*G, thresh)).
+    L, G: (n, m) or (B, n, m); eta/thresh: scalar or per-matrix (B,)."""
+    X = L - _bcast_scalar(eta, L.ndim) * G
+    S = jnp.sign(X) * jnp.maximum(jnp.abs(X) - _bcast_scalar(
+        thresh, L.ndim), 0.0)
     return jnp.tril(S)
 
 

@@ -13,10 +13,16 @@ panel is <= 1 MiB, far under the ~16 MiB/core VMEM budget; the wrapper in
 ops.py falls back to the XLA path when the panel would not fit
 (n > SINKHORN_VMEM_LIMIT).
 
-Tiling: a single grid step owns the full matrix (block = (n, n)); both
-reduction directions are purely local so no cross-block communication is
-needed. Rows/cols are multiples of 128 (lane width) by construction —
-the reordering pipeline pads node counts to powers of two >= 128.
+Tiling: a single grid step owns one full matrix; both reduction
+directions are purely local so no cross-block communication is needed.
+Rows/cols are multiples of 128 (lane width) by construction — the
+reordering pipeline pads node counts to powers of two >= 128.
+
+Batch axis (DESIGN.md §2): a (B, n, n) input adds a leading grid
+dimension — grid = (B,), block = (1, n, n) — so a whole shape bucket of
+matrices is normalized in ONE kernel launch instead of B. VMEM residency
+is unchanged (each grid step still holds a single (n, n) panel), so the
+per-matrix size envelope is the same as the unbatched kernel.
 """
 from __future__ import annotations
 
@@ -36,11 +42,13 @@ def _logsumexp(x, axis):
 
 
 def _sinkhorn_kernel(x_ref, o_ref, *, n_iters: int):
+    # block is (n, m) unbatched or (1, n, m) batched; normalizing over the
+    # trailing two axes covers both.
     x = x_ref[...].astype(jnp.float32)
 
     def body(_, x):
-        x = x - _logsumexp(x, axis=0)   # column normalization
-        x = x - _logsumexp(x, axis=1)   # row normalization
+        x = x - _logsumexp(x, axis=-2)   # column normalization
+        x = x - _logsumexp(x, axis=-1)   # row normalization
         return x
 
     o_ref[...] = jax.lax.fori_loop(0, n_iters, body, x).astype(o_ref.dtype)
@@ -49,11 +57,18 @@ def _sinkhorn_kernel(x_ref, o_ref, *, n_iters: int):
 @functools.partial(jax.jit, static_argnames=("n_iters", "interpret"))
 def sinkhorn_pallas(log_p: jnp.ndarray, n_iters: int = 20,
                     interpret: bool = False) -> jnp.ndarray:
-    n, m = log_p.shape
-    return pl.pallas_call(
+    """log_p: (n, m) or (B, n, m). A 2-D input is lifted to B=1 so one
+    code path serves both; batched input runs one launch with a leading
+    grid axis over B."""
+    squeeze = log_p.ndim == 2
+    x = log_p[None] if squeeze else log_p
+    b, n, m = x.shape
+    out = pl.pallas_call(
         functools.partial(_sinkhorn_kernel, n_iters=n_iters),
-        out_shape=jax.ShapeDtypeStruct((n, m), log_p.dtype),
-        in_specs=[pl.BlockSpec((n, m), lambda: (0, 0))],
-        out_specs=pl.BlockSpec((n, m), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, m), x.dtype),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n, m), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
         interpret=interpret,
-    )(log_p)
+    )(x)
+    return out[0] if squeeze else out

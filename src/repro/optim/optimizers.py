@@ -2,6 +2,7 @@
 implemented from scratch — optax is not available offline)."""
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -110,10 +111,26 @@ def chain(*transforms):
     return Optimizer(init, update)
 
 
-def adam(lr, b1=0.9, b2=0.999, eps=1e-8):
+def _make_adam(lr, b1, b2, eps):
     if callable(lr):
         return chain(scale_by_adam(b1, b2, eps), scale_by_schedule(lr))
     return chain(scale_by_adam(b1, b2, eps), scale(-lr))
+
+
+_adam_cached = functools.lru_cache(maxsize=128)(_make_adam)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8):
+    # memoized: Optimizer holds only pure functions, and callers pass it
+    # as a *static* jit argument (identity-keyed). Returning the same
+    # object for the same hyperparameters lets independently constructed
+    # training modules (e.g. PFM instances) share compiled programs
+    # instead of retracing per instance. Unhashable lr (e.g. a traced
+    # array) falls back to uncached construction.
+    try:
+        return _adam_cached(lr, b1, b2, eps)
+    except TypeError:
+        return _make_adam(lr, b1, b2, eps)
 
 
 def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,

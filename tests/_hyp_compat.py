@@ -1,0 +1,53 @@
+"""Hypothesis compatibility shim: property tests degrade to
+deterministic boundary/midpoint sampling when `hypothesis` is not
+installed (clean environments / minimal CI), instead of breaking test
+collection. With hypothesis present this module is a pure re-export.
+
+Only the subset this repo uses is emulated: kwargs-form @given with
+st.integers(lo, hi) / st.floats(lo, hi), and @settings(...) as a no-op.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in hypothesis-less envs
+    import itertools
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = samples
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy([lo, hi, (lo + hi) // 2])
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy([lo, hi, 0.5 * (lo + hi)])
+
+    st = _St()
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**kwargs):
+        names = list(kwargs)
+        sample_lists = [kwargs[n].samples for n in names]
+
+        def deco(fn):
+            # deliberately NOT functools.wraps: pytest must see a
+            # zero-arg signature, not the strategy kwargs (it would
+            # look for fixtures named after them)
+            def wrapper():
+                for combo in itertools.product(*sample_lists):
+                    fn(**dict(zip(names, combo)))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

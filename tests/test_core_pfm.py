@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import baselines, fillin, reorder
 from repro.core.admm import PFMConfig
@@ -127,12 +127,110 @@ def test_admm_training_is_finite_and_learns():
     mats = [("d1", delaunay_like(100, "gradel", seed=5)),
             ("d2", delaunay_like(120, "hole3", seed=6))]
     pfm = PFM(PFMConfig(n_admm=3, n_sinkhorn=8), seed=0)
-    hist = pfm.fit(mats, epochs=2)
+    hist = pfm.fit(mats, epochs=2)  # default path: bucketed/batched
     assert all(np.isfinite(h["l1"]) for h in hist)
     assert all(np.isfinite(h["residual"]) for h in hist)
     for _, A in mats:
         perm = pfm.permutation(A)
         assert sorted(perm.tolist()) == list(range(A.shape[0]))
+
+
+def test_admm_training_sequential_path_still_works():
+    mats = [("d1", delaunay_like(100, "gradel", seed=5))]
+    pfm = PFM(PFMConfig(n_admm=2, n_sinkhorn=6), seed=0)
+    hist = pfm.fit(mats, epochs=1, batched=False)
+    assert all(np.isfinite(h["l1"]) for h in hist)
+
+
+def _prep_bucket(n_matrices=4, seed0=11, **cfg_kw):
+    """Prepare matrices and return (pfm, prepped, buckets) — generator
+    sizes chosen so everything lands in one (n_pad=128,) bucket family;
+    ragged true n within the bucket exercises the masks."""
+    from repro.core.pfm import pack_buckets
+    cfg = PFMConfig(n_admm=3, n_sinkhorn=6, lr=0.0, **cfg_kw)
+    pfm = PFM(cfg, seed=0, x_mode="random")
+    mats = [delaunay_like(100 + 7 * i, "gradel", seed=seed0 + i)
+            for i in range(n_matrices)]
+    prepped = [pfm.prepare(A, f"m{i}") for i, A in enumerate(mats)]
+    return pfm, prepped, pack_buckets(prepped)
+
+
+@pytest.mark.parametrize("matmul_dtype", ["f32", "bf16"])
+def test_admm_batch_matches_sequential_frozen_encoder(matmul_dtype):
+    """With the encoder frozen (lr=0) the per-matrix ADMM dynamics are
+    fully independent, so bucketed-batched training must reproduce the
+    sequential path's final l1/residual per matrix (same per-matrix
+    keys) — this pins the batched kernels + vmapped loop to the
+    single-matrix implementation. The bf16 case guards the matmul_dtype
+    lever's batched lowering (jnp.matmul vs jnp.dot semantics)."""
+    from repro.core.admm import admm_train_batch, admm_train_matrix
+    n_mats = 4 if matmul_dtype == "f32" else 2
+    pfm, prepped, buckets = _prep_bucket(n_mats,
+                                         matmul_dtype=matmul_dtype)
+    cfg = pfm.cfg
+    keys = jax.random.split(jax.random.PRNGKey(42), len(prepped))
+    by_name = {pm.name: k for pm, k in zip(prepped, keys)}
+
+    params, opt_state = pfm.params, pfm.opt_state
+    seq = {}
+    for pm, k in zip(prepped, keys):
+        params, opt_state, m = admm_train_matrix(
+            params, opt_state, pm.A_dense, pm.levels, pm.x_g,
+            pm.node_mask, k, cfg=cfg, opt=pfm.opt)
+        seq[pm.name] = {kk: float(v) for kk, v in m.items()}
+
+    params_b, opt_b = pfm.params, pfm.opt_state
+    assert sum(b.size for b in buckets) == len(prepped)
+    assert max(b.size for b in buckets) >= 2, \
+        "generator drift: no multi-matrix bucket formed"
+    for b in buckets:
+        ks = jnp.stack([by_name[nm] for nm in b.names])
+        params_b, opt_b, m = admm_train_batch(
+            params_b, opt_b, b.A, b.levels, b.x_g, b.node_mask, ks,
+            cfg=cfg, opt=pfm.opt)
+        for bi, nm in enumerate(b.names):
+            got_l1 = float(m["l1"][bi])
+            got_res = float(m["residual"][bi])
+            np.testing.assert_allclose(got_l1, seq[nm]["l1"],
+                                       rtol=1e-4)
+            np.testing.assert_allclose(got_res, seq[nm]["residual"],
+                                       rtol=1e-3, atol=1e-3)
+
+
+def test_admm_batch_close_to_sequential_small_lr():
+    """With a small learning rate the theta trajectories of the two
+    paths stay close over a short run — batched training is equivalent
+    up to gradient-accumulation order."""
+    from repro.core.admm import admm_train_batch, admm_train_matrix
+    from repro.core.pfm import pack_buckets
+    cfg = PFMConfig(n_admm=3, n_sinkhorn=6, lr=1e-3)
+    pfm = PFM(cfg, seed=0, x_mode="random")
+    mats = [delaunay_like(100 + 7 * i, "gradel", seed=11 + i)
+            for i in range(4)]
+    prepped = [pfm.prepare(A, f"m{i}") for i, A in enumerate(mats)]
+    buckets = pack_buckets(prepped)
+    keys = jax.random.split(jax.random.PRNGKey(42), len(prepped))
+    by_name = {pm.name: k for pm, k in zip(prepped, keys)}
+
+    params, opt_state = pfm.params, pfm.opt_state
+    seq = {}
+    for pm, k in zip(prepped, keys):
+        params, opt_state, m = admm_train_matrix(
+            params, opt_state, pm.A_dense, pm.levels, pm.x_g,
+            pm.node_mask, k, cfg=cfg, opt=pfm.opt)
+        seq[pm.name] = {kk: float(v) for kk, v in m.items()}
+
+    params_b, opt_b = pfm.params, pfm.opt_state
+    for b in buckets:
+        ks = jnp.stack([by_name[nm] for nm in b.names])
+        params_b, opt_b, m = admm_train_batch(
+            params_b, opt_b, b.A, b.levels, b.x_g, b.node_mask, ks,
+            cfg=cfg, opt=pfm.opt)
+        for bi, nm in enumerate(b.names):
+            np.testing.assert_allclose(float(m["l1"][bi]),
+                                       seq[nm]["l1"], rtol=0.15)
+            np.testing.assert_allclose(float(m["residual"][bi]),
+                                       seq[nm]["residual"], rtol=0.25)
 
 
 def test_pfm_state_dict_roundtrip():

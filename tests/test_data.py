@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import scipy.sparse as sp
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.data import (TokenPipeline, delaunay_like, fem_like, grid_2d,
                         grid_3d, make_test_set, make_training_set)

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.optim import (adam, adamw, apply_updates, clip_by_global_norm,
                          constant_schedule, cosine_schedule,
