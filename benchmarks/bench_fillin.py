@@ -5,6 +5,9 @@ from __future__ import annotations
 
 import json
 import pathlib
+import subprocess
+import sys
+import textwrap
 import time
 from collections import defaultdict
 
@@ -124,6 +127,78 @@ def fit_throughput(quick: bool = False):
     return rows
 
 
+def fit_throughput_sharded(quick: bool = False):
+    """Data-parallel sharded PFM.fit (DESIGN.md §8) vs the single-device
+    bucketed path, on 8 *simulated* CPU devices — measured in a
+    subprocess because the device-count XLA flag must be set before jax
+    initializes. All 8 simulated devices share this host's cores, so the
+    row demonstrates functional scaling and records the shard_map + psum
+    dispatch overhead; on a real mesh the data axis multiplies
+    throughput instead."""
+    B = 8 if quick else 16
+    reps = 2 if quick else 3
+    script = textwrap.dedent(f"""
+        import os, json, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, {str(pathlib.Path(__file__).resolve()
+                              .parents[1] / "src")!r})
+        import jax
+        from repro.core.admm import PFMConfig
+        from repro.core.pfm import PFM
+        from repro.data import delaunay_like
+        from repro.launch.mesh import make_data_mesh
+
+        cfg = PFMConfig(n_admm=2, n_sinkhorn=8)
+        mesh = make_data_mesh()
+        pfms = {{"bucketed": PFM(cfg, seed=0, x_mode="random"),
+                 "sharded": PFM(cfg, seed=0, x_mode="random")}}
+        prep = pfms["bucketed"]
+        mats = [prep.prepare(delaunay_like(100 + 3 * (i % 8), "gradel",
+                                           seed=i), f"m{{i}}")
+                for i in range({B})]
+        epoch_s = {{m: [] for m in pfms}}
+        for rep in range({reps} + 1):  # rep 0 absorbs compilation
+            for mode, pfm in pfms.items():
+                pfm.history.clear()
+                pfm.fit(mats, epochs=1,
+                        mesh=mesh if mode == "sharded" else None)
+                if rep > 0:
+                    epoch_s[mode].append(
+                        sum(r["wall_s"] for r in pfm.history))
+        row = {{"B": {B}, "n_devices": len(jax.devices())}}
+        for m, v in epoch_s.items():
+            row[m + "_epoch_s"] = min(v)
+        row["sharded_vs_bucketed"] = (row["bucketed_epoch_s"]
+                                      / row["sharded_epoch_s"])
+        print("ROW=" + json.dumps(row))
+    """)
+    try:
+        res = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=1800)
+    except subprocess.TimeoutExpired:
+        print("fit_throughput_sharded timed out (loaded host?) — "
+              "skipping the sharded row")
+        return []
+    line = [ln for ln in res.stdout.splitlines()
+            if ln.startswith("ROW=")]
+    if not line:
+        print("fit_throughput_sharded failed:", res.stderr[-2000:])
+        return []
+    row = json.loads(line[-1][len("ROW="):])
+    print(f"fit sharded B={row['B']} x{row['n_devices']}dev: "
+          f"bucketed={row['bucketed_epoch_s'] * 1e3:.1f}ms "
+          f"sharded={row['sharded_epoch_s'] * 1e3:.1f}ms "
+          f"ratio={row['sharded_vs_bucketed']:.2f}x (simulated devices "
+          f"share host cores)")
+    OUT.mkdir(exist_ok=True)
+    (OUT / "fit_throughput_sharded.json").write_text(
+        json.dumps([row], indent=2))
+    return [row]
+
+
 def run(pfm: PFM | None = None, quick: bool = False):
     cases = make_test_set()
     if quick:
@@ -152,6 +227,7 @@ def run(pfm: PFM | None = None, quick: bool = False):
 
 def main(quick=False):
     tp = fit_throughput(quick=quick)
+    tp_sharded = fit_throughput_sharded(quick=quick)
     rows = run(quick=quick)
     cats = [k for k in rows[0] if k not in ("method",)
             and not k.endswith("_ms")]
@@ -160,7 +236,8 @@ def main(quick=False):
         print(r["method"] + "," + ",".join(
             f"{r[c]:.2f}" for c in cats)
             + f",{r['All_lu_ms']:.1f},{r['All_order_ms']:.1f}")
-    return {"table2": rows, "fit_throughput": tp}
+    return {"table2": rows, "fit_throughput": tp,
+            "fit_throughput_sharded": tp_sharded}
 
 
 if __name__ == "__main__":

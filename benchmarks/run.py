@@ -50,13 +50,26 @@ def main() -> None:
         except TypeError:
             out = mod.main()
         wall = time.perf_counter() - t0
-        results[mod_name] = {"wall_s": wall, "result": out}
+        # "quick" recorded per module: a later --only re-run merges into
+        # bench_results.json, so a single top-level flag could not say
+        # which modules' rows came from a reduced run
+        results[mod_name] = {"wall_s": wall, "quick": args.quick,
+                             "result": out}
         print(f"-- {title}: {wall:.1f}s")
 
     OUT.mkdir(exist_ok=True)
     path = OUT / "bench_results.json"
+    # merge: a --only run updates its module's entry without dropping
+    # the previously recorded modules
+    combined = {}
+    if path.exists():
+        try:
+            combined = json.loads(path.read_text()).get("results", {})
+        except (json.JSONDecodeError, AttributeError):
+            combined = {}
+    combined.update(results)
     path.write_text(json.dumps(
-        {"time": time.time(), "quick": args.quick, "results": results},
+        {"time": time.time(), "results": combined},
         indent=2, default=str))
     print(f"\nwrote {path}")
 

@@ -151,11 +151,8 @@ def admm_train_matrix(params, opt_state, A, levels_tuple, x_g, node_mask,
     M0 = reordered(P0, A, cfg)
     L0 = _warm_start_L(M0, k_L, n)   # Gamma0 = 0 (DESIGN.md §6)
     G0 = jnp.zeros((n, n))
-    from repro.distributed.constrain import constrain, pfm_2d
-    if pfm_2d():
-        L0 = constrain(L0, "data", "model")
-        G0 = constrain(G0, "data", "model")
-        M0 = constrain(M0, "data", "model")
+    from repro.distributed.constrain import constrain_2d
+    L0, G0, M0 = constrain_2d(L0), constrain_2d(G0), constrain_2d(M0)
 
     grad_L = jax.grad(smooth_terms, argnums=0)
     grad_theta = jax.grad(_theta_loss, argnums=0, has_aux=True)
@@ -212,10 +209,15 @@ def _predict_scores_batch(params, cfg: PFMConfig, levels, x_g):
 
 
 def _theta_loss_batch(params, cfg: PFMConfig, levels, x_g, node_mask, A,
-                      L, Gamma, keys):
+                      L, Gamma, keys, weight=None):
     """Sum of per-matrix augmented-Lagrangian smooth terms over the
     bucket — grads w.r.t. the shared params accumulate across the batch
-    (one Adam step per ADMM iteration for the whole bucket)."""
+    (one Adam step per ADMM iteration for the whole bucket). weight,
+    when given, is a (B,) 0/1 vector zeroing padding rows' contribution
+    (DESIGN.md §8 B-padding rule). NOTE: the zero cotangent still
+    backprops through a pad row's forward, and 0 * non-finite = NaN —
+    masking alone does NOT protect against non-finite pad rows; the
+    finiteness guarantee comes from pad_bucket duplicating real rows."""
     y = _predict_scores_batch(params, cfg, levels, x_g)
     P = reorder.soft_permutation_batch(
         y, keys, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
@@ -225,17 +227,23 @@ def _theta_loss_batch(params, cfg: PFMConfig, levels, x_g, node_mask, A,
     losses = jax.vmap(
         lambda l, p, a, g, m: smooth_terms(l, p, a, g, cfg.rho, cfg, M=m)
     )(L, P, A, Gamma, M)
+    if weight is not None:
+        losses = jnp.where(weight > 0, losses, 0.0)
     return jnp.sum(losses), (P, M)
 
 
 def _admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
-                      keys, *, cfg: PFMConfig, opt):
+                      keys, batch_weight=None, *, cfg: PFMConfig, opt,
+                      axis_name: str | None = None):
     """Batched Algorithm 1 inner loop over a shape bucket.
 
     A: (B, n, n) stacked padded matrices; levels_tuple: stacked hierarchy
     (graph.stack_hierarchies); x_g: (B, n, in_dim); node_mask: (B, n);
     keys: (B, 2) stacked PRNG keys (one per matrix, matching the keys the
-    sequential path would use).
+    sequential path would use); batch_weight: optional (B,) 0/1 vector —
+    rows with weight 0 (B-padding under a mesh) still run their
+    independent per-matrix ADMM updates but contribute nothing to the
+    shared θ-grads.
 
     The whole (L, Gamma, P, M) state carries a leading batch dim through
     one lax.fori_loop; per-matrix L/Gamma/dual updates are independent
@@ -245,6 +253,12 @@ def _admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
     gradient-accumulation order of the theta steps (B Adam steps with
     per-matrix grads -> 1 Adam step with summed grads); with a frozen
     encoder (lr=0) the two paths are numerically identical per matrix.
+
+    axis_name, when set, marks this as the per-device body of the
+    shard_map'd data-parallel trainer (DESIGN.md §8): the local θ-grad
+    sum is psum'd over that mesh axis before the (replicated) Adam step,
+    so every device applies the identical global update — the only
+    cross-device communication in the whole loop.
 
     Returns (params, opt_state, metrics) with per-matrix (B,) metric
     vectors."""
@@ -278,9 +292,12 @@ def _admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
         t = jax.vmap(lambda l, a: _lipschitz_step(l, a, n, cfg))(L, A)
         L = _prox_step(L, gL, t, cfg)                        # t: (B,)
 
-        # ---- theta-update: grads summed over the bucket, one Adam step
+        # ---- theta-update: grads summed over the bucket (psum'd over
+        # the mesh when sharded), one shared Adam step
         gT, _ = grad_theta(params, cfg, levels, x_g, node_mask, A, L,
-                           Gamma, kk)
+                           Gamma, kk, batch_weight)
+        if axis_name is not None:
+            gT = jax.lax.psum(gT, axis_name)
         updates, opt_state = opt.update(gT, opt_state, params)
         params = apply_updates(params, updates)
 
@@ -302,11 +319,19 @@ def _admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
         0, cfg.n_admm, body, (L0, G0, P0, M0, params, opt_state))
 
     # final metrics in plain f32 (matching the sequential path, which
-    # ignores the matmul_dtype lever for reporting)
-    R = M - L @ jnp.swapaxes(L, -1, -2)
-    l1 = jnp.sum(jnp.abs(L), axis=(-2, -1))
-    dual = jnp.sum(Gamma * R, axis=(-2, -1))
-    rr = jnp.sum(R * R, axis=(-2, -1))
+    # ignores the matmul_dtype lever for reporting). lax.map over the
+    # batch — NOT axis=(-2,-1) reductions on the (B, n, n) stack — so
+    # the reduction is compiled per (n, n) panel identically regardless
+    # of the (local) batch size: XLA's fusion of a batched reduction can
+    # round differently between B and B/D shapes (observed at 1 ulp),
+    # which would break the sharded == single-device bitwise parity
+    # contract (DESIGN.md §8) in the reported metrics.
+    def _one_metrics(args):
+        l, g, m = args
+        r = m - l @ l.T
+        return (jnp.sum(jnp.abs(l)), jnp.sum(g * r), jnp.sum(r * r))
+
+    l1, dual, rr = jax.lax.map(_one_metrics, (L, Gamma, M))
     metrics = {
         "l1": l1,
         "residual": jnp.sqrt(rr),
@@ -328,6 +353,64 @@ def admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
     """Public batched entry point (see _admm_train_batch)."""
     return _batch_trainer(cfg, opt)(params, opt_state, A, levels_tuple,
                                     x_g, node_mask, keys)
+
+
+# ------------------ data-parallel sharded training (DESIGN.md §8) ------
+@functools.lru_cache(maxsize=32)
+def sharded_train_fn(cfg: PFMConfig, opt, mesh, axis: str = "data"):
+    """The shard_map'd (unjitted) batched trainer — the jit / .lower()
+    target for both live training and the dry-run. Trace it under
+    `kops.mesh_scope(mesh)` so kernel wrappers lower to the chunked-XLA
+    equivalents (pallas_call has no partitioning rule, DESIGN.md §4)."""
+    from repro.distributed.sharding import get_shard_map, pfm_train_specs
+    in_specs, out_specs = pfm_train_specs(axis)
+    fn = functools.partial(_admm_train_batch, cfg=cfg, opt=opt,
+                           axis_name=axis)
+    # check_rep=False: replication of the P() outputs (params/opt_state)
+    # is guaranteed by construction — every device applies the same Adam
+    # update to the same replicated state from the same psum'd grads —
+    # but the checker cannot see through fori_loop carries.
+    return get_shard_map()(fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_trainer(cfg: PFMConfig, opt, mesh, axis: str):
+    """One jitted sharded trainer per (cfg, opt, mesh, axis); kernel
+    dispatch happens at trace time, so only the first call per bucket
+    signature pays for the mesh scope."""
+    from repro.kernels import ops as kops
+    jitted = jax.jit(sharded_train_fn(cfg, opt, mesh, axis))
+
+    def call(params, opt_state, A, levels_tuple, x_g, node_mask, keys,
+             batch_weight):
+        with kops.mesh_scope(mesh):
+            return jitted(params, opt_state, A, levels_tuple, x_g,
+                          node_mask, keys, batch_weight)
+    return call
+
+
+def admm_train_batch_sharded(params, opt_state, A, levels_tuple, x_g,
+                             node_mask, keys, batch_weight, *,
+                             cfg: PFMConfig, opt, mesh,
+                             axis: str = "data"):
+    """Data-parallel bucketed ADMM over a 1-D `axis` mesh dimension.
+
+    The bucket's leading B dim (which MUST be a multiple of the axis
+    size — pad with core/pfm.pad_bucket) is sharded over the mesh;
+    θ/Adam state are replicated and every device applies the identical
+    shared Adam step from the psum of the per-shard θ-grad sums.
+    batch_weight: (B,) 0/1 vector, 0 on padding rows so they contribute
+    exactly zero to the psum'd grads.
+
+    Per-matrix ADMM dynamics are device-local and identical to
+    `admm_train_batch` (with a frozen encoder the two are bitwise equal
+    per matrix on a given backend — pinned by tests/test_sharded_pfm);
+    at lr > 0 the paths differ only in grad summation order.
+    """
+    return _sharded_trainer(cfg, opt, mesh, axis)(
+        params, opt_state, A, levels_tuple, x_g, node_mask, keys,
+        batch_weight)
 
 
 # ------------------------- alternative losses (ablation baselines) ------

@@ -21,7 +21,8 @@ from repro.core import admm as admm_mod
 from repro.core import encoder as enc
 from repro.core import reorder
 from repro.core.admm import (PFMConfig, admm_train_batch,
-                             admm_train_matrix, predict_scores)
+                             admm_train_batch_sharded, admm_train_matrix,
+                             predict_scores)
 from repro.core.graph import (GraphData, build_hierarchy, dense_padded,
                               stack_hierarchies)
 from repro.core.spectral import (pretrain_spectral_net, spectral_embedding)
@@ -78,6 +79,37 @@ def pack_buckets(prepped: Sequence[PreparedMatrix],
     return buckets
 
 
+PAD_NAME = "__pad__"
+
+
+def pad_bucket(bucket: BucketBatch, multiple: int):
+    """Pad a bucket's batch dim up to a multiple of the device count so
+    it shards evenly (DESIGN.md §8). Padding rows *duplicate* real
+    matrices (row i % B) rather than filling zeros. This duplication is
+    THE finiteness guarantee for the masked θ-loss: the mask only zeroes
+    a pad row's cotangent, and backprop of a zero cotangent through a
+    non-finite forward still yields NaN (0 * inf) — do not replace the
+    duplication with zero-fill. Returns (padded_bucket, weight) where
+    weight is (B_pad,) f32 with 1.0 on real rows, 0.0 on padding."""
+    B = bucket.size
+    extra = (-B) % multiple
+    weight = jnp.concatenate(
+        [jnp.ones((B,), jnp.float32), jnp.zeros((extra,), jnp.float32)])
+    if extra == 0:
+        return bucket, weight
+    idx = jnp.arange(extra) % B
+
+    def pad(x):
+        return jnp.concatenate([x, x[idx]], axis=0)
+    padded = BucketBatch(
+        names=bucket.names + [PAD_NAME] * extra,
+        A=pad(bucket.A),
+        levels=jax.tree_util.tree_map(pad, bucket.levels),
+        x_g=pad(bucket.x_g),
+        node_mask=pad(bucket.node_mask))
+    return padded, weight
+
+
 class PFM:
     def __init__(self, cfg: PFMConfig | None = None, seed: int = 0,
                  se_max_n: int = 600, x_mode: str = "se"):
@@ -127,7 +159,7 @@ class PFM:
 
     # ------------------------------------------------------------ train
     def fit(self, matrices: Sequence, epochs: int = 1, verbose=False, *,
-            batched: bool = True, max_batch: int = 32):
+            batched: bool = True, max_batch: int = 32, mesh=None):
         """Algorithm 1: outer epochs over the training set, inner ADMM
         per matrix. `matrices` may be scipy matrices or (name, A) pairs.
 
@@ -137,7 +169,16 @@ class PFM:
         theta-gradients accumulate across each bucket into one shared
         Adam step per ADMM iteration (DESIGN.md §2). batched=False keeps
         the paper-literal sequential path (one Adam step per matrix per
-        iteration; also the path used under 2-D sharding)."""
+        iteration).
+
+        mesh, when given (implies batched), runs each bucket through the
+        data-parallel shard_map trainer (DESIGN.md §8): the batch dim is
+        padded to a multiple of the mesh's data-axis size (pad rows
+        carry weight 0 and contribute nothing to the θ-grads), per-
+        matrix ADMM state is batch-sharded, θ is replicated, and the
+        per-shard θ-grad sums are psum'd into one shared Adam step. Per-
+        matrix keys match the single-device bucketed path, so with a
+        frozen encoder the two are exactly equivalent per matrix."""
         prepped = []
         for i, item in enumerate(matrices):
             if isinstance(item, PreparedMatrix):
@@ -146,14 +187,9 @@ class PFM:
             name, A = item if isinstance(item, tuple) else (f"m{i}", item)
             prepped.append(self.prepare(A, name))
 
-        from repro.distributed.constrain import pfm_2d
-        if pfm_2d():
-            # 2-D (data, model) sharded training lowers the sequential
-            # admm_train_matrix (the batched path carries no sharding
-            # constraints yet — DESIGN.md §2 residual scope)
-            batched = False
-
         key = jax.random.PRNGKey(self.seed + 1)
+        if mesh is not None:
+            batched = True  # the sharded trainer IS the batched trainer
         if not batched:
             for epoch in range(epochs):
                 for pm in prepped:
@@ -176,15 +212,50 @@ class PFM:
             return self.history
 
         buckets = pack_buckets(prepped, max_batch=max_batch)
-        for epoch in range(epochs):
+        padded = None
+        if mesh is not None:
+            from repro.distributed.sharding import pfm_batch_shardings
+            data_axis = "data" if "data" in mesh.axis_names \
+                else mesh.axis_names[0]
+            # pad + place each bucket on the mesh ONCE (epochs reuse the
+            # same batch-sharded arrays; only the keys change per epoch)
+            padded = []
             for bucket in buckets:
+                pb, w = pad_bucket(bucket, mesh.shape[data_axis])
+                tree = {"A": pb.A, "levels": pb.levels, "x_g": pb.x_g,
+                        "node_mask": pb.node_mask, "weight": w}
+                tree = jax.device_put(
+                    tree, pfm_batch_shardings(mesh, tree,
+                                              axis=data_axis))
+                padded.append((pb.size, tree))
+
+        for epoch in range(epochs):
+            for b_idx, bucket in enumerate(buckets):
                 key, sub = jax.random.split(key)
+                # keys for the REAL matrices first (identical to the
+                # single-device path), then replicated onto pad rows
                 keys = jax.random.split(sub, bucket.size)
                 t0 = time.perf_counter()
-                self.params, self.opt_state, metrics = admm_train_batch(
-                    self.params, self.opt_state, bucket.A, bucket.levels,
-                    bucket.x_g, bucket.node_mask, keys, cfg=self.cfg,
-                    opt=self.opt)
+                if mesh is None:
+                    self.params, self.opt_state, metrics = \
+                        admm_train_batch(
+                            self.params, self.opt_state, bucket.A,
+                            bucket.levels, bucket.x_g, bucket.node_mask,
+                            keys, cfg=self.cfg, opt=self.opt)
+                else:
+                    size_p, tree = padded[b_idx]
+                    extra = size_p - bucket.size
+                    if extra:
+                        keys = jnp.concatenate(
+                            [keys,
+                             keys[jnp.arange(extra) % bucket.size]])
+                    self.params, self.opt_state, metrics = \
+                        admm_train_batch_sharded(
+                            self.params, self.opt_state, tree["A"],
+                            tree["levels"], tree["x_g"],
+                            tree["node_mask"], keys, tree["weight"],
+                            cfg=self.cfg, opt=self.opt, mesh=mesh,
+                            axis=data_axis)
                 # block on the async dispatch so wall_s measures compute
                 metrics = {k: np.asarray(v) for k, v in metrics.items()}
                 jax.block_until_ready(self.params)

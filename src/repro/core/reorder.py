@@ -51,10 +51,8 @@ def rank_distribution(scores: jnp.ndarray, sigma: float,
     lower = (pos[None, :] - 0.5 - mu[:, None]) / sd[:, None]
     # cancellation in ndtr(upper)-ndtr(lower) can go slightly negative
     p_hat = jnp.maximum(_ndtr(upper) - _ndtr(lower), 0.0)
-    from repro.distributed.constrain import constrain, pfm_2d
-    if pfm_2d():
-        p_hat = constrain(p_hat, "data", "model")
-    return p_hat
+    from repro.distributed.constrain import constrain_2d
+    return constrain_2d(p_hat)
 
 
 def _gumbel_log_p(p_hat, u, tau, noise_scale):
@@ -82,9 +80,8 @@ def gumbel_sinkhorn(p_hat: jnp.ndarray, key, *, tau: float = 0.3,
     """Gumbel-Sinkhorn on log P_hat (paper Algorithm 2)."""
     u = jax.random.uniform(key, p_hat.shape)
     log_p = _gumbel_log_p(p_hat, u, tau, noise_scale)
-    from repro.distributed.constrain import constrain, pfm_2d
-    if pfm_2d():
-        log_p = constrain(log_p, "data", "model")
+    from repro.distributed.constrain import constrain_2d
+    log_p = constrain_2d(log_p)
     return jnp.exp(_sinkhorn_normalize(log_p, n_iters, use_kernel))
 
 
@@ -118,9 +115,8 @@ def soft_permutation_batch(scores, keys, *, sigma: float = 1e-3,
     # sees exactly the noise the sequential path would draw from its key
     u = jax.vmap(lambda k, p: jax.random.uniform(k, p.shape))(keys, p_hat)
     log_p = _gumbel_log_p(p_hat, u, tau, noise_scale)
-    from repro.distributed.constrain import constrain, pfm_2d
-    if pfm_2d():
-        log_p = constrain(log_p, None, "data", "model")
+    from repro.distributed.constrain import constrain_2d
+    log_p = constrain_2d(log_p)
     log_p = _sinkhorn_normalize(log_p, n_iters, use_kernel)
     return jnp.swapaxes(jnp.exp(log_p), -1, -2)
 

@@ -1,10 +1,38 @@
-"""Best-effort sharding constraints: no-ops outside a mesh context."""
+"""Sharding constraints for PFM's dense training tensors.
+
+Two distribution regimes use these helpers:
+
+  * **1-D data-parallel training** (`admm_train_batch_sharded`,
+    DESIGN.md §8): the bucket's (B, n, n) state is explicitly
+    batch-sharded via shard_map PartitionSpecs (distributed/sharding.py
+    `pfm_batch_spec`); no in-graph constraints are needed there.
+  * **2-D GSPMD lowering** of the *sequential* single-matrix step at
+    production n (launch/pfm_step.py `train_8k`): the (n, n)
+    intermediates (SoftRank P_hat, Sinkhorn log_p, ADMM L/Γ/M) are
+    annotated with a trailing (data, model) constraint so GSPMD keeps
+    them 2-D-sharded instead of replicating through the elementwise
+    chain. `pfm_axes_scope` activates those annotations at trace time.
+
+`constrain` stays best-effort: outside any mesh context the
+with_sharding_constraint call fails and the value passes through
+unchanged, so the same code traces on a laptop and on a pod.
+"""
 from __future__ import annotations
 
+import contextlib
 import os
 
 import jax
 from jax.sharding import PartitionSpec as P
+
+# Trailing-2-dims constraint axes for the dense (n, n) PFM tensors, or
+# None when inactive. REPRO_PFM_SHARD2D=1 (the historical env lever)
+# still activates the default ("data", "model") annotation globally; it
+# no longer forces PFM.fit onto the sequential path — batched training
+# with a mesh goes through fit(mesh=...) instead.
+_PFM_AXES: tuple | None = (
+    ("data", "model")
+    if os.environ.get("REPRO_PFM_SHARD2D", "0") == "1" else None)
 
 
 def constrain(x, *spec):
@@ -14,7 +42,37 @@ def constrain(x, *spec):
         return x
 
 
-def pfm_2d() -> bool:
-    """§Perf lever: 2-D (data, model) sharding of PFM's (n, n) training
-    tensors (SoftRank / Sinkhorn / ADMM intermediates)."""
-    return os.environ.get("REPRO_PFM_SHARD2D", "0") == "1"
+def set_pfm_axes(axes: tuple | None):
+    """Set the (data, model)-style axis pair `constrain_2d` annotates
+    with; None disables the annotations (the default)."""
+    global _PFM_AXES
+    _PFM_AXES = tuple(axes) if axes is not None else None
+
+
+def pfm_axes() -> tuple | None:
+    return _PFM_AXES
+
+
+@contextlib.contextmanager
+def pfm_axes_scope(axes: tuple | None = ("data", "model")):
+    """Activate 2-D constraints while tracing a GSPMD-sharded PFM step
+    (launch/pfm_step.py). Trace-time flag: wrap the .lower()/first call,
+    not the execution."""
+    prev = _PFM_AXES
+    set_pfm_axes(axes)
+    try:
+        yield
+    finally:
+        set_pfm_axes(prev)
+
+
+def constrain_2d(x):
+    """Annotate the trailing two (n, n) dims of x with the active PFM
+    axis pair, leading dims (batch) unsharded. No-op when no axis pair
+    is active or x is not at least 2-D."""
+    if _PFM_AXES is None:
+        return x
+    ndim = getattr(x, "ndim", 0)
+    if ndim < 2:
+        return x
+    return constrain(x, *((None,) * (ndim - 2) + _PFM_AXES))

@@ -197,3 +197,53 @@ def attach(shape_tree, sharding_tree):
     return jax.tree_util.tree_map(
         lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
         shape_tree, sharding_tree)
+
+
+def get_shard_map():
+    """jax.shard_map became a top-level export in jax 0.4.39; fall back
+    to its experimental home on older pins (this repo pins 0.4.37)."""
+    try:
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    return shard_map
+
+
+# ------------------- PFM data-parallel ADMM training (DESIGN.md §8) ----
+def pfm_batch_spec(axis: str = "data") -> P:
+    """Leading-batch-dim spec for every bucket tensor of the batched
+    ADMM trainer (A, stacked hierarchy leaves, x_g, node_mask, keys,
+    batch weights): shard dim 0 over the data axis, everything trailing
+    stays local. PartitionSpecs act as pytree *prefixes* inside
+    shard_map, so one leaf spec covers whole subtrees."""
+    return P(axis)
+
+
+def pfm_train_specs(axis: str = "data"):
+    """(in_specs, out_specs) for shard_map-ing the batched ADMM trainer
+    `_admm_train_batch(params, opt_state, A, levels, x_g, node_mask,
+    keys, batch_weight) -> (params, opt_state, metrics)`.
+
+    θ (params) and the Adam state are replicated — every device applies
+    the identical update from the psum'd θ-grads — while the per-matrix
+    (B, n, n) ADMM state and the (B,) metrics are batch-sharded."""
+    b = pfm_batch_spec(axis)
+    repl = P()
+    in_specs = (repl, repl, b, b, b, b, b, b)
+    out_specs = (repl, repl, b)
+    return in_specs, out_specs
+
+
+def pfm_batch_shardings(mesh, bucket_tree, axis: str = "data"):
+    """NamedShardings for placing a bucket's stacked tensors on the mesh
+    before the sharded trainer runs (avoids a gather-then-scatter on
+    first touch). Leaves whose leading dim the axis does not divide are
+    replicated — callers should pad B first (core/pfm.pad_bucket)."""
+    d = mesh.shape[axis]
+
+    def one(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim == 0 or leaf.shape[0] % d != 0:
+            return NamedSharding(mesh, P(*([None] * ndim)))
+        return NamedSharding(mesh, P(*((axis,) + (None,) * (ndim - 1))))
+    return jax.tree_util.tree_map(one, bucket_tree)

@@ -18,6 +18,7 @@ Set REPRO_FORCE_REF=1 to bypass kernels entirely (debugging aid).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 
@@ -32,6 +33,7 @@ from repro.kernels.spmm import bcsr_ell_pack, spmm_pallas  # noqa: F401
 
 
 _DIST_MODE = False
+_ACTIVE_MESH = None
 
 
 def set_dist_mode(on: bool):
@@ -44,8 +46,41 @@ def set_dist_mode(on: bool):
     _DIST_MODE = bool(on)
 
 
+def set_active_mesh(mesh):
+    """Declare the mesh subsequent wrapper calls trace under. A mesh
+    spanning >1 device turns on distributed dispatch (same effect as
+    `set_dist_mode(True)`); `None` or a single-device mesh turns it off.
+    Dispatch decisions are made at trace time, so flip this around the
+    *tracing* call (see `mesh_scope`), not around execution."""
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def active_mesh():
+    return _ACTIVE_MESH
+
+
+@contextlib.contextmanager
+def mesh_scope(mesh):
+    """Context manager form of `set_active_mesh` (restores the previous
+    mesh on exit). Wrap the first call of a jitted sharded function so
+    its trace sees distributed dispatch; cached executions don't care."""
+    prev = _ACTIVE_MESH
+    set_active_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_active_mesh(prev)
+
+
 def dist_mode() -> bool:
-    return _DIST_MODE
+    """True when kernel wrappers should lower to the chunked-XLA
+    equivalents: explicit `set_dist_mode(True)`, or an active >1-device
+    mesh (`set_active_mesh` / `mesh_scope`)."""
+    if _DIST_MODE:
+        return True
+    return _ACTIVE_MESH is not None and \
+        getattr(_ACTIVE_MESH, "size", 1) > 1
 
 
 def _on_tpu() -> bool:
@@ -82,11 +117,17 @@ def sinkhorn(log_p: jnp.ndarray, n_iters: int = 20) -> jnp.ndarray:
     """log_p: (n, m) or batched (B, n, m) — a batched input runs the
     whole bucket in one kernel launch (leading grid axis). The VMEM
     envelope is per-matrix (each grid step holds one (n, m) panel), so
-    the n limit is independent of B."""
+    the n limit is independent of B. Under distributed dispatch
+    (`dist_mode`) the batch-scanned XLA equivalent runs instead — inside
+    shard_map this sees the *per-shard* (B/D, n, m) shape, so the same
+    per-panel envelope reasoning applies to whatever backend executes
+    the scan body."""
     n, m = log_p.shape[-2:]
     if _force_ref() or log_p.ndim > 3 or n > SINKHORN_VMEM_LIMIT \
             or n % 128 != 0 or m % 128 != 0:
         return ref.sinkhorn_ref(log_p, n_iters)
+    if dist_mode():
+        return ref.sinkhorn_chunked(log_p, n_iters)
     return _sinkhorn_cvjp(log_p, n_iters)
 
 
@@ -97,6 +138,9 @@ def prox_tril(L, G, eta, thresh) -> jnp.ndarray:
     be per-matrix (B,) vectors — one launch covers the whole bucket."""
     n, m = L.shape[-2:]
     if _force_ref() or L.ndim > 3 or n % 128 != 0 or m % 128 != 0:
+        return ref.prox_tril_ref(L, G, eta, thresh)
+    if dist_mode():
+        # elementwise — the oracle IS the shard-friendly XLA form
         return ref.prox_tril_ref(L, G, eta, thresh)
     block = 256 if n % 256 == 0 else 128
     return prox_tril_pallas(L, G, eta, thresh, block=block,
@@ -185,7 +229,7 @@ def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
     d = q.shape[3]
     if sm_scale is None:
         sm_scale = float(1.0 / (d ** 0.5))
-    if _DIST_MODE:
+    if dist_mode():
         return ref.attention_chunked(q, k, v, causal=causal,
                                      window=window, sm_scale=sm_scale)
     bq = min(block_q, sq)
@@ -198,6 +242,6 @@ def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
 
 # ----------------------------------------------------------------- spmm
 def spmm(values, col_ids, x):
-    if _force_ref():
+    if _force_ref() or dist_mode():
         return ref.spmm_ref(values, col_ids, x)
     return spmm_pallas(values, col_ids, x, interpret=_interpret())

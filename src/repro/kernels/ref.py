@@ -18,6 +18,23 @@ def sinkhorn_ref(log_p: jnp.ndarray, n_iters: int) -> jnp.ndarray:
     return x
 
 
+def sinkhorn_chunked(log_p: jnp.ndarray, n_iters: int) -> jnp.ndarray:
+    """Shard-friendly Sinkhorn: lax.scan over the batch axis, one (n, m)
+    panel resident per step — the XLA analogue of the Pallas kernel's
+    batch grid axis. Used in distributed (GSPMD / shard_map) lowering
+    where a pallas_call cannot be partitioned; per-panel math is
+    identical to `sinkhorn_ref`, so results are bitwise equal on a given
+    backend. 2-D inputs degenerate to the plain reference."""
+    if log_p.ndim == 2:
+        return sinkhorn_ref(log_p, n_iters)
+
+    def one(_, lp):
+        return None, sinkhorn_ref(lp, n_iters)
+
+    _, out = jax.lax.scan(one, None, log_p)
+    return out
+
+
 def _bcast_scalar(s, ndim: int):
     """Lift a scalar or (B,) per-matrix vector to broadcast against a
     (..., n, m) operand."""

@@ -26,6 +26,15 @@ def make_host_mesh():
     return jax.make_mesh((1, n), ("data", "model"))
 
 
+def make_data_mesh(n: int | None = None):
+    """1-D data-parallel mesh over n (default: all) local devices — the
+    mesh shape PFM.fit(mesh=...) shards its batch buckets over. On CPU,
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 simulates the
+    multi-device case (tests/test_sharded_pfm.py, DESIGN.md §8)."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
 # --- TPU v5e-ish hardware constants (per chip) for the roofline terms
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

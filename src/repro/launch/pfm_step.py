@@ -7,10 +7,13 @@ at production matrix sizes, with the dense (n, n) inner tensors sharded
 single-device memory.
 
 Shapes:
-  train_8k   — n=8192 reorder-training step (dense path)
-  infer_512k — n=524288 inference (GNN scores + argsort only; the dense
-               path never materializes at inference, matching Table 1's
-               O(GNN) complexity claim)
+  train_8k    — n=8192 reorder-training step (dense path, 2-D GSPMD)
+  train_64x1k — B=64 matrices at n=1024: the data-parallel bucketed
+                trainer (DESIGN.md §8) shard_map'd over the mesh's data
+                axis, θ replicated, θ-grads psum'd
+  infer_512k  — n=524288 inference (GNN scores + argsort only; the dense
+                path never materializes at inference, matching Table 1's
+                O(GNN) complexity claim)
 """
 from __future__ import annotations
 
@@ -26,6 +29,9 @@ from repro.optim import adam
 
 PFM_SHAPES = {
     "train_8k": dict(n=8192, kind="train"),
+    # data-parallel bucketed training (DESIGN.md §8): B matrices of the
+    # same shape bucket sharded over the mesh's data axis, θ replicated
+    "train_64x1k": dict(n=1024, B=64, kind="train_batch"),
     "infer_512k": dict(n=524288, kind="infer"),
 }
 
@@ -62,6 +68,26 @@ def pfm_input_specs(shape_name: str, mesh):
     repl = NamedSharding(mesh, P())
     row = NamedSharding(mesh, P("data"))
 
+    if sh["kind"] == "train_batch":
+        # batch-sharded bucket (DESIGN.md §8): every tensor leads with B
+        # split over the data axis; trailing dims local
+        B = sh["B"]
+        batch = NamedSharding(mesh, P("data"))
+
+        def b_struct(s):
+            return jax.ShapeDtypeStruct((B,) + s.shape, s.dtype,
+                                        sharding=batch)
+        levels = jax.tree_util.tree_map(b_struct, _synthetic_levels(n))
+        return dict(
+            levels=levels,
+            x_g=b_struct(jax.ShapeDtypeStruct((n, 1), jnp.float32)),
+            node_mask=b_struct(jax.ShapeDtypeStruct((n,), jnp.float32)),
+            A=b_struct(jax.ShapeDtypeStruct((n, n), jnp.float32)),
+            keys=b_struct(jax.ShapeDtypeStruct((2,), jnp.uint32)),
+            weight=jax.ShapeDtypeStruct((B,), jnp.float32,
+                                        sharding=batch),
+        )
+
     levels = _synthetic_levels(n)
     levels = jax.tree_util.tree_map(
         lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=repl),
@@ -85,6 +111,15 @@ def make_pfm_train_step(cfg: PFMConfig, opt):
             params, opt_state, A, levels, x_g, node_mask, key,
             cfg=cfg, opt=opt)
     return step
+
+
+def make_pfm_train_batch_step(cfg: PFMConfig, opt, mesh,
+                              axis: str = "data"):
+    """The data-parallel bucketed trainer (DESIGN.md §8) as a lowering
+    target: shard_map'd over the mesh's data axis, θ-grads psum'd into
+    one replicated Adam step per ADMM iteration. Trace under
+    kops.mesh_scope(mesh) so kernels lower to their chunked-XLA forms."""
+    return admm_mod.sharded_train_fn(cfg, opt, mesh, axis)
 
 
 def make_pfm_infer_step(cfg: PFMConfig):

@@ -243,8 +243,8 @@ def _moe_ffn_shard_map(params, x, cfg):
             aux = jax.lax.pmean(aux, a)
         return combined.reshape(b_loc, s_loc, d), aux
 
-    from jax import shard_map
-    out, aux = shard_map(
+    from repro.distributed.sharding import get_shard_map
+    out, aux = get_shard_map()(
         body, mesh=mesh,
         in_specs=(p_specs, P(dp, "model", None)),
         out_specs=(P(dp, "model", None), P()),

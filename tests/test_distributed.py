@@ -93,6 +93,29 @@ def test_input_specs_well_formed(arch, shape):
         assert all(d > 0 for d in leaf.shape)
 
 
+def test_pfm_train_specs_match_trainer_signature():
+    """(in_specs, out_specs) for the shard_map'd batched ADMM trainer
+    (DESIGN.md §8): 8 args (params, opt_state, A, levels, x_g,
+    node_mask, keys, batch_weight) -> 3 outputs (params, opt_state,
+    metrics); θ/Adam replicated, bucket tensors batch-sharded."""
+    in_specs, out_specs = shd.pfm_train_specs("data")
+    assert len(in_specs) == 8 and len(out_specs) == 3
+    assert in_specs[0] == P() and in_specs[1] == P()
+    assert all(s == P("data") for s in in_specs[2:])
+    assert out_specs[0] == P() and out_specs[1] == P()
+    assert out_specs[2] == P("data")
+
+
+def test_pfm_batch_shardings_lead_dim_only():
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"A": jnp.zeros((4, 8, 8)), "w": jnp.zeros((4,)),
+            "count": jnp.zeros(())}
+    sh = shd.pfm_batch_shardings(mesh, tree)
+    assert sh["A"].spec == P("data", None, None)
+    assert sh["w"].spec == P("data")
+    assert sh["count"].spec == P()
+
+
 def test_long_500k_only_for_subquadratic():
     runs = [a for a in ARCHS
             if api.shape_applicable(get_config(a), "long_500k")[0]]

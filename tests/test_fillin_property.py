@@ -1,0 +1,89 @@
+"""Property-based tests for core/fillin.py (via tests/_hyp_compat.py, so
+they degrade to deterministic boundary/midpoint sampling when hypothesis
+is absent).
+
+`symbolic_cholesky_nnz` is the etree-with-path-compression up-looking
+count; the oracle here is the textbook O(n^3) dense symbolic elimination
+— eliminate column k, connect every pair of below-diagonal neighbours —
+which is trivially correct by definition of fill-in.
+"""
+import numpy as np
+import scipy.sparse as sp
+from _hyp_compat import given, settings, st
+
+from repro.core import fillin
+from repro.core.graph import symmetrize_pattern
+
+
+def _random_pattern(n: int, density: float, seed: int) -> sp.csr_matrix:
+    """Random (generally unsymmetric) sparse pattern; fillin symmetrizes
+    internally, so this also covers the structurally-unsymmetric case."""
+    rng = np.random.default_rng(seed)
+    m = (rng.random((n, n)) < density).astype(np.float64)
+    return sp.csr_matrix(m)
+
+
+def _dense_symbolic_nnz(A: sp.spmatrix,
+                        perm: np.ndarray | None = None) -> int:
+    """Brute-force dense symbolic Cholesky: nnz(L) incl. diagonal."""
+    S = symmetrize_pattern(A)
+    if perm is not None:
+        S = S[perm][:, perm]
+    D = np.asarray(S.todense()) != 0
+    n = D.shape[0]
+    np.fill_diagonal(D, True)
+    for k in range(n):
+        below = np.where(D[k + 1:, k])[0] + k + 1
+        # eliminating k connects every pair of its remaining neighbours
+        D[np.ix_(below, below)] = True
+        D[below, below] = True  # keep the diagonal explicit
+    return int(np.sum(np.tril(D)))
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(6, 48), seed=st.integers(0, 10_000))
+def test_symbolic_nnz_matches_dense_oracle(n, seed):
+    A = _random_pattern(n, density=0.15, seed=seed)
+    nnz_l, parent = fillin.symbolic_cholesky_nnz(A)
+    assert nnz_l == _dense_symbolic_nnz(A)
+    # etree sanity: parents strictly above children, roots are -1
+    assert parent.shape == (n,)
+    for i, p in enumerate(parent):
+        assert p == -1 or p > i
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(6, 48), seed=st.integers(0, 10_000))
+def test_symbolic_nnz_matches_dense_oracle_under_permutation(n, seed):
+    A = _random_pattern(n, density=0.2, seed=seed)
+    perm = np.random.default_rng(seed + 1).permutation(n)
+    assert fillin.symbolic_cholesky_nnz(A, perm)[0] == \
+        _dense_symbolic_nnz(A, perm)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(6, 48), seed=st.integers(0, 10_000))
+def test_symbolic_nnz_permutation_consistent_with_apply_perm(n, seed):
+    """Passing perm to symbolic_cholesky_nnz must equal reordering the
+    matrix first with apply_perm (P A P^T) and counting naturally —
+    permutation and symmetrization commute."""
+    A = _random_pattern(n, density=0.18, seed=seed)
+    perm = np.random.default_rng(seed + 2).permutation(n)
+    via_arg = fillin.symbolic_cholesky_nnz(A, perm)[0]
+    via_apply = fillin.symbolic_cholesky_nnz(
+        fillin.apply_perm(A, perm), None)[0]
+    assert via_arg == via_apply
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(6, 40), seed=st.integers(0, 10_000))
+def test_symbolic_nnz_bounds(n, seed):
+    """nnz(L) is at least the lower-tri pattern of A+A^T (no lost
+    entries) and at most the full dense triangle; identity perm is a
+    no-op."""
+    A = _random_pattern(n, density=0.12, seed=seed)
+    S = symmetrize_pattern(A)
+    base = n + sp.tril(S, k=-1).nnz
+    nnz_l, _ = fillin.symbolic_cholesky_nnz(A)
+    assert base <= nnz_l <= n * (n + 1) // 2
+    assert fillin.symbolic_cholesky_nnz(A, np.arange(n))[0] == nnz_l

@@ -1,0 +1,170 @@
+"""Dispatch-table tests for kernels/ops.py: the distributed mode
+(set_dist_mode / active mesh) must route every kernel wrapper to its
+shard-friendly chunked-XLA equivalent, the results must match the
+default (Pallas) path on the same inputs, and REPRO_FORCE_REF must win
+over everything."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _clean_dispatch_state(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_REF", raising=False)
+    yield
+    kops.set_dist_mode(False)
+    kops.set_active_mesh(None)
+
+
+def _spy(module, name, monkeypatch):
+    calls = []
+    orig = getattr(module, name)
+
+    def wrapper(*a, **kw):
+        calls.append(name)
+        return orig(*a, **kw)
+    monkeypatch.setattr(module, name, wrapper)
+    return calls
+
+
+# ----------------------------------------------------- mode predicates
+def test_dist_mode_flag_and_active_mesh():
+    assert not kops.dist_mode()
+    kops.set_dist_mode(True)
+    assert kops.dist_mode()
+    kops.set_dist_mode(False)
+    # >1-device mesh activates; single-device mesh does not
+    kops.set_active_mesh(types.SimpleNamespace(size=8))
+    assert kops.dist_mode()
+    kops.set_active_mesh(types.SimpleNamespace(size=1))
+    assert not kops.dist_mode()
+    kops.set_active_mesh(None)
+    assert not kops.dist_mode()
+
+
+def test_mesh_scope_restores_previous_mesh():
+    outer = types.SimpleNamespace(size=4)
+    kops.set_active_mesh(outer)
+    with kops.mesh_scope(types.SimpleNamespace(size=8)):
+        assert kops.dist_mode()
+    assert kops.active_mesh() is outer
+    kops.set_active_mesh(None)
+
+
+# --------------------------------------------------------- sinkhorn
+def test_sinkhorn_dist_selects_chunked_and_matches_pallas(monkeypatch):
+    lp = jax.random.normal(KEY, (3, 128, 128))
+    base = np.asarray(kops.sinkhorn(lp, n_iters=8))  # Pallas interpret
+    calls = _spy(kref, "sinkhorn_chunked", monkeypatch)
+    kops.set_dist_mode(True)
+    out = np.asarray(kops.sinkhorn(lp, n_iters=8))
+    assert calls == ["sinkhorn_chunked"]
+    np.testing.assert_array_equal(out, base)
+
+
+def test_sinkhorn_active_mesh_selects_chunked(monkeypatch):
+    lp = jax.random.normal(KEY, (2, 128, 128))
+    calls = _spy(kref, "sinkhorn_chunked", monkeypatch)
+    with kops.mesh_scope(types.SimpleNamespace(size=8)):
+        kops.sinkhorn(lp, n_iters=4)
+    assert calls == ["sinkhorn_chunked"]
+    # outside the scope the Pallas path is back
+    kops.sinkhorn(lp, n_iters=4)
+    assert calls == ["sinkhorn_chunked"]
+
+
+def test_sinkhorn_force_ref_wins_over_dist(monkeypatch):
+    lp = jax.random.normal(KEY, (2, 128, 128))
+    want = np.asarray(kref.sinkhorn_ref(lp, 6))
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    monkeypatch.setattr(
+        kref, "sinkhorn_chunked",
+        lambda *a, **k: pytest.fail("chunked selected under FORCE_REF"))
+    kops.set_dist_mode(True)
+    np.testing.assert_array_equal(np.asarray(kops.sinkhorn(lp, 6)), want)
+
+
+def test_sinkhorn_misaligned_shape_still_falls_to_ref(monkeypatch):
+    """The oracle fallback (shape outside the kernel envelope) applies
+    in dist mode too — chunked is only for kernel-eligible shapes."""
+    lp = jax.random.normal(KEY, (2, 96, 96))  # 96 % 128 != 0
+    calls = _spy(kref, "sinkhorn_chunked", monkeypatch)
+    kops.set_dist_mode(True)
+    out = np.asarray(kops.sinkhorn(lp, 5))
+    assert calls == []
+    np.testing.assert_array_equal(out,
+                                  np.asarray(kref.sinkhorn_ref(lp, 5)))
+
+
+# --------------------------------------------------------- prox_tril
+def test_prox_tril_dist_selects_ref_and_matches_pallas(monkeypatch):
+    L = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 128, 128))
+    G = jax.random.normal(jax.random.fold_in(KEY, 2), (4, 128, 128))
+    t = 0.01 * jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 3),
+                                         (4,)))
+    # compare under jit — that is how the trainer runs both paths, and
+    # XLA's fusion (fma) choices only line up bitwise within jit
+    base = np.asarray(
+        jax.jit(lambda l, g, s: kops.prox_tril(l, g, s, s))(L, G, t))
+    calls = _spy(kref, "prox_tril_ref", monkeypatch)
+    kops.set_dist_mode(True)
+    out = np.asarray(
+        jax.jit(lambda l, g, s: kops.prox_tril(l, g, s, s))(L, G, t))
+    assert calls == ["prox_tril_ref"]
+    np.testing.assert_array_equal(out, base)
+
+
+# ---------------------------------------------------- flash attention
+def test_flash_attention_dist_selects_chunked(monkeypatch):
+    q = jax.random.normal(KEY, (1, 2, 64, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 64, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, 64, 16))
+    base = np.asarray(kops.flash_attention(q, k, v))  # kernel path
+    calls = _spy(kref, "attention_chunked", monkeypatch)
+    kops.set_dist_mode(True)
+    out = np.asarray(kops.flash_attention(q, k, v))
+    assert calls == ["attention_chunked"]
+    np.testing.assert_allclose(out, base, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_active_mesh_selects_chunked(monkeypatch):
+    q = jax.random.normal(KEY, (1, 2, 64, 16))
+    calls = _spy(kref, "attention_chunked", monkeypatch)
+    with kops.mesh_scope(types.SimpleNamespace(size=2)):
+        kops.flash_attention(q, q, q)
+    assert calls == ["attention_chunked"]
+
+
+# ----------------------------------------------------------------- spmm
+def test_spmm_dist_selects_ref(monkeypatch):
+    values = jax.random.normal(KEY, (1, 1, 128, 128))
+    col_ids = jnp.zeros((1, 1), jnp.int32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (128, 128))
+    want = np.asarray(kref.spmm_ref(values, col_ids, x))
+    calls = _spy(kref, "spmm_ref", monkeypatch)
+    kops.set_dist_mode(True)
+    out = np.asarray(kops.spmm(values, col_ids, x))
+    assert calls == ["spmm_ref"]
+    np.testing.assert_array_equal(out, want)
+
+
+# ------------------------------------------ chunked == batched oracle
+def test_sinkhorn_chunked_bitwise_matches_ref():
+    """The scan-over-batch form is per-panel identical math — results
+    must be bitwise equal to the batched oracle (this is what makes the
+    sharded trainer's lr=0 parity exact)."""
+    lp = jax.random.normal(KEY, (5, 128, 128))
+    a = np.asarray(jax.jit(lambda x: kref.sinkhorn_chunked(x, 7))(lp))
+    b = np.asarray(jax.jit(lambda x: kref.sinkhorn_ref(x, 7))(lp))
+    np.testing.assert_array_equal(a, b)
+    # 2-D input degenerates to the plain reference
+    c = np.asarray(kref.sinkhorn_chunked(lp[0], 7))
+    np.testing.assert_array_equal(c, b[0])

@@ -1,11 +1,19 @@
 """shard_map EP dispatch == single-device dispatch (numerics), verified
-in a subprocess with 8 host devices (2 data x 4 model mesh)."""
+in a subprocess with 8 host devices (2 data x 4 model mesh).
+
+Was broken from the seed through PR 1: models/moe.py imported the
+top-level `jax.shard_map` export, which only exists in jax >= 0.4.39;
+on the pinned 0.4.37 it raised ImportError inside the subprocess. The
+import now falls back to jax.experimental.shard_map."""
 import pathlib
 import subprocess
 import sys
 import textwrap
 
+import pytest
 
+
+@pytest.mark.slow
 def test_shard_map_moe_matches_gspmd():
     script = textwrap.dedent(f"""
         import os
