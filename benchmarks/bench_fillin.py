@@ -127,6 +127,54 @@ def fit_throughput(quick: bool = False):
     return rows
 
 
+def permutation_throughput(quick: bool = False):
+    """Batched vs per-matrix PFM inference wall-clock (DESIGN.md §9).
+
+    Orders the same prepared corpus twice — a sequential loop over
+    PFM.permutation (jit-cached per-matrix forward) vs one
+    PFM.permutation_batch call (one bucketed forward per shape bucket)
+    — interleaved min-over-reps like fit_throughput, prep excluded from
+    the timed region so the row isolates the forward+extract path the
+    serving driver rides."""
+    from repro.data import delaunay_like
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=8)
+    pfm = PFM(cfg, seed=0, x_mode="random")
+    reps = 3 if quick else 5
+    rows = []
+    for B in (8,) if quick else (8, 32):
+        mats = [pfm.prepare(delaunay_like(100 + 3 * (i % 8), "gradel",
+                                          seed=i), f"m{i}")
+                for i in range(B)]
+        times = {"sequential": [], "batched": []}
+        for rep in range(reps + 1):  # rep 0 absorbs compilation
+            t0 = time.perf_counter()
+            seq = [pfm.permutation(pm) for pm in mats]
+            t_seq = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            bat = pfm.permutation_batch(mats)
+            t_bat = time.perf_counter() - t0
+            if rep > 0:
+                times["sequential"].append(t_seq)
+                times["batched"].append(t_bat)
+        for a, b in zip(seq, bat):  # parity sanity on the bench corpus
+            assert np.array_equal(a, b), \
+                "batched inference diverged from per-matrix path"
+        t = {m: min(v) for m, v in times.items()}
+        rows.append({
+            "B": B,
+            "sequential_s": t["sequential"],
+            "batched_s": t["batched"],
+            "speedup": t["sequential"] / t["batched"],
+        })
+        print(f"perm B={B}: seq={t['sequential'] * 1e3:.1f}ms "
+              f"batched={t['batched'] * 1e3:.1f}ms "
+              f"speedup={rows[-1]['speedup']:.2f}x")
+    OUT.mkdir(exist_ok=True)
+    (OUT / "permutation_throughput.json").write_text(
+        json.dumps(rows, indent=2))
+    return rows
+
+
 def fit_throughput_sharded(quick: bool = False):
     """Data-parallel sharded PFM.fit (DESIGN.md §8) vs the single-device
     bucketed path, on 8 *simulated* CPU devices — measured in a
@@ -227,6 +275,7 @@ def run(pfm: PFM | None = None, quick: bool = False):
 
 def main(quick=False):
     tp = fit_throughput(quick=quick)
+    tp_perm = permutation_throughput(quick=quick)
     tp_sharded = fit_throughput_sharded(quick=quick)
     rows = run(quick=quick)
     cats = [k for k in rows[0] if k not in ("method",)
@@ -237,6 +286,7 @@ def main(quick=False):
             f"{r[c]:.2f}" for c in cats)
             + f",{r['All_lu_ms']:.1f},{r['All_order_ms']:.1f}")
     return {"table2": rows, "fit_throughput": tp,
+            "permutation_throughput": tp_perm,
             "fit_throughput_sharded": tp_sharded}
 
 

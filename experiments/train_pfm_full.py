@@ -19,6 +19,8 @@ print(f"training done in {time.time()-t0:.0f}s", flush=True)
 state = pfm.state_dict()
 with open("experiments/pfm_trained.pkl", "wb") as f:
     pickle.dump(state, f)
+# serve/eval-ready checkpoint (launch/serve_pfm --ckpt, eval_fillin --ckpt)
+pfm.save_checkpoint("experiments/ckpt", step=0)
 
 # quick diagnostics: direction check + heldout
 from repro.data import delaunay_like

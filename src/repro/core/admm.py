@@ -23,6 +23,8 @@ from __future__ import annotations
 import functools
 from typing import NamedTuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -206,6 +208,66 @@ def _predict_scores_batch(params, cfg: PFMConfig, levels, x_g):
     axis; x_g: (B, n_pad, in_dim). Shared params, vmapped graph."""
     return jax.vmap(lambda lv, x: predict_scores(params, cfg, lv, x))(
         levels, x_g)
+
+
+# --------------------------- batched inference (DESIGN.md §9) -----------
+@functools.lru_cache(maxsize=64)
+def _single_scorer(cfg: PFMConfig):
+    """One jitted per-matrix scorer per cfg (jax.jit caches one XLA
+    program per hierarchy signature underneath) — the per-matrix
+    inference path no longer re-traces the encoder on every call."""
+    def fwd(params, levels_tuple, x_g):
+        return predict_scores(params, cfg, list(levels_tuple), x_g)
+    return jax.jit(fwd)
+
+
+@functools.lru_cache(maxsize=64)
+def _batch_scorer(cfg: PFMConfig):
+    """Compile cache for batched inference, mirroring _batch_trainer:
+    one jitted bucket-forward per cfg; jax.jit then caches one XLA
+    program per bucket signature (B, n_pad, hierarchy shapes), so a
+    corpus re-using a bucket shape never retraces."""
+    def fwd(params, levels_tuple, x_g):
+        return _predict_scores_batch(params, cfg, list(levels_tuple), x_g)
+    return jax.jit(fwd)
+
+
+@functools.lru_cache(maxsize=64)
+def _flat_batch_scorer(cfg: PFMConfig):
+    """Flat-buffer variant of _batch_scorer: the stacked hierarchy
+    arrives as two flat host buffers + a static layout (graph.
+    flatten_levels) so packing costs two device transfers per bucket
+    instead of four per level; the level dicts are rebuilt inside jit
+    where the static slices are free (DESIGN.md §9)."""
+    from repro.core.graph import unflatten_levels
+
+    def fwd(params, flat_i, flat_f, x_g, *, layout):
+        levels = unflatten_levels(flat_i, flat_f, layout)
+        return _predict_scores_batch(params, cfg, levels, x_g)
+    return jax.jit(fwd, static_argnames=("layout",))
+
+
+def predict_scores_single(params, cfg: PFMConfig, levels_tuple, x_g):
+    """Jit-cached per-matrix score forward (levels_tuple: one matrix's
+    GraphData.as_jnp() hierarchy). Returns (n_pad,) scores."""
+    return _single_scorer(cfg)(params, tuple(levels_tuple), x_g)
+
+
+def predict_scores_batch(params, cfg: PFMConfig, levels_tuple, x_g):
+    """Jit-cached bucket-batched score forward: levels_tuple is a
+    stacked hierarchy (graph.stack_hierarchies — leading B on every
+    leaf), x_g is (B, n_pad, in_dim). Returns (B, n_pad) scores, one
+    encoder launch for the whole shape bucket.
+
+    Host-numpy hierarchies (stack_hierarchies(device=False), the
+    inference pack) take the flat-transfer path; device hierarchies
+    (training buckets) feed the jit directly."""
+    if isinstance(levels_tuple[0]["senders"], np.ndarray):
+        from repro.core.graph import flatten_levels
+        flat_i, flat_f, layout = flatten_levels(levels_tuple)
+        return _flat_batch_scorer(cfg)(params, flat_i, flat_f, x_g,
+                                       layout=layout)
+    return _batch_scorer(cfg)(params, tuple(levels_tuple), x_g)
 
 
 def _theta_loss_batch(params, cfg: PFMConfig, levels, x_g, node_mask, A,

@@ -35,7 +35,17 @@ def rcm(A: sp.spmatrix) -> np.ndarray:
 
 def min_degree(A: sp.spmatrix) -> np.ndarray:
     """Minimum degree on the elimination graph (adjacency-set version
-    with lazy-deletion heap)."""
+    with lazy-deletion heap).
+
+    Lazy deletion is only sound if every node whose degree changes gets
+    a fresh heap entry for its new degree: a node whose latest entry
+    goes stale (`d != len(adj)`) and that is never re-pushed is silently
+    skipped when popped, and once the heap drains it is dropped from the
+    returned order entirely — a *partial* permutation. So every degree
+    mutation below (the neighbour update AND the fill-edge endpoint
+    update) is paired with a push, and a final sweep eliminates any
+    uneliminated remainder by current degree as a hard guarantee that
+    `len(order) == n`."""
     S = symmetrize_pattern(A).tolil()
     n = S.shape[0]
     adj = [set(row) - {i} for i, row in enumerate(S.rows)]
@@ -58,10 +68,14 @@ def min_degree(A: sp.spmatrix) -> np.ndarray:
             if new:
                 au |= new
                 for w in new:
-                    if not eliminated[w]:
-                        adj[w].add(u)
+                    adj[w].add(u)
+                    heapq.heappush(heap, (len(adj[w]), w))
             heapq.heappush(heap, (len(au), u))
         adj[v] = set()
+    if len(order) < n:  # pragma: no cover - defensive completeness sweep
+        for v in sorted(np.nonzero(~eliminated)[0],
+                        key=lambda i: len(adj[i])):
+            order.append(int(v))
     return np.asarray(order)
 
 

@@ -44,23 +44,32 @@ class GraphData:
     n_pad: int
     levels: List[GraphLevel]
 
-    def as_jnp(self):
-        """jit-friendly pytree: every leaf is an array; padded sizes are
-        conveyed through array *shapes* (coarse template / node template)
-        so they stay static under jit."""
+    def as_np(self):
+        """Pytree of host numpy leaves; padded sizes are conveyed
+        through array *shapes* (coarse template / node template) so
+        they stay static under jit. This is the stacking input for
+        pack_buckets/stack_hierarchies, which pad host-side: feeding
+        the jnp form instead forces a device->host transfer per leaf
+        per bucket member (hundreds per pack call on deep
+        hierarchies)."""
         return tuple(
-            dict(senders=jnp.asarray(l.senders),
-                 receivers=jnp.asarray(l.receivers),
-                 edge_mask=jnp.asarray(l.edge_mask),
-                 cluster=jnp.asarray(l.cluster),
-                 coarse=jnp.zeros((max(l.n_coarse_pad, 1),), jnp.float32))
+            dict(senders=l.senders, receivers=l.receivers,
+                 edge_mask=l.edge_mask, cluster=l.cluster,
+                 coarse=np.zeros((max(l.n_coarse_pad, 1),), np.float32))
             for l in self.levels
         )
 
+    def as_jnp(self):
+        """Device (jit-ready) form of the same pytree."""
+        return tuple({k: jnp.asarray(v) for k, v in lv.items()}
+                     for lv in self.as_np())
 
-def stack_hierarchies(levels_list):
+
+def stack_hierarchies(levels_list, device: bool = True):
     """Stack per-matrix `GraphData.as_jnp()` hierarchies into one bucket
     pytree with a leading batch axis on every leaf (DESIGN.md §2).
+    device=False keeps the stacked leaves as host numpy (for consumers
+    that re-pack them into flat transfer buffers, flatten_levels).
 
     Requirements: equal depth and equal finest-level node pad (the
     bucketing key in PFM.fit). Within a bucket, per-level edge buckets
@@ -83,35 +92,83 @@ def stack_hierarchies(levels_list):
     depth = len(levels_list[0])
     assert all(len(lv) == depth for lv in levels_list), \
         "bucket members must share hierarchy depth"
+    B = len(levels_list)
     out = []
     # pad/stack host-side in numpy: one device transfer per stacked leaf
-    # instead of hundreds of tiny pad/stack dispatches per bucket
+    # instead of hundreds of tiny pad/stack dispatches per bucket. The
+    # stacked buffers are preallocated at their fill value and written
+    # by slice — per-member np.pad calls (4 x depth x B tiny pads) were
+    # the packing hot spot for batched inference.
     tgt_n = max(lv[0]["cluster"].shape[0] for lv in levels_list)
     for li in range(depth):
         tgt_e = max(lv[li]["senders"].shape[0] for lv in levels_list)
         tgt_c = max(lv[li]["coarse"].shape[0] for lv in levels_list)
         if any(lv[li]["cluster"].shape[0] < tgt_n for lv in levels_list):
             tgt_c += 1  # fresh dummy slot for the padded cluster fill
-        s, r, m, cl = [], [], [], []
-        for lv in levels_list:
+        s = np.full((B, tgt_e), tgt_n - 1, np.int32)
+        r = np.full((B, tgt_e), tgt_n - 1, np.int32)
+        m = np.zeros((B, tgt_e), np.float32)
+        cl = np.full((B, tgt_n), tgt_c - 1, np.int32)
+        for bi, lv in enumerate(levels_list):
             d = lv[li]
-            pad_e = (0, tgt_e - d["senders"].shape[0])
-            pad_n = (0, tgt_n - d["cluster"].shape[0])
-            s.append(np.pad(np.asarray(d["senders"]), pad_e,
-                            constant_values=tgt_n - 1))
-            r.append(np.pad(np.asarray(d["receivers"]), pad_e,
-                            constant_values=tgt_n - 1))
-            m.append(np.pad(np.asarray(d["edge_mask"]), pad_e))
-            cl.append(np.pad(np.asarray(d["cluster"]), pad_n,
-                             constant_values=tgt_c - 1))
+            ne = d["senders"].shape[0]
+            nn = d["cluster"].shape[0]
+            s[bi, :ne] = d["senders"]
+            r[bi, :ne] = d["receivers"]
+            m[bi, :ne] = d["edge_mask"]
+            cl[bi, :nn] = d["cluster"]
+        xp = jnp if device else np
         out.append(dict(
-            senders=jnp.asarray(np.stack(s)),
-            receivers=jnp.asarray(np.stack(r)),
-            edge_mask=jnp.asarray(np.stack(m)),
-            cluster=jnp.asarray(np.stack(cl)),
-            coarse=jnp.zeros((len(levels_list), tgt_c), jnp.float32)))
+            senders=xp.asarray(s),
+            receivers=xp.asarray(r),
+            edge_mask=xp.asarray(m),
+            cluster=xp.asarray(cl),
+            coarse=xp.zeros((B, tgt_c), xp.float32)))
         tgt_n = tgt_c  # next level's node pad = this level's coarse pad
     return tuple(out)
+
+
+def flatten_levels(levels):
+    """Concatenate a (stacked, numpy) hierarchy's leaves into ONE int32
+    and ONE float32 flat buffer plus a static shape layout.
+
+    Rationale (DESIGN.md §9): shipping a deep stacked hierarchy to the
+    device leaf-by-leaf costs ~4 transfers x depth per bucket, and the
+    per-transfer latency dominates batched-inference packing. Two flat
+    transfers + zero-copy static slices on the device side
+    (unflatten_levels, inside jit) make packing O(1) transfers. The
+    all-zero `coarse` shape template is rebuilt on device, never
+    shipped."""
+    ints, flts, layout = [], [], []
+    for lv in levels:
+        ints += [np.ravel(lv["senders"]), np.ravel(lv["receivers"]),
+                 np.ravel(lv["cluster"])]
+        flts.append(np.ravel(lv["edge_mask"]))
+        layout.append((tuple(lv["senders"].shape),
+                       tuple(lv["cluster"].shape),
+                       tuple(lv["coarse"].shape)))
+    return (np.concatenate(ints).astype(np.int32),
+            np.concatenate(flts).astype(np.float32),
+            tuple(layout))
+
+
+def unflatten_levels(flat_i, flat_f, layout):
+    """Rebuild the level-dict hierarchy from flatten_levels buffers.
+    Layout is static, so under jit every slice/reshape is free metadata
+    for XLA; edge_mask shares the senders shape."""
+    levels, oi, of = [], 0, 0
+    for e_shape, c_shape, z_shape in layout:
+        ne = int(np.prod(e_shape))
+        nc = int(np.prod(c_shape))
+        levels.append(dict(
+            senders=flat_i[oi:oi + ne].reshape(e_shape),
+            receivers=flat_i[oi + ne:oi + 2 * ne].reshape(e_shape),
+            cluster=flat_i[oi + 2 * ne:oi + 2 * ne + nc].reshape(c_shape),
+            edge_mask=flat_f[of:of + ne].reshape(e_shape),
+            coarse=jnp.zeros(z_shape, jnp.float32)))
+        oi += 2 * ne + nc
+        of += ne
+    return levels
 
 
 def symmetrize_pattern(A: sp.spmatrix) -> sp.csr_matrix:

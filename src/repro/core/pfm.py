@@ -19,10 +19,9 @@ import scipy.sparse as sp
 
 from repro.core import admm as admm_mod
 from repro.core import encoder as enc
-from repro.core import reorder
 from repro.core.admm import (PFMConfig, admm_train_batch,
                              admm_train_batch_sharded, admm_train_matrix,
-                             predict_scores)
+                             predict_scores_batch)
 from repro.core.graph import (GraphData, build_hierarchy, dense_padded,
                               stack_hierarchies)
 from repro.core.spectral import (pretrain_spectral_net, spectral_embedding)
@@ -34,10 +33,16 @@ class PreparedMatrix:
     name: str
     A: sp.csr_matrix
     gd: GraphData
-    levels: tuple
+    levels: tuple           # jit-ready jnp hierarchy (gd.as_jnp())
     A_dense: jnp.ndarray
     x_g: jnp.ndarray
     node_mask: jnp.ndarray
+
+    @property
+    def levels_np(self) -> tuple:
+        """Host numpy hierarchy for bucket packing (gd.as_np()) — lets
+        stack_hierarchies pad without a device->host transfer per leaf."""
+        return self.gd.as_np()
 
 
 @dataclasses.dataclass
@@ -45,37 +50,54 @@ class BucketBatch:
     """One training bucket: B same-shaped (padded) matrices stacked for
     a single batched ADMM call (DESIGN.md §2)."""
     names: List[str]
-    A: jnp.ndarray          # (B, n_pad, n_pad)
+    A: jnp.ndarray | None   # (B, n_pad, n_pad); None for inference packs
     levels: tuple           # stacked hierarchy, leading B on every leaf
     x_g: jnp.ndarray        # (B, n_pad, in_dim)
-    node_mask: jnp.ndarray  # (B, n_pad)
+    node_mask: jnp.ndarray | None     # (B, n_pad); None for inference
+    ns: List[int] | None = None       # true (unpadded) sizes per member
+    indices: List[int] | None = None  # positions in the packed sequence
 
     @property
     def size(self) -> int:
-        return self.A.shape[0]
+        return len(self.names)
 
 
 def pack_buckets(prepped: Sequence[PreparedMatrix],
-                 max_batch: int = 32) -> List[BucketBatch]:
+                 max_batch: int = 32, with_A: bool = True
+                 ) -> List[BucketBatch]:
     """Group PreparedMatrix instances into shape buckets keyed on
     (n_pad, hierarchy depth) — the two static properties a single XLA
     program is specialized on — then stack each group (chunked to
     max_batch) into BucketBatch tensors. Ragged true sizes n within a
-    bucket are handled by the per-matrix node masks."""
-    groups: Dict[tuple, List[PreparedMatrix]] = {}
-    for pm in prepped:
-        groups.setdefault((pm.gd.n_pad, len(pm.levels)), []).append(pm)
+    bucket are handled by the per-matrix node masks. `ns`/`indices`
+    record each member's true size and position in `prepped` so
+    consumers (batched inference) can trim pad slots and restore the
+    input order host-side. with_A=False (score-only inference: the
+    encoder never reads A) skips stacking the (B, n_pad, n_pad) dense
+    matrices (the most expensive leaf of a pack) and keeps the stacked
+    hierarchy host-side, where predict_scores_batch ships it as two
+    flat buffers instead of one device transfer per leaf
+    (graph.flatten_levels)."""
+    groups: Dict[tuple, List[tuple]] = {}
+    for pos, pm in enumerate(prepped):
+        groups.setdefault((pm.gd.n_pad, len(pm.levels)),
+                          []).append((pos, pm))
     buckets = []
     for bkey in sorted(groups):
         pms = groups[bkey]
         for i in range(0, len(pms), max_batch):
             chunk = pms[i:i + max_batch]
             buckets.append(BucketBatch(
-                names=[pm.name for pm in chunk],
-                A=jnp.stack([pm.A_dense for pm in chunk]),
-                levels=stack_hierarchies([pm.levels for pm in chunk]),
-                x_g=jnp.stack([pm.x_g for pm in chunk]),
-                node_mask=jnp.stack([pm.node_mask for pm in chunk])))
+                names=[pm.name for _, pm in chunk],
+                A=jnp.stack([pm.A_dense for _, pm in chunk])
+                if with_A else None,
+                levels=stack_hierarchies(
+                    [pm.levels_np for _, pm in chunk], device=with_A),
+                x_g=jnp.stack([pm.x_g for _, pm in chunk]),
+                node_mask=jnp.stack([pm.node_mask for _, pm in chunk])
+                if with_A else None,  # the scorer never reads the mask
+                ns=[pm.gd.n for _, pm in chunk],
+                indices=[pos for pos, _ in chunk]))
     return buckets
 
 
@@ -108,6 +130,17 @@ def pad_bucket(bucket: BucketBatch, multiple: int):
         x_g=pad(bucket.x_g),
         node_mask=pad(bucket.node_mask))
     return padded, weight
+
+
+def _extract_perm(y_pad: np.ndarray, n: int) -> np.ndarray:
+    """Host-side argsort extraction shared by the per-matrix and batched
+    inference paths: scores masked to the matrix's true n (pad slots can
+    never be ranked), NaN scores collapsed to -inf (mirroring
+    reorder.permutation_from_scores), stable sort so ties break by node
+    index identically everywhere."""
+    y = np.asarray(y_pad[:n])
+    y = np.where(np.isnan(y), -np.inf, y).astype(y.dtype)
+    return np.argsort(-y, kind="stable")
 
 
 class PFM:
@@ -179,13 +212,7 @@ class PFM:
         per-shard θ-grad sums are psum'd into one shared Adam step. Per-
         matrix keys match the single-device bucketed path, so with a
         frozen encoder the two are exactly equivalent per matrix."""
-        prepped = []
-        for i, item in enumerate(matrices):
-            if isinstance(item, PreparedMatrix):
-                prepped.append(item)  # corpus-scale callers prep once
-                continue
-            name, A = item if isinstance(item, tuple) else (f"m{i}", item)
-            prepped.append(self.prepare(A, name))
+        prepped = self._prep_items(matrices)  # PreparedMatrix pass through
 
         key = jax.random.PRNGKey(self.seed + 1)
         if mesh is not None:
@@ -274,19 +301,77 @@ class PFM:
 
     # -------------------------------------------------------- inference
     def scores(self, A: sp.spmatrix) -> np.ndarray:
-        pm = self.prepare(A)
-        y = predict_scores(self.params, self.cfg, list(pm.levels), pm.x_g)
-        return np.asarray(y)
+        """Per-node scores trimmed to the TRUE size A.shape[0] — the
+        padded tail holds whatever the encoder emitted for pad slots
+        (garbage w.r.t. the matrix) and must never reach a downstream
+        argsort."""
+        pm = A if isinstance(A, PreparedMatrix) else self.prepare(A)
+        y = admm_mod.predict_scores_single(self.params, self.cfg,
+                                           pm.levels, pm.x_g)
+        return np.asarray(y)[:pm.gd.n]
 
     def permutation(self, A: sp.spmatrix) -> np.ndarray:
-        """GNN forward + argsort (O(GNN) inference, Table 1)."""
-        A = sp.csr_matrix(A)
-        pm = self.prepare(A)
-        y = predict_scores(self.params, self.cfg, list(pm.levels), pm.x_g)
-        perm = reorder.permutation_from_scores(
-            jnp.asarray(y), pm.node_mask)
-        perm = np.asarray(perm)
-        return perm[perm < A.shape[0]]
+        """GNN forward + argsort (O(GNN) inference, Table 1). The
+        forward is jit-cached per hierarchy signature
+        (admm.predict_scores_single), so repeat calls at a seen shape
+        do not re-trace."""
+        pm = A if isinstance(A, PreparedMatrix) \
+            else self.prepare(sp.csr_matrix(A))
+        y = admm_mod.predict_scores_single(self.params, self.cfg,
+                                           pm.levels, pm.x_g)
+        return _extract_perm(np.asarray(y), pm.gd.n)
+
+    def scores_batch(self, matrices: Sequence,
+                     max_batch: int = 32) -> List[np.ndarray]:
+        """Batched inference scores: one bucketed encoder forward per
+        shape bucket (DESIGN.md §9). Accepts scipy matrices, (name, A)
+        pairs, or PreparedMatrix items; returns per-matrix score
+        vectors trimmed to each true n, in input order."""
+        prepped = self._prep_items(matrices)
+        out: List[np.ndarray] = [None] * len(prepped)
+        for bucket, y in self._dispatch_buckets(prepped, max_batch):
+            y = np.asarray(y)
+            for bi, pos in enumerate(bucket.indices):
+                out[pos] = y[bi, :bucket.ns[bi]]
+        return out
+
+    def permutation_batch(self, matrices: Sequence,
+                          max_batch: int = 32) -> List[np.ndarray]:
+        """Batched GNN forward + argsort over a corpus: pack_buckets
+        groups the matrices into (n_pad, depth) shape buckets, each
+        bucket runs through the encoder as ONE jit-cached batched
+        forward (admm.predict_scores_batch), and the permutations are
+        extracted host-side with each matrix's scores masked to its
+        true n. Per matrix the result is identical to `permutation`
+        (pinned by tests/test_batched_inference.py)."""
+        prepped = self._prep_items(matrices)
+        out: List[np.ndarray] = [None] * len(prepped)
+        for bucket, y in self._dispatch_buckets(prepped, max_batch):
+            y = np.asarray(y)
+            for bi, pos in enumerate(bucket.indices):
+                out[pos] = _extract_perm(y[bi], bucket.ns[bi])
+        return out
+
+    def _dispatch_buckets(self, prepped, max_batch: int):
+        """Pack and launch EVERY bucket's forward before the first
+        host read: jax dispatch is async, so bucket k+1 computes while
+        bucket k's scores are pulled back and argsorted."""
+        buckets = pack_buckets(prepped, max_batch=max_batch,
+                               with_A=False)
+        ys = [predict_scores_batch(self.params, self.cfg,
+                                   bucket.levels, bucket.x_g)
+              for bucket in buckets]
+        return list(zip(buckets, ys))
+
+    def _prep_items(self, matrices: Sequence) -> List[PreparedMatrix]:
+        prepped = []
+        for i, item in enumerate(matrices):
+            if isinstance(item, PreparedMatrix):
+                prepped.append(item)
+                continue
+            name, A = item if isinstance(item, tuple) else (f"m{i}", item)
+            prepped.append(self.prepare(A, name))
+        return prepped
 
     # ----------------------------------------- ablation loss variants
     def fit_pce(self, matrices: Sequence, target_perms: Sequence[np.ndarray],
@@ -349,3 +434,45 @@ class PFM:
         self.params = state["params"]
         self.opt_state = state["opt_state"]
         self.se_params = state.get("se_params")
+
+    def save_checkpoint(self, ckpt_dir, step: int = 0, keep: int = 3):
+        """Persist θ / Adam state / S_e through checkpoint.ckpt (atomic
+        two-phase commit, codec-exact restore). The constructor args the
+        state pytree's structure depends on (cfg, seed, x_mode, se_max_n,
+        whether S_e was pretrained) ride along in the metadata sidecar so
+        `PFM.from_checkpoint` can rebuild the module without the caller
+        re-supplying them."""
+        from repro.checkpoint import save_checkpoint
+        meta = {"pfm_cfg": self.cfg._asdict(), "seed": self.seed,
+                "x_mode": self.x_mode, "se_max_n": self.se_max_n,
+                "has_se": self.se_params is not None}
+        return save_checkpoint(ckpt_dir, step, self.state_dict(),
+                               metadata=meta, keep=keep)
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir, step: int | None = None) -> "PFM":
+        """Rebuild a trained PFM from a `save_checkpoint` directory: the
+        metadata sidecar reconstructs the module (cfg/seed/x_mode), a
+        fresh init provides the restore target's pytree structure, and
+        the leaves are restored codec-exactly."""
+        import json as _json
+        import pathlib
+        from repro.checkpoint import latest_step, restore_checkpoint
+        ckpt_dir = pathlib.Path(ckpt_dir)
+        if step is None:
+            step = latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoint steps under {ckpt_dir}")
+        meta = _json.loads(
+            (ckpt_dir / f"step_{step:010d}" / "meta.json").read_text())
+        user = meta["user"]
+        pfm = cls(PFMConfig(**user["pfm_cfg"]), seed=user["seed"],
+                  se_max_n=user["se_max_n"], x_mode=user["x_mode"])
+        if user["has_se"]:
+            from repro.core.spectral import spectral_net_init
+            pfm.se_params = spectral_net_init(
+                jax.random.PRNGKey(user["seed"]))
+        target = pfm.state_dict()
+        pfm.load_state_dict(restore_checkpoint(ckpt_dir, step, target))
+        return pfm

@@ -123,8 +123,16 @@ def soft_permutation_batch(scores, keys, *, sigma: float = 1e-3,
 
 def permutation_from_scores(scores, node_mask=None):
     """Inference path: elimination order = descending score (rank 0 first).
-    Returns perm with perm[i] = original index placed at position i."""
+    Returns perm with perm[i] = original index placed at position i.
+
+    Pad slots (mask 0) are guaranteed to rank strictly after every real
+    node: NaN real scores are collapsed to -inf first (a NaN would
+    otherwise sort *past* the -inf pad slots in the descending argsort;
+    real ±inf already sort correctly), and the -inf ties that creates
+    are broken by the stable argsort's index order — real nodes always
+    precede the tail pads."""
     if node_mask is not None:
+        scores = jnp.where(jnp.isnan(scores), -jnp.inf, scores)
         scores = jnp.where(node_mask > 0, scores,
                            -jnp.inf * jnp.ones_like(scores))
     return jnp.argsort(-scores)

@@ -1,14 +1,19 @@
-"""Batched serving driver: prefill + decode loop with a KV cache.
+"""Batched serving driver: prompt warmup + decode loop with a KV cache.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --smoke --batch 4 --prompt-len 32 --gen 16
 
-Implements the standard production split: one prefill pass (flash
-kernel) builds the cache, then the decode loop appends one token per
-request per step (greedy). Continuous batching is approximated by a
-fixed request batch; the KV cache layout (ring buffer for windowed
-archs) and the decode-state sharding rules are the same ones the
-dry-run exercises at scale.
+The driver steps the decoder token-by-token for BOTH phases: the
+"prefill" below is a cache warmup that feeds the prompt one token per
+step (uniform across ssm/hybrid/dense families), not a single batched
+flash-kernel prefill pass — transformer families could batch it via the
+prefill path, this driver deliberately keeps the per-step decode shape.
+Continuous batching is approximated by a fixed request batch; the KV
+cache layout (ring buffer for windowed archs) and the decode-state
+sharding rules are the same ones the dry-run exercises at scale.
+
+Decoder-only families are supported; encoder-decoder archs (seamless
+family "encdec") have no decode_step path here and are rejected.
 """
 from __future__ import annotations
 
@@ -21,6 +26,10 @@ import numpy as np
 
 from repro.models import api
 from repro.models.registry import get_config, smoke_config
+
+# families with no decoder-only decode_step path (api.init_decode_state /
+# api.decode_step would fail opaquely mid-run)
+UNSUPPORTED_FAMILIES = ("encdec",)
 
 
 def main(argv=None):
@@ -36,7 +45,12 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
-    assert cfg.family not in ("encdec",) or True
+    if cfg.family in UNSUPPORTED_FAMILIES:
+        raise SystemExit(
+            f"[serve] arch {cfg.name!r} (family {cfg.family!r}) is not "
+            f"servable by this driver: it has no decoder-only "
+            f"decode_step path. Supported families: everything except "
+            f"{sorted(UNSUPPORTED_FAMILIES)}.")
 
     key = jax.random.PRNGKey(args.seed)
     params = api.init_params(key, cfg, model_axis=1)

@@ -1,0 +1,143 @@
+"""Batched reordering inference (DESIGN.md §9): parity of
+PFM.permutation_batch / scores_batch with the per-matrix path over
+ragged shape buckets, pad-slot safety of the score extraction, the
+checkpoint round-trip serve_pfm rides, and the micro-batching queue."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import reorder
+from repro.core.admm import PFMConfig
+from repro.core.pfm import PFM, pack_buckets
+from repro.data import delaunay_like, grid_2d
+
+CFG = PFMConfig(n_admm=2, n_sinkhorn=6)
+
+
+def _corpus():
+    """Ragged sizes spanning at least two (n_pad, depth) shape buckets,
+    with ragged true n inside the n_pad=128 family."""
+    mats = [delaunay_like(100 + 7 * i, "gradel", seed=11 + i)
+            for i in range(4)]
+    mats += [grid_2d(6, seed=3), delaunay_like(40, "hole3", seed=5)]
+    return mats
+
+
+# ----------------------------------------------------- parity contract
+def test_permutation_batch_bitwise_matches_per_matrix():
+    """The acceptance pin: batched inference is bitwise-identical per
+    matrix to PFM.permutation across ragged shape buckets."""
+    pfm = PFM(CFG, seed=0, x_mode="random")
+    mats = _corpus()
+    prepped = [pfm.prepare(A, f"m{i}") for i, A in enumerate(mats)]
+    buckets = pack_buckets(prepped, with_A=False)
+    assert len({(b.x_g.shape[1], len(b.levels))
+                for b in buckets}) >= 2, \
+        "corpus drift: parity must cover >= 2 shape buckets"
+    assert any(len(set(b.ns)) > 1 for b in buckets), \
+        "corpus drift: need ragged true n within a bucket"
+
+    batched = pfm.permutation_batch(prepped)
+    for pm, pb in zip(prepped, batched):
+        n = pm.A.shape[0]
+        p1 = pfm.permutation(pm)
+        assert sorted(pb.tolist()) == list(range(n))
+        np.testing.assert_array_equal(p1, pb)
+
+
+def test_scores_batch_matches_scores_and_trims_padding():
+    pfm = PFM(CFG, seed=1, x_mode="random")
+    mats = _corpus()
+    ys = pfm.scores_batch(mats)
+    for A, yb in zip(mats, ys):
+        n = A.shape[0]
+        y1 = pfm.scores(A)
+        assert y1.shape == (n,), "scores must trim to the true n"
+        assert yb.shape == (n,)
+        np.testing.assert_allclose(y1, yb, atol=1e-5, rtol=1e-5)
+
+
+def test_batch_inference_accepts_mixed_item_forms():
+    pfm = PFM(CFG, seed=0, x_mode="random")
+    A0 = delaunay_like(90, "gradel", seed=2)
+    A1 = delaunay_like(95, "gradel", seed=3)
+    items = [("a", A0), pfm.prepare(A1, "b")]
+    perms = pfm.permutation_batch(items)
+    assert [len(p) for p in perms] == [90, 95]
+    np.testing.assert_array_equal(perms[0], pfm.permutation(A0))
+    np.testing.assert_array_equal(perms[1], pfm.permutation(A1))
+
+
+# ------------------------------------------------ pad-slot score safety
+def test_permutation_from_scores_nonfinite_real_scores():
+    """Pad slots must rank strictly last even when real scores contain
+    NaN/inf (a NaN would otherwise argsort past the -inf pad fill)."""
+    y = jnp.asarray(np.array(
+        [np.nan, 1.0, -np.inf, 0.5, 0.0, np.inf, 2.0, -1.0], np.float32))
+    mask = (jnp.arange(8) < 6).astype(jnp.float32)
+    perm = np.asarray(reorder.permutation_from_scores(y, mask))
+    assert sorted(perm.tolist()) == list(range(8))
+    assert set(perm[-2:].tolist()) == {6, 7}, \
+        "pad slots must be ranked last"
+    # real scores in descending order (+inf at 5 first), then the
+    # collapsed NaN (at 0) and -inf (at 2) by stable index, then pads
+    assert perm[:6].tolist() == [5, 1, 3, 4, 0, 2]
+
+
+def test_batch_extraction_masks_pad_scores():
+    """A pad slot can never appear in a batched permutation even if the
+    encoder emits a huge score for it: extraction slices to true n."""
+    pfm = PFM(CFG, seed=0, x_mode="random")
+    A = delaunay_like(90, "gradel", seed=7)  # n=90 < n_pad=128
+    perm = pfm.permutation_batch([A])[0]
+    assert perm.max() == 89 and len(perm) == 90
+
+
+# ------------------------------------------------- checkpoint roundtrip
+def test_pfm_checkpoint_roundtrip(tmp_path):
+    from repro.core.spectral import spectral_net_init
+    pfm = PFM(CFG, seed=3, x_mode="se", se_max_n=123)
+    pfm.se_params = spectral_net_init(jax.random.PRNGKey(9))
+    pfm.save_checkpoint(tmp_path / "ckpt", step=5)
+    back = PFM.from_checkpoint(tmp_path / "ckpt")
+    assert back.cfg == pfm.cfg
+    assert back.seed == 3 and back.se_max_n == 123
+    for a, b in zip(jax.tree_util.tree_leaves(pfm.state_dict()),
+                    jax.tree_util.tree_leaves(back.state_dict())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    A = delaunay_like(80, "gradel", seed=1)
+    np.testing.assert_array_equal(pfm.permutation(A),
+                                  back.permutation(A))
+
+
+def test_pfm_checkpoint_roundtrip_without_se(tmp_path):
+    pfm = PFM(CFG, seed=0, x_mode="random")
+    pfm.save_checkpoint(tmp_path / "ckpt")
+    back = PFM.from_checkpoint(tmp_path / "ckpt")
+    assert back.se_params is None
+    A = delaunay_like(70, "gradel", seed=2)
+    np.testing.assert_array_equal(pfm.permutation(A),
+                                  back.permutation(A))
+
+
+# ------------------------------------------------- micro-batching queue
+def test_microbatcher_bounded_queue_and_completeness():
+    from repro.launch.serve_pfm import MicroBatcher
+    pfm = PFM(CFG, seed=0, x_mode="random")
+    rng = np.random.default_rng(0)
+    mats = [delaunay_like(int(rng.integers(35, 70)), "gradel", seed=i)
+            for i in range(7)]
+    batcher = MicroBatcher(pfm, max_batch=2, max_queue=3)
+    results = {}
+    for i, A in enumerate(mats):
+        for rid, perm in batcher.submit(i, A):
+            results[rid] = perm
+        assert batcher.n_queued <= 3, "queue bound violated"
+    for rid, perm in batcher.flush_all():
+        results[rid] = perm
+    assert batcher.n_queued == 0 and not batcher.pending
+    assert sorted(results) == list(range(7)), "requests dropped"
+    for i, A in enumerate(mats):
+        assert sorted(results[i].tolist()) == list(range(A.shape[0]))
+        np.testing.assert_array_equal(results[i], pfm.permutation(A))
+    assert sum(f["batch"] for f in batcher.flush_stats) == 7

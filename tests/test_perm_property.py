@@ -1,0 +1,109 @@
+"""Property sweep over every permutation producer: each BASELINES entry
+plus PFM.permutation / permutation_batch must return a bijection on
+[0, n) across grid / delaunay / fem patterns, including disconnected
+graphs and isolated vertices — plus the min_degree lazy-heap regression
+(a dropped node returns a *partial* permutation)."""
+import numpy as np
+import scipy.sparse as sp
+from _hyp_compat import given, settings, st
+
+from repro.core import baselines
+from repro.core.admm import PFMConfig
+from repro.core.pfm import PFM
+from repro.data import delaunay_like, fem_like, grid_2d
+
+
+def _patterns(seed: int):
+    """Matrix zoo for one seed: the three training families plus a
+    two-component disconnected graph and one with an isolated vertex."""
+    mats = [grid_2d(5, seed=seed),
+            delaunay_like(40, "gradel", seed=seed),
+            fem_like(45, "hole3", seed=seed)]
+    blk = sp.block_diag([grid_2d(4, seed=seed),
+                         delaunay_like(30, "hole6", seed=seed + 1)],
+                        format="csr")
+    iso = sp.block_diag([blk, sp.csr_matrix((1, 1))], format="csr")
+    return mats + [blk, iso]
+
+
+def _assert_bijection(perm, n, ctx):
+    perm = np.asarray(perm)
+    assert perm.shape == (n,), f"{ctx}: partial permutation " \
+        f"({perm.shape[0]} of {n})"
+    assert sorted(perm.tolist()) == list(range(n)), \
+        f"{ctx}: not a bijection on [0, {n})"
+
+
+# ----------------------------------------------------------- baselines
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 40))
+def test_baselines_bijection_all_patterns(seed):
+    for A in _patterns(seed):
+        for name, fn in baselines.BASELINES.items():
+            _assert_bijection(fn(A), A.shape[0],
+                              f"{name} n={A.shape[0]} seed={seed}")
+
+
+# ------------------------------------------------- min_degree regression
+def _adversarial_fill_graph(seed: int) -> sp.csr_matrix:
+    """Elimination-graph stress case for the lazy heap: hub nodes whose
+    elimination creates large cliques among low-degree leaves, so
+    adjacency sets grow in bursts and heap entries go stale in waves —
+    the regime where a missing re-push drops nodes."""
+    rng = np.random.default_rng(seed)
+    n_hubs, n_leaves = 4, 30
+    n = n_hubs + n_leaves
+    rows, cols = [], []
+    for h in range(n_hubs):  # every hub touches many leaves
+        sel = rng.choice(n_leaves, size=12, replace=False) + n_hubs
+        rows += [h] * len(sel)
+        cols += sel.tolist()
+    chain = rng.permutation(n_leaves) + n_hubs  # sparse leaf chain
+    rows += chain[:-1].tolist()
+    cols += chain[1:].tolist()
+    M = sp.csr_matrix((np.ones(len(rows)), (rows, cols)), shape=(n, n))
+    return ((M + M.T) > 0).astype(np.float64)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 200))
+def test_min_degree_full_permutation_adversarial(seed):
+    A = _adversarial_fill_graph(seed)
+    _assert_bijection(baselines.min_degree(A), A.shape[0],
+                      f"min_degree adversarial seed={seed}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_min_degree_full_permutation_dense_random(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 60))
+    M = np.triu(rng.random((n, n)) < 0.25, 1)
+    A = sp.csr_matrix((M + M.T).astype(np.float64))
+    _assert_bijection(baselines.min_degree(A), n,
+                      f"min_degree ER seed={seed}")
+
+
+def test_min_degree_trivial_sizes():
+    assert baselines.min_degree(sp.csr_matrix((0, 0))).shape == (0,)
+    _assert_bijection(baselines.min_degree(sp.csr_matrix((3, 3))), 3,
+                      "min_degree edgeless")
+
+
+# ----------------------------------------------------------------- PFM
+# one shared module (default x_mode="se": exact-Fiedler embedding, the
+# production inference path) so the jit caches persist across examples
+_PFM = PFM(PFMConfig(n_admm=2, n_sinkhorn=6), seed=0)
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2))
+def test_pfm_permutation_bijection_and_parity_all_patterns(seed):
+    mats = _patterns(seed)
+    batched = _PFM.permutation_batch(mats)
+    for A, pb in zip(mats, batched):
+        n = A.shape[0]
+        _assert_bijection(pb, n, f"permutation_batch n={n} seed={seed}")
+        p1 = _PFM.permutation(A)
+        _assert_bijection(p1, n, f"permutation n={n} seed={seed}")
+        np.testing.assert_array_equal(p1, pb)
