@@ -153,8 +153,6 @@ def admm_train_matrix(params, opt_state, A, levels_tuple, x_g, node_mask,
     M0 = reordered(P0, A, cfg)
     L0 = _warm_start_L(M0, k_L, n)   # Gamma0 = 0 (DESIGN.md §6)
     G0 = jnp.zeros((n, n))
-    from repro.distributed.constrain import constrain_2d
-    L0, G0, M0 = constrain_2d(L0), constrain_2d(G0), constrain_2d(M0)
 
     grad_L = jax.grad(smooth_terms, argnums=0)
     grad_theta = jax.grad(_theta_loss, argnums=0, has_aux=True)
@@ -200,6 +198,30 @@ def admm_train_matrix(params, opt_state, A, levels_tuple, x_g, node_mask,
                 + 0.5 * cfg.rho * jnp.sum(R * R),
     }
     return params, opt_state, metrics
+
+
+def _batch_metrics(L, Gamma, M, cfg: PFMConfig):
+    """Final per-matrix metrics in plain f32 (matching the sequential
+    path, which ignores the matmul_dtype lever for reporting). lax.map
+    over the batch — NOT axis=(-2,-1) reductions on the (B, n, n) stack
+    — so the reduction is compiled per (n, n) panel identically
+    regardless of the (local) batch size: XLA's fusion of a batched
+    reduction can round differently between B and B/D shapes (observed
+    at 1 ulp), which would break the sharded == single-device bitwise
+    parity contracts (DESIGN.md §8, §10) in the reported metrics. Shared
+    by the bucketed, 1-D-sharded, and 2-D-sharded trainers so all three
+    report through identical ops."""
+    def _one_metrics(args):
+        l, g, m = args
+        r = m - l @ l.T
+        return (jnp.sum(jnp.abs(l)), jnp.sum(g * r), jnp.sum(r * r))
+
+    l1, dual, rr = jax.lax.map(_one_metrics, (L, Gamma, M))
+    return {
+        "l1": l1,
+        "residual": jnp.sqrt(rr),
+        "loss": l1 + dual + 0.5 * cfg.rho * rr,
+    }
 
 
 # ------------------------------ bucketed batch training (DESIGN.md §2) --
@@ -380,26 +402,7 @@ def _admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
     L, Gamma, P, M, params, opt_state = jax.lax.fori_loop(
         0, cfg.n_admm, body, (L0, G0, P0, M0, params, opt_state))
 
-    # final metrics in plain f32 (matching the sequential path, which
-    # ignores the matmul_dtype lever for reporting). lax.map over the
-    # batch — NOT axis=(-2,-1) reductions on the (B, n, n) stack — so
-    # the reduction is compiled per (n, n) panel identically regardless
-    # of the (local) batch size: XLA's fusion of a batched reduction can
-    # round differently between B and B/D shapes (observed at 1 ulp),
-    # which would break the sharded == single-device bitwise parity
-    # contract (DESIGN.md §8) in the reported metrics.
-    def _one_metrics(args):
-        l, g, m = args
-        r = m - l @ l.T
-        return (jnp.sum(jnp.abs(l)), jnp.sum(g * r), jnp.sum(r * r))
-
-    l1, dual, rr = jax.lax.map(_one_metrics, (L, Gamma, M))
-    metrics = {
-        "l1": l1,
-        "residual": jnp.sqrt(rr),
-        "loss": l1 + dual + 0.5 * cfg.rho * rr,
-    }
-    return params, opt_state, metrics
+    return params, opt_state, _batch_metrics(L, Gamma, M, cfg)
 
 
 @functools.lru_cache(maxsize=64)
@@ -471,6 +474,233 @@ def admm_train_batch_sharded(params, opt_state, A, levels_tuple, x_g,
     at lr > 0 the paths differ only in grad summation order.
     """
     return _sharded_trainer(cfg, opt, mesh, axis)(
+        params, opt_state, A, levels_tuple, x_g, node_mask, keys,
+        batch_weight)
+
+
+# ------------------ 2-D model-parallel training (DESIGN.md §10) ---------
+#
+# For n beyond one device's memory the (B, n, n) triangular-factor state
+# itself must be sharded: every (n, n) of L/Γ/P/M lives as (tn, tm)
+# tiles over a ("row", "col") mesh, and the whole ADMM loop runs inside
+# ONE shard_map region. θ and the Adam state stay replicated; the only
+# θ-communication is one psum of the tile-local θ-grad sums over BOTH
+# mesh axes per ADMM iteration.
+#
+# Numerics contract (pinned by tests/test_admm_2d.py): with a frozen
+# encoder (lr=0) the 2-D trainer is bitwise-equal per matrix to the
+# single-device bucketed path. Three op classes keep that true:
+#   * elementwise stages (prox/tril, Gumbel logits, dual update, p_hat)
+#     run purely on tiles from GLOBAL coordinates — exact by
+#     construction (kernels' tile-offset support, reorder.*_tile);
+#   * one-axis reductions (Sinkhorn normalizations, SoftRank mean/var)
+#     all-gather a panel over the reduced mesh axis and reduce locally,
+#     so the f32 sum sees the full axis extent in reference element
+#     order (kernels/sinkhorn.sinkhorn_tiled);
+#   * dense contractions are "stripe"-chunked: the left operand is
+#     gathered, the right operand's column panel is gathered over the
+#     row axis, and each shard computes its (n, tm) output stripe with
+#     the full-length contraction, keeping its row block. A fully tiled
+#     SUMMA product would psum partial k-sums and reassociate the f32
+#     accumulation — that breaks the bitwise contract, so it is
+#     deliberately not used (ROADMAP lists it as the TPU-only follow-on,
+#     where the contract would be re-pinned per backend).
+# The L-gradient runs `jax.grad(smooth_terms)` at reference shape on
+# gathered operands (then slices the tile): mirroring autodiff's exact
+# op sequence in stripe form is possible but brittle, and the gathered
+# buffers are transient — the loop CARRY (the memory floor across all
+# n_admm iterations) stays fully tiled.
+
+def _llt_tile(L_full, cfg: PFMConfig, grid, axes):
+    """Tile of L @ L^T from the replicated full L (stripe-chunked:
+    full-length contraction against the local column panel of L^T)."""
+    from repro.distributed import constrain as tc
+    lt_col = jnp.swapaxes(tc.col_block_rows(L_full, grid, axes[1]),
+                          -1, -2)
+    stripe = _mm(L_full, lt_col, cfg)
+    return tc.stripe_rows(stripe, grid, axes[0])
+
+
+def _reordered_2d(P_tile, A_tile, cfg: PFMConfig, grid, axes):
+    """Tile of P A P^T via two stripe-chunked contractions (each gather
+    is transient — freed after its gemm; the loop body re-gathers from
+    the tiled carry wherever it needs reference shape)."""
+    from repro.distributed import constrain as tc
+    row_axis, col_axis = axes
+    P_full = tc.gather_full(P_tile, row_axis, col_axis)
+    a_col = tc.gather_cols(A_tile, row_axis)          # (B, n, tm) of A
+    # the (B, n, tm) stripe is already full-height, so T assembles with
+    # ONE col-axis gather (identical element values to slicing the tile
+    # and re-gathering both axes — the bitwise contract is unaffected)
+    T_full = tc.gather_rows(_mm(P_full, a_col, cfg), col_axis)
+    pt_col = jnp.swapaxes(tc.col_block_rows(P_full, grid, col_axis),
+                          -1, -2)                     # (B, n, tm) of P^T
+    return tc.stripe_rows(_mm(T_full, pt_col, cfg), grid, row_axis)
+
+
+def _soft_perm_tiles_2d(y, keys, cfg: PFMConfig, node_mask, grid, axes,
+                        sinkhorn_mode: str):
+    """Tile of soft_permutation_batch's P (rows = positions); see
+    reorder.soft_permutation_batch_2d for the exact-vs-tiled Sinkhorn
+    trade."""
+    return reorder.soft_permutation_batch_2d(
+        y, keys, grid=grid, row_axis=axes[0], col_axis=axes[1],
+        sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
+        node_mask=node_mask, noise_scale=cfg.noise_scale,
+        use_kernel=cfg.use_kernels, mode=sinkhorn_mode)
+
+
+def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
+                   node_mask, keys, batch_weight, *, cfg: PFMConfig, opt,
+                   grid, axes, sinkhorn_mode: str = "exact"):
+    """shard_map body of the 2-D model-parallel bucketed trainer.
+
+    A_tile: (B, tn, tm) — this device's tile of the (B, n, n) bucket
+    (batch dim NOT sharded; tn = n/R, tm = n/C for grid = (R, C)).
+    Everything else (hierarchy, x_g, node_mask, keys, θ, Adam state) is
+    replicated; scores and all (B,)/(n,)-shaped quantities are computed
+    identically on every device. batch_weight masks θ-grad rows exactly
+    as in the 1-D trainer. Returns replicated (params, opt_state,
+    metrics)."""
+    from repro.distributed import constrain as tc
+    levels = list(levels_tuple)
+    row_axis, col_axis = axes
+    B, tn, tm = A_tile.shape
+    n = tn * grid[0]
+
+    ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+    k_init, k_L, k_loop = ks[:, 0], ks[:, 1], ks[:, 2]
+    r0 = jax.lax.axis_index(row_axis) * tn
+    c0 = jax.lax.axis_index(col_axis) * tm
+
+    y0 = _predict_scores_batch(params, cfg, levels, x_g)
+    P0_tile = _soft_perm_tiles_2d(y0, k_init, cfg, node_mask, grid,
+                                  axes, sinkhorn_mode)
+    M0_tile = _reordered_2d(P0_tile, A_tile, cfg, grid, axes)
+    M0_full = tc.gather_full(M0_tile, row_axis, col_axis)
+    L0_full = jax.vmap(lambda m0, kl: _warm_start_L(m0, kl, n))(M0_full,
+                                                               k_L)
+    L0_tile = tc.slice_tile(L0_full, grid, row_axis, col_axis)
+    G0_tile = jnp.zeros_like(M0_tile)
+
+    grad_L = jax.grad(smooth_terms, argnums=0)
+
+    def body(k, carry):
+        L_t, G_t, P_t, M_t, params, opt_state = carry
+        kk = jax.vmap(lambda c: jax.random.fold_in(c, k))(k_loop)
+        A_full = tc.gather_full(A_tile, row_axis, col_axis)
+        L_full = tc.gather_full(L_t, row_axis, col_axis)
+        G_full = tc.gather_full(G_t, row_axis, col_axis)
+        P_full = tc.gather_full(P_t, row_axis, col_axis)
+        M_full = tc.gather_full(M_t, row_axis, col_axis)
+
+        # ---- L-update: reference-shape grad on gathered operands,
+        # tile-local fused prox/tril from global coordinates
+        gL_full = jax.vmap(
+            lambda l, p, a, g, m: grad_L(l, p, a, g, cfg.rho, cfg,
+                                         m if cfg.reuse_m else None)
+        )(L_full, P_full, A_full, G_full, M_full)
+        gL_t = tc.slice_tile(gL_full, grid, row_axis, col_axis)
+        t = jax.vmap(lambda l, a: _lipschitz_step(l, a, n, cfg))(L_full,
+                                                                A_full)
+        if cfg.use_kernels:
+            L_t = kops.prox_tril(L_t, gL_t, t, t, row_offset=r0,
+                                 col_offset=c0)
+        else:
+            L_t = kref.prox_tril_ref(L_t, gL_t, t, t, r0, c0)
+        L_full = tc.gather_full(L_t, row_axis, col_axis)
+        llt_t = _llt_tile(L_full, cfg, grid, axes)
+
+        # ---- theta-update: tile-local loss, grads psum'd over BOTH
+        # mesh axes into one shared replicated Adam step
+        def theta_loss_2d(p_):
+            y = _predict_scores_batch(p_, cfg, levels, x_g)
+            Pt = _soft_perm_tiles_2d(y, kk, cfg, node_mask, grid,
+                                     axes, sinkhorn_mode)
+            Mt = _reordered_2d(Pt, A_tile, cfg, grid, axes)
+            R = Mt - llt_t
+            per_b = jnp.sum(G_t * R, axis=(-2, -1)) \
+                + 0.5 * cfg.rho * jnp.sum(R * R, axis=(-2, -1))
+            if batch_weight is not None:
+                per_b = jnp.where(batch_weight > 0, per_b, 0.0)
+            return jnp.sum(per_b)
+
+        gT = jax.grad(theta_loss_2d)(params)
+        gT = jax.lax.psum(jax.lax.psum(gT, row_axis), col_axis)
+        updates, opt_state = opt.update(gT, opt_state, params)
+        params = apply_updates(params, updates)
+
+        # ---- recompute scores / permutations with the stepped params
+        y = _predict_scores_batch(params, cfg, levels, x_g)
+        kk1 = jax.vmap(lambda c: jax.random.fold_in(c, 1))(kk)
+        P_t = _soft_perm_tiles_2d(y, kk1, cfg, node_mask, grid, axes,
+                                  sinkhorn_mode)
+        M_t = _reordered_2d(P_t, A_tile, cfg, grid, axes)
+
+        # ---- dual update — tile-local, reusing the stripe-chunked LL^T
+        G_t = G_t + cfg.rho * (M_t - llt_t)
+        return (L_t, G_t, P_t, M_t, params, opt_state)
+
+    L_t, G_t, P_t, M_t, params, opt_state = jax.lax.fori_loop(
+        0, cfg.n_admm, body,
+        (L0_tile, G0_tile, P0_tile, M0_tile, params, opt_state))
+
+    L = tc.gather_full(L_t, row_axis, col_axis)
+    G = tc.gather_full(G_t, row_axis, col_axis)
+    M = tc.gather_full(M_t, row_axis, col_axis)
+    return params, opt_state, _batch_metrics(L, G, M, cfg)
+
+
+@functools.lru_cache(maxsize=16)
+def train_2d_fn(cfg: PFMConfig, opt, mesh, axes=("row", "col"),
+                sinkhorn_mode: str = "exact"):
+    """The shard_map'd (unjitted) 2-D trainer — the jit / .lower()
+    target for live training and the train_8k dry-run. Trace under
+    `kops.mesh_scope(mesh)` so kernel wrappers lower to their
+    shard-friendly XLA forms inside the region."""
+    from repro.distributed.sharding import (get_shard_map,
+                                            pfm_train_specs_2d)
+    in_specs, out_specs = pfm_train_specs_2d(axes)
+    grid = (mesh.shape[axes[0]], mesh.shape[axes[1]])
+    fn = functools.partial(_admm_train_2d, cfg=cfg, opt=opt, grid=grid,
+                           axes=tuple(axes), sinkhorn_mode=sinkhorn_mode)
+    # check_rep=False: replication of the P() outputs is by construction
+    # (identical psum'd updates on identical replicated state), but the
+    # checker cannot see through fori_loop carries.
+    return get_shard_map()(fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False)
+
+
+@functools.lru_cache(maxsize=16)
+def _trainer_2d(cfg: PFMConfig, opt, mesh, axes, sinkhorn_mode):
+    jitted = jax.jit(train_2d_fn(cfg, opt, mesh, axes, sinkhorn_mode))
+
+    def call(params, opt_state, A, levels_tuple, x_g, node_mask, keys,
+             batch_weight):
+        with kops.mesh_scope(mesh):
+            return jitted(params, opt_state, A, levels_tuple, x_g,
+                          node_mask, keys, batch_weight)
+    return call
+
+
+def admm_train_2d(params, opt_state, A, levels_tuple, x_g, node_mask,
+                  keys, batch_weight, *, cfg: PFMConfig, opt, mesh,
+                  axes=("row", "col"), sinkhorn_mode: str = "exact"):
+    """2-D model-parallel bucketed ADMM over a (row, col) mesh.
+
+    Each (n, n) of the bucket's L/Γ/P/M state is sharded over BOTH mesh
+    axes ((tn, tm) tiles); the batch dim is not sharded, so any B works
+    and no B-padding is needed. n must divide evenly by both mesh axis
+    sizes (power-of-two n_pad does, for power-of-two meshes). θ/Adam
+    state are replicated; tile-local θ-grad sums are psum'd over both
+    axes into one shared Adam step per ADMM iteration.
+
+    With a frozen encoder (lr=0) this is bitwise-equal per matrix to
+    `admm_train_batch` on a given backend (pinned by
+    tests/test_admm_2d.py); at lr > 0 the paths differ only in θ-grad
+    summation order and stay atol-close.
+    """
+    return _trainer_2d(cfg, opt, mesh, tuple(axes), sinkhorn_mode)(
         params, opt_state, A, levels_tuple, x_g, node_mask, keys,
         batch_weight)
 

@@ -68,14 +68,30 @@ def cholesky_fillin_ratio(A: sp.spmatrix, perm: np.ndarray | None = None):
 
 def lu_fillin_splu(A: sp.spmatrix, perm: np.ndarray | None = None):
     """The paper's evaluation: reorder, then SuperLU with NATURAL column
-    permutation. Returns dict(fillin, fillin_ratio, lu_time_s)."""
+    permutation. Returns dict(fillin, fillin_ratio, lu_time_s).
+
+    Singular / zero-pivot inputs (SuperLU raises RuntimeError) return a
+    sentinel row — dict(failed=True, error=...) with the metric keys set
+    to None — instead of propagating: a single structurally singular
+    matrix must not crash a full Table-2 sweep (launch/eval_fillin skips
+    and records it)."""
     A = sp.csr_matrix(A).astype(np.float64)
     if perm is not None:
         A = apply_perm(A, perm)
     A = A.tocsc()
     t0 = time.perf_counter()
-    lu = spla.splu(A, permc_spec="NATURAL",
-                   options=dict(SymmetricMode=True))
+    try:
+        lu = spla.splu(A, permc_spec="NATURAL",
+                       options=dict(SymmetricMode=True))
+    except (RuntimeError, ValueError) as e:
+        return {
+            "failed": True,
+            "error": f"{type(e).__name__}: {e}",
+            "fillin": None,
+            "fillin_ratio": None,
+            "lu_time_s": None,
+            "nnz_lu": None,
+        }
     dt = time.perf_counter() - t0
     fill = lu.L.nnz + lu.U.nnz - A.nnz
     return {

@@ -19,7 +19,7 @@ import scipy.sparse as sp
 
 from repro.core import admm as admm_mod
 from repro.core import encoder as enc
-from repro.core.admm import (PFMConfig, admm_train_batch,
+from repro.core.admm import (PFMConfig, admm_train_2d, admm_train_batch,
                              admm_train_batch_sharded, admm_train_matrix,
                              predict_scores_batch)
 from repro.core.graph import (GraphData, build_hierarchy, dense_padded,
@@ -192,7 +192,8 @@ class PFM:
 
     # ------------------------------------------------------------ train
     def fit(self, matrices: Sequence, epochs: int = 1, verbose=False, *,
-            batched: bool = True, max_batch: int = 32, mesh=None):
+            batched: bool = True, max_batch: int = 32, mesh=None,
+            mesh2d=None):
         """Algorithm 1: outer epochs over the training set, inner ADMM
         per matrix. `matrices` may be scipy matrices or (name, A) pairs.
 
@@ -211,10 +212,28 @@ class PFM:
         matrix ADMM state is batch-sharded, θ is replicated, and the
         per-shard θ-grad sums are psum'd into one shared Adam step. Per-
         matrix keys match the single-device bucketed path, so with a
-        frozen encoder the two are exactly equivalent per matrix."""
+        frozen encoder the two are exactly equivalent per matrix.
+
+        mesh2d, when given (implies batched; mutually exclusive with
+        mesh), runs each bucket through the 2-D MODEL-parallel trainer
+        (DESIGN.md §10): every (n, n) of the dense ADMM state is tiled
+        over the mesh's two axes — for matrices too large for one
+        device's memory — while the batch dim stays whole (no B
+        padding). Each bucket's padded size must divide evenly by both
+        mesh axis sizes. Per-matrix keys again match the single-device
+        bucketed path, so with a frozen encoder the two are exactly
+        equivalent per matrix (bitwise — tests/test_admm_2d.py)."""
         prepped = self._prep_items(matrices)  # PreparedMatrix pass through
 
+        if mesh is not None and mesh2d is not None:
+            raise ValueError("fit(mesh=...) (1-D data-parallel) and "
+                             "fit(mesh2d=...) (2-D model-parallel) are "
+                             "mutually exclusive")
         key = jax.random.PRNGKey(self.seed + 1)
+        if mesh2d is not None:
+            return self._fit_2d(prepped, mesh2d, epochs=epochs,
+                                max_batch=max_batch, key=key,
+                                verbose=verbose)
         if mesh is not None:
             batched = True  # the sharded trainer IS the batched trainer
         if not batched:
@@ -296,6 +315,67 @@ class PFM:
                     if verbose:
                         print(f"  epoch {epoch} {name} "
                               f"[B={bucket.size}]: l1={rec['l1']:.1f} "
+                              f"res={rec['residual']:.2f}")
+        return self.history
+
+    def _fit_2d(self, prepped, mesh2d, *, epochs, max_batch, key,
+                verbose):
+        """2-D model-parallel epochs (DESIGN.md §10): each bucket's
+        dense A stack is tiled over the mesh's two axes once (epochs
+        reuse the placed arrays), per-matrix keys are identical to the
+        single-device bucketed path, and every bucket runs through one
+        admm_train_2d call per epoch."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.sharding import pfm_bucket_shardings_2d
+        axes = tuple(mesh2d.axis_names[:2])
+        R, C = mesh2d.shape[axes[0]], mesh2d.shape[axes[1]]
+        buckets = pack_buckets(prepped, max_batch=max_batch)
+        placed = []
+        for bucket in buckets:
+            n_pad = bucket.A.shape[-1]
+            if n_pad % R or n_pad % C:
+                raise ValueError(
+                    f"bucket n_pad={n_pad} does not tile over the "
+                    f"{R}x{C} mesh — n_pad must divide by both axis "
+                    f"sizes (power-of-two n_pad does for power-of-two "
+                    f"meshes)")
+            # only the dense A stack is tiled; the hierarchy / x_g /
+            # node_mask / weight are replicated (matching
+            # pfm_train_specs_2d)
+            tree = {"A": bucket.A}
+            tree = jax.device_put(
+                tree, pfm_bucket_shardings_2d(mesh2d, tree, axes))
+            repl = {"levels": bucket.levels, "x_g": bucket.x_g,
+                    "node_mask": bucket.node_mask,
+                    "weight": jnp.ones((bucket.size,), jnp.float32)}
+            tree.update(jax.device_put(
+                repl, jax.tree_util.tree_map(
+                    lambda leaf: NamedSharding(
+                        mesh2d, P(*([None] * leaf.ndim))), repl)))
+            placed.append(tree)
+
+        for epoch in range(epochs):
+            for bucket, tree in zip(buckets, placed):
+                key, sub = jax.random.split(key)
+                keys = jax.random.split(sub, bucket.size)
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = admm_train_2d(
+                    self.params, self.opt_state, tree["A"],
+                    tree["levels"], tree["x_g"], tree["node_mask"],
+                    keys, tree["weight"], cfg=self.cfg, opt=self.opt,
+                    mesh=mesh2d, axes=axes)
+                metrics = {k: np.asarray(v) for k, v in metrics.items()}
+                jax.block_until_ready(self.params)
+                wall = time.perf_counter() - t0
+                for bi, name in enumerate(bucket.names):
+                    rec = {k: float(v[bi]) for k, v in metrics.items()}
+                    rec.update(epoch=epoch, matrix=name,
+                               wall_s=wall / bucket.size,
+                               bucket_size=bucket.size)
+                    self.history.append(rec)
+                    if verbose:
+                        print(f"  epoch {epoch} {name} "
+                              f"[2d {R}x{C}]: l1={rec['l1']:.1f} "
                               f"res={rec['residual']:.2f}")
         return self.history
 

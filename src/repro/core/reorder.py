@@ -50,9 +50,7 @@ def rank_distribution(scores: jnp.ndarray, sigma: float,
     upper = (pos[None, :] + 0.5 - mu[:, None]) / sd[:, None]
     lower = (pos[None, :] - 0.5 - mu[:, None]) / sd[:, None]
     # cancellation in ndtr(upper)-ndtr(lower) can go slightly negative
-    p_hat = jnp.maximum(_ndtr(upper) - _ndtr(lower), 0.0)
-    from repro.distributed.constrain import constrain_2d
-    return constrain_2d(p_hat)
+    return jnp.maximum(_ndtr(upper) - _ndtr(lower), 0.0)
 
 
 def _gumbel_log_p(p_hat, u, tau, noise_scale):
@@ -80,8 +78,6 @@ def gumbel_sinkhorn(p_hat: jnp.ndarray, key, *, tau: float = 0.3,
     """Gumbel-Sinkhorn on log P_hat (paper Algorithm 2)."""
     u = jax.random.uniform(key, p_hat.shape)
     log_p = _gumbel_log_p(p_hat, u, tau, noise_scale)
-    from repro.distributed.constrain import constrain_2d
-    log_p = constrain_2d(log_p)
     return jnp.exp(_sinkhorn_normalize(log_p, n_iters, use_kernel))
 
 
@@ -115,10 +111,168 @@ def soft_permutation_batch(scores, keys, *, sigma: float = 1e-3,
     # sees exactly the noise the sequential path would draw from its key
     u = jax.vmap(lambda k, p: jax.random.uniform(k, p.shape))(keys, p_hat)
     log_p = _gumbel_log_p(p_hat, u, tau, noise_scale)
-    from repro.distributed.constrain import constrain_2d
-    log_p = constrain_2d(log_p)
     log_p = _sinkhorn_normalize(log_p, n_iters, use_kernel)
     return jnp.swapaxes(jnp.exp(log_p), -1, -2)
+
+
+# -------------------- 2-D model-parallel tiles (DESIGN.md §10) ----------
+#
+# The functions below compute the (tn, tm) tile a ("row", "col") mesh
+# shard owns of the same quantities the full-matrix functions above
+# produce, inside a shard_map body. Everything elementwise is computed
+# tile-locally from GLOBAL coordinates (lax.axis_index-derived offsets);
+# the only full-row quantities — the SoftRank mean/variance, which need
+# a complete row of pairwise win probabilities — are computed from a
+# (tn, n) row panel built locally out of the replicated (n,) scores, so
+# the rank-distribution stage needs NO communication at all. Per-element
+# arithmetic deliberately mirrors `rank_distribution` op for op: the 2-D
+# trainer's lr=0 bitwise-parity contract (tests/test_admm_2d.py) rests
+# on these tiles agreeing exactly with slices of the reference output.
+
+def rank_distribution_tile(scores: jnp.ndarray, sigma: float,
+                           node_mask: jnp.ndarray | None,
+                           r0, tn: int, c0, tm: int):
+    """The [r0:r0+tn, c0:c0+tm] tile of `rank_distribution(scores,
+    sigma, node_mask)`. scores/node_mask are the full replicated (n,)
+    vectors; r0/c0 may be traced (mesh-derived) scalars."""
+    n = scores.shape[0]
+    if node_mask is not None:
+        scores = jnp.where(node_mask > 0, scores,
+                           jnp.min(scores) - 10.0 - jnp.arange(n) * 1e-3)
+    s_loc = jax.lax.dynamic_slice_in_dim(scores, r0, tn)
+    diff = s_loc[:, None] - scores[None, :]             # (tn, n) row panel
+    p_win = _ndtr(-diff / (jnp.sqrt(2.0) * sigma))
+    rows = r0 + jnp.arange(tn)
+    eye_pan = (rows[:, None] == jnp.arange(n)[None, :])
+    p_win = p_win * (1.0 - eye_pan.astype(scores.dtype))
+    mu = jnp.sum(p_win, axis=1)                         # full-row sums
+    var = jnp.sum(p_win * (1.0 - p_win), axis=1)
+    sd = jnp.sqrt(var + 1e-6)
+    pos = (c0 + jnp.arange(tm)).astype(scores.dtype)
+    upper = (pos[None, :] + 0.5 - mu[:, None]) / sd[:, None]
+    lower = (pos[None, :] - 0.5 - mu[:, None]) / sd[:, None]
+    return jnp.maximum(_ndtr(upper) - _ndtr(lower), 0.0)
+
+
+def _uniform_tile_fallback(key, n, m, r0, c0, tn, tm):
+    """Draw-and-slice: materializes the full (n, m) draw (replicated on
+    every shard) but matches the reference path's noise under ANY PRNG
+    configuration — the same `jax.random.uniform` the single-device
+    trainer calls."""
+    u = jax.random.uniform(key, (n, m))
+    return jax.lax.dynamic_slice(u, (r0, c0), (tn, tm))
+
+
+def _counter_tile_ok() -> bool:
+    """The direct-from-counters tile draw replicates the LEGACY
+    threefry2x32 counter pairing specifically: under
+    jax_threefry_partitionable=True (a different counter mapping, and
+    the direction jax defaults are moving) or a non-threefry default
+    PRNG impl it would silently produce DIFFERENT noise than the
+    reference draw — so those configs must take the draw-and-slice
+    fallback instead."""
+    cfg = jax.config
+    if bool(getattr(cfg, "jax_threefry_partitionable", False)):
+        return False
+    impl = getattr(cfg, "jax_default_prng_impl", "threefry2x32")
+    return impl == "threefry2x32"
+
+
+def _uniform_tile(key, n: int, m: int, r0, tn: int, c0, tm: int):
+    """Exactly `jax.random.uniform(key, (n, m))[r0:r0+tn, c0:c0+tm]`,
+    without materializing the full draw: threefry is counter-based, so
+    the tile's random bits are generated directly from the tile
+    elements' flat counters (accounting for threefry_2x32's split-half
+    counter pairing). Falls back to draw-and-slice whenever the PRNG
+    configuration is anything but legacy threefry2x32 (see
+    `_counter_tile_ok`) or the threefry core is not importable."""
+    if not _counter_tile_ok():
+        return _uniform_tile_fallback(key, n, m, r0, c0, tn, tm)
+    try:
+        from jax._src.prng import threefry_2x32
+    except ImportError:  # pragma: no cover - jax internals moved
+        return _uniform_tile_fallback(key, n, m, r0, c0, tn, tm)
+    size = n * m
+    assert size % 2 == 0, (n, m)
+    half = size // 2
+    rows = r0 + jnp.arange(tn)
+    cols = c0 + jnp.arange(tm)
+    p = (rows[:, None] * m + cols[None, :]).reshape(-1)
+    # uniform's random_bits calls threefry_2x32(key, iota(size)), which
+    # splits the counters in half and maps pair (i, half+i) to outputs
+    # (out[i], out[half+i]) — so flat position p is lane p//half of
+    # counter pair p%half
+    i = (p % half).astype(jnp.uint32)
+    lane = p // half
+    cnt = jnp.concatenate([i, i + jnp.uint32(half)])
+    bits2 = threefry_2x32(key, cnt)
+    k2 = tn * tm
+    bits = jnp.where(lane == 0, bits2[:k2], bits2[k2:])
+    # float conversion mirrors jax's _uniform for f32 (9-bit shift into
+    # the mantissa, bitcast, shift to [0, 1))
+    fb = (bits >> jnp.uint32(9)) | jnp.uint32(0x3f800000)
+    u = jax.lax.bitcast_convert_type(fb, jnp.float32) - 1.0
+    return jax.lax.max(0.0, u).reshape(tn, tm)
+
+
+def soft_permutation_batch_2d(scores, keys, *, grid, row_axis: str,
+                              col_axis: str, sigma: float = 1e-3,
+                              tau: float = 0.3, n_iters: int = 20,
+                              node_mask=None, noise_scale=1.0,
+                              use_kernel: bool = True,
+                              mode: str = "exact"):
+    """2-D-sharded soft_permutation_batch for a shard_map body: returns
+    this shard's (B, tn, tm) tile of P (rows = positions), matching
+    `soft_permutation_batch`'s output per matrix. scores (B, n) and keys
+    (B, 2) are replicated; grid is the static (R, C) mesh shape over
+    (row_axis, col_axis). The SoftRank and Gumbel stages are always
+    tile-local (per-matrix Gumbel draws come from `_uniform_tile`, so
+    each tile sees exactly the noise the single-device batched path
+    would place there).
+
+    mode selects how the Sinkhorn normalizations run:
+      * "exact" (default) — all-gather the log-space tiles to the full
+        (B, n, n) and run the same dispatch the single-device path uses
+        (`kops.sinkhorn`; inside a mesh that is the scan-chunked form
+        PR 2 pinned bitwise-equal to the batched Pallas oracle), then
+        slice tiles back out. This is what keeps the 2-D trainer
+        bitwise-equal to the bucketed path at lr=0: the reduction runs
+        at reference shape behind the same op boundary.
+      * "tiled" — `kernels.sinkhorn.sinkhorn_tiled`: each normalization
+        all-gathers only a one-axis panel and reduces locally, so the
+        SINKHORN stage never materializes an (n, n) buffer (the final
+        tile transpose still gathers once — replacing it with a
+        pairwise tile exchange is part of the ROADMAP TPU-transients
+        item). XLA's fusion context shifts the lse's exp/sum by ~1 ulp
+        per iteration relative to the reference program, so this mode's
+        parity contract is atol-tight, not bitwise
+        (tests/test_admm_2d.py pins both)."""
+    from repro.kernels.sinkhorn import sinkhorn_tiled
+    B, n = scores.shape
+    R, C = grid
+    tn, tm = n // R, n // C
+    r0 = jax.lax.axis_index(row_axis) * tn
+    c0 = jax.lax.axis_index(col_axis) * tm
+    if node_mask is None:
+        p_hat = jax.vmap(
+            lambda y: rank_distribution_tile(y, sigma, None, r0, tn,
+                                             c0, tm))(scores)
+    else:
+        p_hat = jax.vmap(
+            lambda y, msk: rank_distribution_tile(y, sigma, msk, r0, tn,
+                                                  c0, tm))(scores,
+                                                           node_mask)
+    u = jax.vmap(lambda k: _uniform_tile(k, n, n, r0, tn, c0, tm))(keys)
+    u = jax.lax.stop_gradient(u)
+    log_p = _gumbel_log_p(p_hat, u, tau, noise_scale)
+    from repro.distributed import constrain as tc
+    if mode == "tiled":
+        x = sinkhorn_tiled(log_p, n_iters, row_axis, col_axis)
+        return tc.transpose_tile(jnp.exp(x), grid, row_axis, col_axis)
+    lp_full = tc.gather_full(log_p, row_axis, col_axis)
+    sk_full = _sinkhorn_normalize(lp_full, n_iters, use_kernel)
+    return tc.slice_tile(jnp.swapaxes(jnp.exp(sk_full), -1, -2), grid,
+                         row_axis, col_axis)
 
 
 def permutation_from_scores(scores, node_mask=None):

@@ -1,78 +1,83 @@
-"""Sharding constraints for PFM's dense training tensors.
+"""Tile collectives for the 2-D model-parallel ADMM trainer.
 
-Two distribution regimes use these helpers:
+History: this module used to hold the REPRO_PFM_SHARD2D annotation
+machinery — `with_sharding_constraint` hints that asked GSPMD to keep
+the dense (n, n) PFM tensors 2-D-sharded through an otherwise
+unpartitioned program. That escape hatch is retired: the real 2-D
+execution path (`core/admm.admm_train_2d`, DESIGN.md §10) runs the
+whole ADMM loop inside one shard_map region over a ("row", "col") mesh,
+and the helpers here are the explicit data movement it is built from.
 
-  * **1-D data-parallel training** (`admm_train_batch_sharded`,
-    DESIGN.md §8): the bucket's (B, n, n) state is explicitly
-    batch-sharded via shard_map PartitionSpecs (distributed/sharding.py
-    `pfm_batch_spec`); no in-graph constraints are needed there.
-  * **2-D GSPMD lowering** of the *sequential* single-matrix step at
-    production n (launch/pfm_step.py `train_8k`): the (n, n)
-    intermediates (SoftRank P_hat, Sinkhorn log_p, ADMM L/Γ/M) are
-    annotated with a trailing (data, model) constraint so GSPMD keeps
-    them 2-D-sharded instead of replicating through the elementwise
-    chain. `pfm_axes_scope` activates those annotations at trace time.
-
-`constrain` stays best-effort: outside any mesh context the
-with_sharding_constraint call fails and the value passes through
-unchanged, so the same code traces on a laptop and on a pod.
+Conventions: every (…, n, n) tensor is sharded over its trailing two
+dims as (…, tn, tm) tiles, tn = n / R rows by tm = n / C cols, with the
+leading (batch) dims unsharded. `grid` arguments are the static (R, C)
+mesh shape; axis names are passed explicitly so the same helpers serve
+the ("row", "col") training mesh and the production ("data", "model")
+dry-run mesh.
 """
 from __future__ import annotations
 
-import contextlib
-import os
-
 import jax
-from jax.sharding import PartitionSpec as P
-
-# Trailing-2-dims constraint axes for the dense (n, n) PFM tensors, or
-# None when inactive. REPRO_PFM_SHARD2D=1 (the historical env lever)
-# still activates the default ("data", "model") annotation globally; it
-# no longer forces PFM.fit onto the sequential path — batched training
-# with a mesh goes through fit(mesh=...) instead.
-_PFM_AXES: tuple | None = (
-    ("data", "model")
-    if os.environ.get("REPRO_PFM_SHARD2D", "0") == "1" else None)
+import jax.numpy as jnp
 
 
-def constrain(x, *spec):
-    try:
-        return jax.lax.with_sharding_constraint(x, P(*spec))
-    except Exception:
-        return x
+def gather_cols(x_tile, row_axis: str):
+    """(…, tn, tm) tile -> (…, n, tm) full-height column panel (gather
+    over the row axis)."""
+    return jax.lax.all_gather(x_tile, row_axis, axis=x_tile.ndim - 2,
+                              tiled=True)
 
 
-def set_pfm_axes(axes: tuple | None):
-    """Set the (data, model)-style axis pair `constrain_2d` annotates
-    with; None disables the annotations (the default)."""
-    global _PFM_AXES
-    _PFM_AXES = tuple(axes) if axes is not None else None
+def gather_rows(x_tile, col_axis: str):
+    """(…, tn, tm) tile -> (…, tn, n) full-width row panel (gather over
+    the column axis)."""
+    return jax.lax.all_gather(x_tile, col_axis, axis=x_tile.ndim - 1,
+                              tiled=True)
 
 
-def pfm_axes() -> tuple | None:
-    return _PFM_AXES
+def gather_full(x_tile, row_axis: str, col_axis: str):
+    """(…, tn, tm) tile -> the full (…, n, n) array on every device."""
+    return gather_cols(gather_rows(x_tile, col_axis), row_axis)
 
 
-@contextlib.contextmanager
-def pfm_axes_scope(axes: tuple | None = ("data", "model")):
-    """Activate 2-D constraints while tracing a GSPMD-sharded PFM step
-    (launch/pfm_step.py). Trace-time flag: wrap the .lower()/first call,
-    not the execution."""
-    prev = _PFM_AXES
-    set_pfm_axes(axes)
-    try:
-        yield
-    finally:
-        set_pfm_axes(prev)
+def slice_tile(full, grid, row_axis: str, col_axis: str):
+    """The local (…, tn, tm) tile of a replicated full (…, n, n) array
+    (inverse of `gather_full`)."""
+    R, C = grid
+    n, m = full.shape[-2:]
+    tn, tm = n // R, m // C
+    r = jax.lax.axis_index(row_axis)
+    c = jax.lax.axis_index(col_axis)
+    t = jax.lax.dynamic_slice_in_dim(full, r * tn, tn, axis=full.ndim - 2)
+    return jax.lax.dynamic_slice_in_dim(t, c * tm, tm, axis=full.ndim - 1)
 
 
-def constrain_2d(x):
-    """Annotate the trailing two (n, n) dims of x with the active PFM
-    axis pair, leading dims (batch) unsharded. No-op when no axis pair
-    is active or x is not at least 2-D."""
-    if _PFM_AXES is None:
-        return x
-    ndim = getattr(x, "ndim", 0)
-    if ndim < 2:
-        return x
-    return constrain(x, *((None,) * (ndim - 2) + _PFM_AXES))
+def transpose_tile(x_tile, grid, row_axis: str, col_axis: str):
+    """Local tile of the global transpose. A tile of X^T generally lives
+    on a different device than any tile of X (and spans devices on a
+    non-square mesh), so this gathers, transposes replicated, and
+    re-slices — pure data movement, bitwise-exact."""
+    full = gather_full(x_tile, row_axis, col_axis)
+    return slice_tile(jnp.swapaxes(full, -1, -2), grid, row_axis,
+                      col_axis)
+
+
+def stripe_rows(full, grid, row_axis: str):
+    """Rows-slice of a replicated full array down to this shard's row
+    block: (…, n, m) -> (…, tn, m)."""
+    R, _ = grid
+    tn = full.shape[-2] // R
+    r = jax.lax.axis_index(row_axis)
+    return jax.lax.dynamic_slice_in_dim(full, r * tn, tn,
+                                        axis=full.ndim - 2)
+
+
+def col_block_rows(full, grid, col_axis: str):
+    """Rows-slice of a replicated full array by this shard's COLUMN
+    block: (…, n, m) -> (…, tm, m). Used to build the column panel of a
+    transpose: (X^T)[:, c·tm:(c+1)·tm] == col_block_rows(X)^T."""
+    _, C = grid
+    tm = full.shape[-2] // C
+    c = jax.lax.axis_index(col_axis)
+    return jax.lax.dynamic_slice_in_dim(full, c * tm, tm,
+                                        axis=full.ndim - 2)

@@ -234,6 +234,41 @@ def pfm_train_specs(axis: str = "data"):
     return in_specs, out_specs
 
 
+def pfm_train_specs_2d(axes=("row", "col")):
+    """(in_specs, out_specs) for shard_map-ing the 2-D model-parallel
+    ADMM trainer `_admm_train_2d(params, opt_state, A, levels, x_g,
+    node_mask, keys, batch_weight) -> (params, opt_state, metrics)`
+    (DESIGN.md §10).
+
+    Only A is sharded — (B, n, n) tiled over its trailing two dims; the
+    batch dim stays whole (no B-padding needed, unlike the 1-D
+    data-parallel trainer). The hierarchy / x_g / node_mask / keys are
+    O(n)-or-less and replicated, as are θ, the Adam state, and the (B,)
+    metrics."""
+    row, col = axes
+    repl = P()
+    tile = P(None, row, col)
+    in_specs = (repl, repl, tile, repl, repl, repl, repl, repl)
+    out_specs = (repl, repl, repl)
+    return in_specs, out_specs
+
+
+def pfm_bucket_shardings_2d(mesh, bucket_tree, axes=("row", "col")):
+    """NamedShardings for placing a bucket on a 2-D mesh before the 2-D
+    trainer runs: the dense A stack (ndim >= 3) is tiled over its
+    trailing two dims, everything else is replicated."""
+    row, col = axes
+
+    def one(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim >= 3 and leaf.shape[-2] % mesh.shape[row] == 0 \
+                and leaf.shape[-1] % mesh.shape[col] == 0:
+            return NamedSharding(
+                mesh, P(*((None,) * (ndim - 2) + (row, col))))
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return jax.tree_util.tree_map(one, bucket_tree)
+
+
 def pfm_batch_shardings(mesh, bucket_tree, axis: str = "data"):
     """NamedShardings for placing a bucket's stacked tensors on the mesh
     before the sharded trainer runs (avoids a gather-then-scatter on

@@ -8,8 +8,11 @@ a gradient path gets a custom_vjp:
   * flash_attention — forward = fused kernel; backward = q-chunked
     recomputation (flash-style: lse and P are rebuilt per chunk, nothing
     O(Sq*Sk) is ever materialized across chunks).
-prox_tril is never differentiated (it implements the nonsmooth proximal
-step whose "gradient" is handled by ADMM itself).
+  * prox_tril — forward = fused (tile-offset-aware) kernel; backward =
+    VJP of the reference at the saved inputs, like sinkhorn. (The ADMM
+    L-update still treats the prox nonsmoothly — the VJP exists so the
+    fused kernel is safe anywhere a gradient path touches it; pinned by
+    tests/test_kernel_grads.py.)
 
 On TPU backends the kernels run compiled; everywhere else (this CPU
 container, unit tests) they run under interpret=True, falling back to
@@ -132,19 +135,53 @@ def sinkhorn(log_p: jnp.ndarray, n_iters: int = 20) -> jnp.ndarray:
 
 
 # ------------------------------------------------------------ prox_tril
-def prox_tril(L, G, eta, thresh) -> jnp.ndarray:
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _prox_tril_cvjp(L, G, eta, thresh, row_offset, col_offset, block):
+    return prox_tril_pallas(L, G, eta, thresh, row_offset, col_offset,
+                            block=block, interpret=_interpret())
+
+
+def _prox_tril_fwd(L, G, eta, thresh, row_offset, col_offset, block):
+    out = _prox_tril_cvjp(L, G, eta, thresh, row_offset, col_offset,
+                          block)
+    return out, (L, G, eta, thresh, row_offset, col_offset)
+
+
+def _prox_tril_bwd(block, res, g):
+    L, G, eta, thresh, ro, co = res
+    _, vjp = jax.vjp(
+        lambda l, gg, e, t: ref.prox_tril_ref(l, gg, e, t, ro, co),
+        L, G, eta, thresh)
+    dL, dG, de, dt = vjp(g)
+    return (dL, dG, de, dt, jnp.zeros_like(ro), jnp.zeros_like(co))
+
+
+_prox_tril_cvjp.defvjp(_prox_tril_fwd, _prox_tril_bwd)
+
+
+def prox_tril(L, G, eta, thresh, row_offset=0, col_offset=0) -> jnp.ndarray:
     """eta/thresh may be traced scalars (Lipschitz-scaled ADMM step).
     L, G: (n, m) or batched (B, n, m); in the batched form eta/thresh may
-    be per-matrix (B,) vectors — one launch covers the whole bucket."""
+    be per-matrix (B,) vectors — one launch covers the whole bucket.
+    row_offset/col_offset (ints or traced scalars) place the operand as a
+    tile of a larger global matrix: the tril mask compares global
+    coordinates, which is what lets each shard of the 2-D model-parallel
+    trainer mask its own share of the strict-upper region (DESIGN.md
+    §10). The kernel path carries a custom VJP (backward = VJP of the
+    oracle at the saved inputs — exact, since ref == kernel math), so
+    the fused form sits on gradient paths safely."""
     n, m = L.shape[-2:]
     if _force_ref() or L.ndim > 3 or n % 128 != 0 or m % 128 != 0:
-        return ref.prox_tril_ref(L, G, eta, thresh)
+        return ref.prox_tril_ref(L, G, eta, thresh, row_offset,
+                                 col_offset)
     if dist_mode():
         # elementwise — the oracle IS the shard-friendly XLA form
-        return ref.prox_tril_ref(L, G, eta, thresh)
+        return ref.prox_tril_ref(L, G, eta, thresh, row_offset,
+                                 col_offset)
     block = 256 if n % 256 == 0 else 128
-    return prox_tril_pallas(L, G, eta, thresh, block=block,
-                            interpret=_interpret())
+    return _prox_tril_cvjp(L, G, eta, thresh,
+                           jnp.asarray(row_offset, jnp.float32),
+                           jnp.asarray(col_offset, jnp.float32), block)
 
 
 # ------------------------------------------------------- flash attention
@@ -242,6 +279,11 @@ def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
 
 # ----------------------------------------------------------------- spmm
 def spmm(values, col_ids, x):
-    if _force_ref() or dist_mode():
+    if _force_ref():
         return ref.spmm_ref(values, col_ids, x)
+    if dist_mode():
+        # block-row-scanned form: same per-block-row einsum as the
+        # oracle, but one block-row resident per scan step — the
+        # shard-friendly chunked contraction (DESIGN.md §10)
+        return ref.spmm_chunked(values, col_ids, x)
     return spmm_pallas(values, col_ids, x, interpret=_interpret())

@@ -15,7 +15,14 @@ Batch axis (DESIGN.md §2): (B, n, n) inputs add a leading grid dimension
 — grid = (B, n//block, m//block) — so the whole bucket's L-update is one
 kernel launch. eta/thresh become per-matrix (B,) vectors (each matrix in
 the bucket has its own Lipschitz-scaled step); they ride in the scalar
-prefetch operand as a (2, B) panel indexed by the batch program id.
+prefetch operand as a (4, B) panel indexed by the batch program id.
+
+Tile offsets (DESIGN.md §10): under the 2-D model-parallel trainer each
+shard's operand is a tile of a larger global (n, n) factor, so the tril
+mask must compare GLOBAL coordinates. row_offset/col_offset (runtime
+scalars — they come off `lax.axis_index` inside shard_map) ride in the
+same scalar-prefetch panel; zero offsets reproduce the original kernel
+exactly.
 """
 from __future__ import annotations
 
@@ -33,28 +40,37 @@ def _prox_tril_kernel(scal_ref, l_ref, g_ref, o_ref, *, block: int):
     j = pl.program_id(2)
     eta = scal_ref[0, b]
     thr = scal_ref[1, b]
+    # global tile origin: f32 in SMEM (one prefetch panel), exact for
+    # any realistic n (< 2^24)
+    r0 = scal_ref[2, b].astype(jnp.int32)
+    c0 = scal_ref[3, b].astype(jnp.int32)
     x = l_ref[0].astype(jnp.float32) - eta * g_ref[0].astype(jnp.float32)
     s = jnp.sign(x) * jnp.maximum(jnp.abs(x) - thr, 0.0)
-    rows = i * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-    cols = j * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    rows = r0 + i * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = c0 + j * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     o_ref[0] = jnp.where(rows >= cols, s, 0.0).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def prox_tril_pallas(L: jnp.ndarray, G: jnp.ndarray, eta, thresh,
+                     row_offset=0, col_offset=0,
                      block: int = 256, interpret: bool = False):
     """L, G: (n, m) or (B, n, m); a 2-D input is lifted to B=1 so one
     code path serves both. eta/thresh may be scalars (shared) or (B,)
-    vectors (per-matrix step sizes)."""
+    vectors (per-matrix step sizes). row_offset/col_offset place the
+    operand as a tile of a larger global matrix (see module docstring);
+    they may be Python ints or traced scalars."""
     squeeze = L.ndim == 2
     if squeeze:
         L, G = L[None], G[None]
     b, n, m = L.shape
     block = min(block, n, m)
     assert n % block == 0 and m % block == 0, (n, m, block)
-    scal = jnp.stack([jnp.broadcast_to(jnp.asarray(eta, jnp.float32), (b,)),
-                      jnp.broadcast_to(jnp.asarray(thresh, jnp.float32),
-                                       (b,))])
+    scal = jnp.stack(
+        [jnp.broadcast_to(jnp.asarray(eta, jnp.float32), (b,)),
+         jnp.broadcast_to(jnp.asarray(thresh, jnp.float32), (b,)),
+         jnp.broadcast_to(jnp.asarray(row_offset, jnp.float32), (b,)),
+         jnp.broadcast_to(jnp.asarray(col_offset, jnp.float32), (b,))])
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, n // block, m // block),

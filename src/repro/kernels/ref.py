@@ -43,13 +43,28 @@ def _bcast_scalar(s, ndim: int):
 
 
 def prox_tril_ref(L: jnp.ndarray, G: jnp.ndarray, eta,
-                  thresh) -> jnp.ndarray:
+                  thresh, row_offset=0, col_offset=0) -> jnp.ndarray:
     """Fused proximal step: tril(soft_threshold(L - eta*G, thresh)).
-    L, G: (n, m) or (B, n, m); eta/thresh: scalar or per-matrix (B,)."""
+    L, G: (n, m) or (B, n, m); eta/thresh: scalar or per-matrix (B,).
+
+    row_offset/col_offset (ints or traced scalars) place the operand as
+    a TILE of a larger global matrix: the tril mask compares global
+    coordinates `row_offset + i >= col_offset + j`, so a ("row", "col")
+    mesh shard of the 2-D model-parallel trainer (DESIGN.md §10) masks
+    exactly its share of the strict-upper region. Static-zero offsets
+    keep the original `jnp.tril` op so the single-device path is
+    bit-for-bit what it always was."""
     X = L - _bcast_scalar(eta, L.ndim) * G
     S = jnp.sign(X) * jnp.maximum(jnp.abs(X) - _bcast_scalar(
         thresh, L.ndim), 0.0)
-    return jnp.tril(S)
+    if isinstance(row_offset, int) and isinstance(col_offset, int) \
+            and row_offset == 0 and col_offset == 0:
+        return jnp.tril(S)
+    rows = row_offset + jax.lax.broadcasted_iota(
+        jnp.int32, S.shape, S.ndim - 2)
+    cols = col_offset + jax.lax.broadcasted_iota(
+        jnp.int32, S.shape, S.ndim - 1)
+    return jnp.where(rows >= cols, S, 0.0).astype(S.dtype)
 
 
 def spmm_ref(values: jnp.ndarray, col_ids: jnp.ndarray,
@@ -69,6 +84,26 @@ def spmm_ref(values: jnp.ndarray, col_ids: jnp.ndarray,
         return jnp.einsum("kij,kjc->ic", vr, gathered)
 
     out = jax.vmap(row)(values, col_ids)        # (nbr, bs, ncols)
+    return out.reshape(nbr * bs, ncols)
+
+
+def spmm_chunked(values: jnp.ndarray, col_ids: jnp.ndarray,
+                 x: jnp.ndarray) -> jnp.ndarray:
+    """Shard-friendly SpMM: lax.scan over block-rows, one block-row's
+    (max_bpr, bs, bs) values panel resident per step — the XLA analogue
+    of the Pallas kernel's (nbr, max_bpr) grid, used in distributed
+    lowering where a pallas_call cannot be partitioned. Per-block-row
+    math is identical to `spmm_ref` (same einsum), so results are
+    bitwise equal to the vmapped oracle on a given backend."""
+    nbr, max_bpr, bs, _ = values.shape
+    ncols = x.shape[1]
+    xb = x.reshape(-1, bs, ncols)
+
+    def row(_, inp):
+        vr, cr = inp
+        return None, jnp.einsum("kij,kjc->ic", vr, xb[cr])
+
+    _, out = jax.lax.scan(row, None, (values, col_ids))
     return out.reshape(nbr * bs, ncols)
 
 

@@ -54,6 +54,38 @@ def _sinkhorn_kernel(x_ref, o_ref, *, n_iters: int):
     o_ref[...] = jax.lax.fori_loop(0, n_iters, body, x).astype(o_ref.dtype)
 
 
+def sinkhorn_tiled(x_tile: jnp.ndarray, n_iters: int,
+                   row_axis: str, col_axis: str) -> jnp.ndarray:
+    """2-D model-parallel Sinkhorn for a shard_map body (DESIGN.md §10).
+
+    x_tile: (..., tn, tm) — this device's tile of a global (..., n, n)
+    log-space matrix sharded over a (row_axis, col_axis) mesh. Each
+    normalization reduces over exactly one mesh axis: the column step
+    all-gathers the tile over `row_axis` into a full-height (n, tm)
+    panel, the row step over `col_axis` into a full-width (tn, n) panel,
+    and the logsumexp runs locally on the gathered panel. Gather-then-
+    reduce is chosen over a psum-of-partials logsumexp deliberately: the
+    local reduction then sees the full axis extent in the same element
+    order as the single-device kernel, which is what keeps the 2-D
+    trainer bitwise-equal to the bucketed path at lr=0
+    (tests/test_admm_2d.py); a psum of per-shard partial sums would
+    reassociate the f32 sum and break that contract.
+
+    The iteration count is static and the loop is unrolled (like
+    `ref.sinkhorn_ref`), so reverse-mode AD — needed by the θ-grads of
+    the 2-D trainer — works through the collectives.
+    """
+    x = x_tile.astype(jnp.float32)
+    for _ in range(n_iters):
+        colp = jax.lax.all_gather(x, row_axis, axis=x.ndim - 2,
+                                  tiled=True)
+        x = x - _logsumexp(colp, axis=-2)
+        rowp = jax.lax.all_gather(x, col_axis, axis=x.ndim - 1,
+                                  tiled=True)
+        x = x - _logsumexp(rowp, axis=-1)
+    return x
+
+
 @functools.partial(jax.jit, static_argnames=("n_iters", "interpret"))
 def sinkhorn_pallas(log_p: jnp.ndarray, n_iters: int = 20,
                     interpret: bool = False) -> jnp.ndarray:

@@ -232,9 +232,12 @@ def _run_pfm_cell(shape_name: str, mesh, n_chips) -> dict:
         params_shape, opt, opt_state_shape = \
             pfm_launch.pfm_params_and_opt(cfg)
         kind = pfm_launch.PFM_SHAPES[shape_name]["kind"]
-        if kind == "train_batch":
-            # data-parallel trainer: θ / Adam state replicated (the
-            # shard_map in_specs demand it), bucket batch-sharded
+        if kind in ("train_batch", "train_2d"):
+            # shard_map trainers: θ / Adam state replicated (the
+            # in_specs demand it); the bucket is batch-sharded (1-D
+            # data-parallel, DESIGN.md §8) or (n, n)-tiled (2-D
+            # model-parallel, DESIGN.md §10 — the REAL train_8k path,
+            # replacing the retired REPRO_PFM_SHARD2D annotation mode)
             repl = jax.tree_util.tree_map(
                 lambda s: jax.ShapeDtypeStruct(
                     s.shape, s.dtype,
@@ -243,7 +246,11 @@ def _run_pfm_cell(shape_name: str, mesh, n_chips) -> dict:
                 lambda s: jax.ShapeDtypeStruct(
                     s.shape, s.dtype,
                     sharding=NamedSharding(mesh, P())), opt_state_shape)
-            step = pfm_launch.make_pfm_train_batch_step(cfg, opt, mesh)
+            if kind == "train_2d":
+                step = pfm_launch.make_pfm_train_2d_step(cfg, opt, mesh)
+            else:
+                step = pfm_launch.make_pfm_train_batch_step(cfg, opt,
+                                                            mesh)
             with mesh:
                 return jax.jit(step).lower(
                     repl, opt_repl, specs["A"], specs["levels"],
@@ -252,17 +259,6 @@ def _run_pfm_cell(shape_name: str, mesh, n_chips) -> dict:
         params_in = shd.attach(params_shape,
                                shd.param_shardings(mesh, params_shape))
         with mesh:
-            if kind == "train":
-                from repro.distributed.constrain import pfm_axes_scope
-                opt_in = shd.attach(
-                    opt_state_shape,
-                    shd.param_shardings(mesh, opt_state_shape))
-                key_spec = jax.eval_shape(lambda: jax.random.PRNGKey(0))
-                step = pfm_launch.make_pfm_train_step(cfg, opt)
-                with pfm_axes_scope(("data", "model")):
-                    return jax.jit(step).lower(
-                        params_in, opt_in, specs["A"], specs["levels"],
-                        specs["x_g"], specs["node_mask"], key_spec)
             step = pfm_launch.make_pfm_infer_step(cfg)
             return jax.jit(step).lower(params_in, specs["levels"],
                                        specs["x_g"], specs["node_mask"])
@@ -272,7 +268,7 @@ def _run_pfm_cell(shape_name: str, mesh, n_chips) -> dict:
     compiled = lower_with(4).compile()
     rec["compile_s"] = time.perf_counter() - t1
     rec["memory"] = analysis.memory_analysis_dict(compiled)
-    if kind in ("train", "train_batch"):
+    if kind in ("train_2d", "train_batch"):
         # extrapolate over ADMM iterations (fori body counted once)
         c1 = _cell_costs(lower_with(1).compile(), mesh)
         c2 = _cell_costs(lower_with(2).compile(), mesh)

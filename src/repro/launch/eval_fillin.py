@@ -62,29 +62,45 @@ def smoke_test_set(seed: int = 1):
 
 
 def evaluate(cases, perms_by_method, order_s_by_method):
-    """Per-method rows: per-case fill-in records + aggregate means."""
+    """Per-method rows: per-case fill-in records + aggregate means.
+
+    Singular / zero-pivot matrices (lu_fillin_splu's `failed` sentinel)
+    are skipped-and-recorded: the failed case rides along in the row's
+    `cases` with its error string and is counted in that method's
+    `n_failed`. Because zero-pivot is permutation-dependent (a matrix
+    can fail under one ordering and factor under another), a case that
+    failed under ANY method is excluded from EVERY method's aggregates
+    — otherwise the per-method means would be computed over different
+    case subsets and the pfm-vs-natural gate would compare
+    incomparable numbers."""
+    results = {
+        method: [
+            {"category": cat, "n": int(A.shape[0]), "nnz": int(A.nnz),
+             **fillin.lu_fillin_splu(A, perm)}
+            for (cat, A), perm in zip(cases, perms)]
+        for method, perms in perms_by_method.items()}
+    bad_idx = {i for per_case in results.values()
+               for i, c in enumerate(per_case) if c.get("failed")}
     rows = []
-    for method, perms in perms_by_method.items():
-        per_case = []
-        for (cat, A), perm in zip(cases, perms):
-            res = fillin.lu_fillin_splu(A, perm)
-            per_case.append({"category": cat, "n": int(A.shape[0]),
-                             "nnz": int(A.nnz), **res})
+    for method, per_case in results.items():
+        ok = [c for i, c in enumerate(per_case) if i not in bad_idx]
         row = {
             "method": method,
             "mean_fillin_ratio": float(np.mean(
-                [c["fillin_ratio"] for c in per_case])),
+                [c["fillin_ratio"] for c in ok])) if ok else None,
             "mean_fillin": float(np.mean(
-                [c["fillin"] for c in per_case])),
+                [c["fillin"] for c in ok])) if ok else None,
             "mean_lu_time_ms": float(np.mean(
-                [c["lu_time_s"] for c in per_case]) * 1e3),
+                [c["lu_time_s"] for c in ok]) * 1e3) if ok else None,
             "order_time_ms_total": order_s_by_method[method] * 1e3,
+            "n_failed": sum(1 for c in per_case if c.get("failed")),
+            "n_excluded": len(bad_idx),
             "cases": per_case,
         }
-        cats = sorted({c["category"] for c in per_case})
+        cats = sorted({c["category"] for c in ok})
         for cat in cats:
             row[f"ratio_{cat}"] = float(np.mean(
-                [c["fillin_ratio"] for c in per_case
+                [c["fillin_ratio"] for c in ok
                  if c["category"] == cat]))
         rows.append(row)
     return rows
@@ -111,8 +127,10 @@ def run(pfm: PFM, cases, out_path: pathlib.Path, smoke: bool = False):
 
     rows = evaluate(cases, perms_by_method, order_s)
     by_method = {r["method"]: r for r in rows}
-    beats = by_method["pfm"]["mean_fillin_ratio"] \
-        < by_method["natural"]["mean_fillin_ratio"]
+    pfm_ratio = by_method["pfm"]["mean_fillin_ratio"]
+    nat_ratio = by_method["natural"]["mean_fillin_ratio"]
+    beats = pfm_ratio is not None and nat_ratio is not None \
+        and pfm_ratio < nat_ratio
     payload = {
         "protocol": {
             "smoke": smoke,
@@ -127,11 +145,15 @@ def run(pfm: PFM, cases, out_path: pathlib.Path, smoke: bool = False):
     out_path.write_text(json.dumps(payload, indent=2))
 
     print(f"{'method':<12} {'mean ratio':>10} {'mean LU ms':>11} "
-          f"{'order ms':>9}")
-    for r in sorted(rows, key=lambda r: r["mean_fillin_ratio"]):
-        print(f"{r['method']:<12} {r['mean_fillin_ratio']:>10.2f} "
-              f"{r['mean_lu_time_ms']:>11.1f} "
-              f"{r['order_time_ms_total']:>9.1f}")
+          f"{'order ms':>9} {'failed':>6}")
+    for r in sorted(rows, key=lambda r: (r["mean_fillin_ratio"] is None,
+                                         r["mean_fillin_ratio"] or 0.0)):
+        ratio = "-" if r["mean_fillin_ratio"] is None \
+            else f"{r['mean_fillin_ratio']:.2f}"
+        lu_ms = "-" if r["mean_lu_time_ms"] is None \
+            else f"{r['mean_lu_time_ms']:.1f}"
+        print(f"{r['method']:<12} {ratio:>10} {lu_ms:>11} "
+              f"{r['order_time_ms_total']:>9.1f} {r['n_failed']:>6d}")
     print(f"[eval_fillin] pfm_beats_natural={beats}  wrote {out_path}")
     if not beats:
         raise SystemExit("[eval_fillin] FAIL: PFM did not beat the "

@@ -26,6 +26,15 @@ def make_host_mesh():
     return jax.make_mesh((1, n), ("data", "model"))
 
 
+def make_mesh2d(rows: int, cols: int):
+    """("row", "col") mesh for the 2-D model-parallel ADMM trainer
+    (core/admm.admm_train_2d, DESIGN.md §10): each (n, n) of the dense
+    training state is tiled (n/rows, n/cols) over the two axes. On CPU,
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 simulates the
+    multi-device case (tests/test_admm_2d.py)."""
+    return jax.make_mesh((rows, cols), ("row", "col"))
+
+
 def make_data_mesh(n: int | None = None):
     """1-D data-parallel mesh over n (default: all) local devices — the
     mesh shape PFM.fit(mesh=...) shards its batch buckets over. On CPU,

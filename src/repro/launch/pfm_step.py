@@ -7,7 +7,14 @@ at production matrix sizes, with the dense (n, n) inner tensors sharded
 single-device memory.
 
 Shapes:
-  train_8k    — n=8192 reorder-training step (dense path, 2-D GSPMD)
+  train_8k    — n=8192 reorder-training step through the REAL 2-D
+                model-parallel trainer (core/admm.admm_train_2d,
+                DESIGN.md §10): every (n, n) of L/Γ/P/M tiled over the
+                mesh's (data, model) axes inside one shard_map region,
+                θ replicated, θ-grads psum'd over both axes. (Until
+                PR 4 this cell was a GSPMD annotation-only sketch
+                behind REPRO_PFM_SHARD2D; that escape hatch is
+                retired.)
   train_64x1k — B=64 matrices at n=1024: the data-parallel bucketed
                 trainer (DESIGN.md §8) shard_map'd over the mesh's data
                 axis, θ replicated, θ-grads psum'd
@@ -28,7 +35,9 @@ from repro.core.admm import PFMConfig
 from repro.optim import adam
 
 PFM_SHAPES = {
-    "train_8k": dict(n=8192, kind="train"),
+    # 2-D model-parallel training (DESIGN.md §10): one n=8192 matrix,
+    # every (n, n) tiled over (data, model)
+    "train_8k": dict(n=8192, B=1, kind="train_2d"),
     # data-parallel bucketed training (DESIGN.md §8): B matrices of the
     # same shape bucket sharded over the mesh's data axis, θ replicated
     "train_64x1k": dict(n=1024, B=64, kind="train_batch"),
@@ -64,53 +73,58 @@ def _synthetic_levels(n: int, avg_degree: int = 8):
 def pfm_input_specs(shape_name: str, mesh):
     sh = PFM_SHAPES[shape_name]
     n = sh["n"]
-    dense2d = NamedSharding(mesh, P("data", "model"))
     repl = NamedSharding(mesh, P())
     row = NamedSharding(mesh, P("data"))
 
-    if sh["kind"] == "train_batch":
-        # batch-sharded bucket (DESIGN.md §8): every tensor leads with B
-        # split over the data axis; trailing dims local
+    if sh["kind"] in ("train_batch", "train_2d"):
         B = sh["B"]
-        batch = NamedSharding(mesh, P("data"))
+        if sh["kind"] == "train_batch":
+            # batch-sharded bucket (DESIGN.md §8): every tensor leads
+            # with B split over the data axis; trailing dims local
+            lead = NamedSharding(mesh, P("data"))
+            a_shard = lead
+        else:
+            # 2-D model-parallel (DESIGN.md §10): only the dense A stack
+            # is sharded — tiled over its trailing two dims; the batch
+            # dim and every O(n) tensor stay replicated
+            lead = NamedSharding(mesh, P())
+            a_shard = NamedSharding(mesh, P(None, "data", "model"))
 
-        def b_struct(s):
+        def b_struct(s, sharding=lead):
             return jax.ShapeDtypeStruct((B,) + s.shape, s.dtype,
-                                        sharding=batch)
+                                        sharding=sharding)
         levels = jax.tree_util.tree_map(b_struct, _synthetic_levels(n))
         return dict(
             levels=levels,
             x_g=b_struct(jax.ShapeDtypeStruct((n, 1), jnp.float32)),
             node_mask=b_struct(jax.ShapeDtypeStruct((n,), jnp.float32)),
-            A=b_struct(jax.ShapeDtypeStruct((n, n), jnp.float32)),
+            A=b_struct(jax.ShapeDtypeStruct((n, n), jnp.float32),
+                       a_shard),
             keys=b_struct(jax.ShapeDtypeStruct((2,), jnp.uint32)),
             weight=jax.ShapeDtypeStruct((B,), jnp.float32,
-                                        sharding=batch),
+                                        sharding=lead),
         )
 
+    # infer: replicated hierarchy, row-sharded node tensors, no dense A
     levels = _synthetic_levels(n)
     levels = jax.tree_util.tree_map(
         lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=repl),
         levels)
-    specs = dict(
+    return dict(
         levels=levels,
         x_g=jax.ShapeDtypeStruct((n, 1), jnp.float32, sharding=row),
         node_mask=jax.ShapeDtypeStruct((n,), jnp.float32, sharding=row),
     )
-    if sh["kind"] == "train":
-        specs["A"] = jax.ShapeDtypeStruct((n, n), jnp.float32,
-                                          sharding=dense2d)
-    return specs
 
 
-def make_pfm_train_step(cfg: PFMConfig, opt):
-    """One ADMM iteration (the fori_loop body unrolled once) as the
-    lowering target — representative of the sustained training step."""
-    def step(params, opt_state, A, levels, x_g, node_mask, key):
-        return admm_mod.admm_train_matrix(
-            params, opt_state, A, levels, x_g, node_mask, key,
-            cfg=cfg, opt=opt)
-    return step
+def make_pfm_train_2d_step(cfg: PFMConfig, opt, mesh,
+                           axes=("data", "model")):
+    """The 2-D model-parallel trainer (DESIGN.md §10) as a lowering
+    target: the whole ADMM loop shard_map'd with every (n, n) of the
+    dense state tiled over `axes`, θ replicated, θ-grads psum'd over
+    both axes. Trace under kops.mesh_scope(mesh) so kernels lower to
+    their chunked-XLA forms."""
+    return admm_mod.train_2d_fn(cfg, opt, mesh, tuple(axes))
 
 
 def make_pfm_train_batch_step(cfg: PFMConfig, opt, mesh,

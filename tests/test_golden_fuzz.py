@@ -1,0 +1,178 @@
+"""Differential fuzz of the golden criterion and its surrogate inputs.
+
+Three independent oracles are cross-checked (via tests/_hyp_compat.py,
+so the properties degrade to deterministic boundary sampling when
+hypothesis is absent):
+
+  * `fillin.symbolic_cholesky_nnz` (elimination-tree walk) vs SuperLU's
+    factual factorization through `fillin.lu_fillin_splu`: on a
+    symmetric pattern factored with NATURAL ordering and no pivoting
+    (guaranteed by strong diagonal dominance — the diagonal is every
+    column's partial-pivot winner), nnz(L) + nnz(U) == 2 * nnz_chol
+    exactly (SuperLU stores L's unit diagonal explicitly, U holds the
+    real one, both share the Cholesky pattern).
+  * `reorder.rank_distribution` is a distribution over positions: rows
+    must sum to ~1 and its score-gradients must stay finite at the
+    degenerate extremes (huge score gaps saturating the pairwise CDFs,
+    exactly tied scores collapsing the rank variance).
+  * `lu_fillin_splu` on singular input returns the skip sentinel and
+    `eval_fillin.evaluate` records-and-excludes it (the PR 4 hardening
+    regression: one structurally singular matrix must not crash a full
+    Table-2 run).
+"""
+import sys
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from _hyp_compat import given, settings, st  # noqa: E402
+
+from repro.core import fillin, reorder  # noqa: E402
+
+
+def _random_sym_dd(n, density, seed):
+    """Random symmetric pattern with random values, made strongly
+    diagonally dominant so SuperLU's partial pivoting provably keeps
+    the natural diagonal (the diagonal strictly wins every column)."""
+    rng = np.random.default_rng(seed)
+    M = sp.random(n, n, density=density, random_state=seed,
+                  data_rvs=lambda k: rng.uniform(0.1, 1.0, k))
+    S = sp.csr_matrix(M + M.T)
+    dom = float(np.abs(S).sum(axis=1).max()) + 1.0
+    return sp.csr_matrix(S + sp.eye(n) * dom)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 120), dens_pct=st.integers(2, 12),
+       seed=st.integers(0, 10_000))
+def test_symbolic_cholesky_agrees_with_superlu(n, dens_pct, seed):
+    A = _random_sym_dd(n, dens_pct / 100.0, seed)
+    nnz_chol, _ = fillin.symbolic_cholesky_nnz(A)
+    res = fillin.lu_fillin_splu(A)
+    assert not res.get("failed"), res
+    assert res["nnz_lu"] == 2 * nnz_chol, \
+        (n, dens_pct, seed, res["nnz_lu"], nnz_chol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 100), dens_pct=st.integers(2, 12),
+       seed=st.integers(0, 10_000))
+def test_symbolic_cholesky_agrees_with_superlu_under_perm(n, dens_pct,
+                                                          seed):
+    """The agreement must be permutation-covariant — both pipelines see
+    the SAME reordered pattern (this is exactly how Table 2 consumes
+    them)."""
+    A = _random_sym_dd(n, dens_pct / 100.0, seed)
+    perm = np.random.default_rng(seed + 1).permutation(n)
+    nnz_chol, _ = fillin.symbolic_cholesky_nnz(A, perm)
+    res = fillin.lu_fillin_splu(A, perm)
+    assert not res.get("failed"), res
+    assert res["nnz_lu"] == 2 * nnz_chol
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 128), seed=st.integers(0, 10_000))
+def test_rank_distribution_rows_sum_to_one(n, seed):
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    p_hat = np.asarray(reorder.rank_distribution(scores, 0.02))
+    assert (p_hat >= 0).all()
+    sums = p_hat.sum(axis=1)
+    # each row is a Gaussian discretized over positions [-0.5, n-0.5]:
+    # the sum telescopes to 1 minus the two TRUNCATED tails, so it can
+    # only fall short of 1, and only for nodes whose rank mean sits
+    # within ~2 sd of a boundary (the first/last-ranked nodes in a
+    # near-tie); interior rows must hit 1 tightly
+    assert (sums <= 1.0 + 1e-4).all()
+    assert (sums >= 0.9).all(), sums.min()
+    top = p_hat.argmax(axis=1)
+    interior = (top >= 2) & (top <= n - 3)
+    if interior.any():
+        np.testing.assert_allclose(sums[interior], 1.0, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(gap_exp=st.integers(0, 4), seed=st.integers(0, 1000))
+def test_rank_distribution_grads_finite_extreme_gaps(gap_exp, seed):
+    """Score gaps up to 1e4 saturate every pairwise win CDF (sigma
+    1e-3): mean ranks become integral, variances collapse to the 1e-6
+    floor — the erf chain must still backprop finite (not NaN from
+    0 * inf in the saturated tails)."""
+    n = 32
+    key = jax.random.PRNGKey(seed)
+    scores = jax.random.normal(key, (n,)) * (10.0 ** gap_exp)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (n, n))
+
+    def loss(y):
+        return jnp.sum(reorder.rank_distribution(y, 1e-3) * w)
+
+    g = np.asarray(jax.grad(loss)(scores))
+    assert np.isfinite(g).all(), (gap_exp, seed)
+
+
+def test_rank_distribution_grads_finite_tied_scores():
+    """Exactly tied scores: every pairwise diff is 0 (the CDF kink) and
+    the rank distribution is maximally flat; rows must still sum to ~1
+    and grads stay finite."""
+    for n in (8, 64, 128):
+        scores = jnp.zeros((n,))
+        p_hat = np.asarray(reorder.rank_distribution(scores, 1e-3))
+        np.testing.assert_allclose(p_hat.sum(axis=1), 1.0, atol=5e-3)
+        w = jax.random.normal(jax.random.PRNGKey(n), (n, n))
+        g = np.asarray(jax.grad(
+            lambda y: jnp.sum(reorder.rank_distribution(y, 1e-3) * w)
+        )(scores))
+        assert np.isfinite(g).all()
+        # masked variant (ragged pad tail) must behave identically
+        mask = (jnp.arange(n) < max(4, n - 8)).astype(jnp.float32)
+        g_m = np.asarray(jax.grad(
+            lambda y: jnp.sum(reorder.rank_distribution(y, 1e-3, mask)
+                              * w))(scores))
+        assert np.isfinite(g_m).all()
+
+
+# ------------------------- singular-input hardening (PR 4 bugfix) ------
+def _singular_matrix(n=12, dead=4):
+    """Structurally singular: one empty row/column."""
+    A = sp.lil_matrix(sp.eye(n))
+    A[dead, dead] = 0.0
+    A = sp.csr_matrix(A)
+    A.eliminate_zeros()
+    return A
+
+
+def test_lu_fillin_splu_singular_returns_sentinel():
+    res = fillin.lu_fillin_splu(_singular_matrix())
+    assert res["failed"] is True
+    assert "error" in res and res["error"]
+    assert res["fillin"] is None and res["fillin_ratio"] is None
+
+
+def test_eval_fillin_skips_and_records_singular():
+    """A Table-2 sweep containing a singular matrix must complete, with
+    the bad case excluded from every aggregate but recorded in place."""
+    from repro.data import grid_2d
+    from repro.launch.eval_fillin import evaluate
+    good = grid_2d(5, seed=0)
+    bad = _singular_matrix()
+    cases = [("2D3D", good), ("SING", bad)]
+    n_g, n_b = good.shape[0], bad.shape[0]
+    perms = {"natural": [np.arange(n_g), np.arange(n_b)],
+             "rcm_like": [np.arange(n_g)[::-1], np.arange(n_b)[::-1]]}
+    rows = evaluate(cases, perms, {"natural": 0.0, "rcm_like": 0.0})
+    assert len(rows) == 2
+    for row in rows:
+        assert row["n_failed"] == 1
+        # a case failed under any method is excluded from EVERY
+        # method's aggregates, so the per-method means stay comparable
+        assert row["n_excluded"] == 1
+        ok_case, bad_case = row["cases"]
+        assert not ok_case.get("failed") and bad_case["failed"]
+        # aggregates come from the good case alone
+        assert row["mean_fillin_ratio"] == ok_case["fillin_ratio"]
+        assert row["mean_fillin"] == ok_case["fillin"]
+        # category aggregate for the failed category must not exist
+        assert "ratio_SING" not in row and "ratio_2D3D" in row

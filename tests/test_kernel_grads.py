@@ -1,0 +1,192 @@
+"""Gradcheck battery for the Pallas kernels' custom VJPs.
+
+Both fused kernels that sit on gradient paths define custom VJPs whose
+backward is the VJP of the pure-jnp oracle at the saved inputs
+(kernels/ops.py):
+
+  * sinkhorn  — forward = fused batched kernel, backward = ref VJP;
+  * prox_tril — forward = fused batched kernel (tile-offset-aware),
+    backward = ref VJP (new in PR 4 — the fused form is now safe on
+    gradient paths instead of "never differentiated").
+
+Two independent checks per kernel, at B ∈ {1, 3}, f32:
+  1. against autodiff THROUGH the reference (kernels/ref.py) — since
+     ref == kernel math, the cotangents must agree to f32 tightness;
+  2. against jax.test_util.check_grads central finite differences —
+     catches a backward that is self-consistent with the ref but wrong
+     (e.g. a stale residual).
+The masked/ragged case drives sinkhorn with the real training logits
+(rank_distribution over node-masked scores -> Gumbel logits), whose
+-150-ish masked entries are where a naive backward would NaN.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.test_util import check_grads
+
+from repro.core import reorder
+from repro.core.reorder import _gumbel_log_p
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+N = 128
+
+
+def _rand(shape, seed, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def _batched(x, b):
+    """B=1 keeps the unbatched (n, n) rank; B>1 stacks distinct
+    matrices."""
+    if b == 1:
+        return x
+    return jnp.stack([x + 0.1 * i for i in range(b)])
+
+
+# ------------------------------------------------------------- sinkhorn
+@pytest.mark.parametrize("b", [1, 3])
+def test_sinkhorn_vjp_matches_ref_autodiff(b):
+    log_p = _batched(_rand((N, N), 0, 2.0), b)
+    w = _batched(_rand((N, N), 1), b)
+
+    g_kernel = jax.grad(
+        lambda x: jnp.sum(kops.sinkhorn(x, n_iters=3) * w))(log_p)
+    g_ref = jax.grad(
+        lambda x: jnp.sum(kref.sinkhorn_ref(x, 3) * w))(log_p)
+    assert np.isfinite(np.asarray(g_kernel)).all()
+    np.testing.assert_allclose(np.asarray(g_kernel), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b", [1, 3])
+def test_sinkhorn_vjp_finite_differences(b):
+    log_p = _batched(_rand((N, N), 2, 1.5), b)
+    check_grads(lambda x: kops.sinkhorn(x, n_iters=3), (log_p,),
+                order=1, modes=["rev"], atol=5e-2, rtol=5e-2)
+
+
+def test_sinkhorn_vjp_masked_ragged_logits():
+    """The masked/ragged case: Gumbel logits of node-masked SoftRank
+    distributions (true n 100 and 90 inside the 128 pad) — masked
+    entries sit near log(eps)/tau ~ -150 where exp underflows; the
+    backward must stay finite and agree with the ref."""
+    b = 2
+    scores = _rand((b, N), 3)
+    masks = jnp.stack([(jnp.arange(N) < 100).astype(jnp.float32),
+                       (jnp.arange(N) < 90).astype(jnp.float32)])
+    p_hat = jax.vmap(
+        lambda y, m: reorder.rank_distribution(y, 0.02, m))(scores,
+                                                            masks)
+    keys = jax.random.split(jax.random.PRNGKey(4), b)
+    u = jax.vmap(lambda k, p: jax.random.uniform(k, p.shape))(keys,
+                                                              p_hat)
+    log_p = _gumbel_log_p(p_hat, u, 0.3, 1.0)
+    w = _batched(_rand((N, N), 5), b)
+
+    g_kernel = jax.grad(
+        lambda x: jnp.sum(kops.sinkhorn(x, n_iters=3) * w))(log_p)
+    g_ref = jax.grad(
+        lambda x: jnp.sum(kref.sinkhorn_ref(x, 3) * w))(log_p)
+    assert np.isfinite(np.asarray(g_kernel)).all()
+    np.testing.assert_allclose(np.asarray(g_kernel), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-7)
+
+
+# ------------------------------------------------------------ prox_tril
+def _prox_inputs(b, seed=6):
+    """Inputs bounded away from the soft-threshold kinks (|X| = thresh,
+    X = 0): |L - eta*G| lands in ~[0.35, 1.7] with thresh 0.05, so
+    central differences see a locally smooth function."""
+    sign = jnp.sign(_rand((N, N), seed))
+    sign = jnp.where(sign == 0, 1.0, sign)
+    L = _batched(sign * (0.5 + jnp.abs(_rand((N, N), seed + 1))), b)
+    G = _batched(_rand((N, N), seed + 2, 0.3), b)
+    eta = jnp.full((b,) if b > 1 else (), 0.1, jnp.float32)
+    thresh = jnp.full((b,) if b > 1 else (), 0.05, jnp.float32)
+    return L, G, eta, thresh
+
+
+@pytest.mark.parametrize("b", [1, 3])
+def test_prox_tril_vjp_matches_ref_autodiff(b):
+    L, G, eta, thresh = _prox_inputs(b)
+    w = _batched(_rand((N, N), 9), b)
+
+    g_k = jax.grad(lambda l, g: jnp.sum(kops.prox_tril(l, g, eta,
+                                                       thresh) * w),
+                   argnums=(0, 1))(L, G)
+    g_r = jax.grad(lambda l, g: jnp.sum(kref.prox_tril_ref(l, g, eta,
+                                                           thresh) * w),
+                   argnums=(0, 1))(L, G)
+    for a, r in zip(g_k, g_r):
+        assert np.isfinite(np.asarray(a)).all()
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b", [1, 3])
+def test_prox_tril_vjp_finite_differences(b):
+    L, G, eta, thresh = _prox_inputs(b, seed=12)
+    check_grads(lambda l, g: kops.prox_tril(l, g, eta, thresh), (L, G),
+                order=1, modes=["rev"], atol=5e-2, rtol=5e-2)
+
+
+def test_prox_tril_vjp_step_scalars():
+    """eta/thresh are on the gradient path too (the Lipschitz-scaled
+    step is a traced function of L): their cotangents must match the
+    ref and finite differences."""
+    L, G, eta, thresh = _prox_inputs(3, seed=15)
+    w = _batched(_rand((N, N), 16), 3)
+
+    g_k = jax.grad(lambda e, t: jnp.sum(kops.prox_tril(L, G, e, t) * w),
+                   argnums=(0, 1))(eta, thresh)
+    g_r = jax.grad(
+        lambda e, t: jnp.sum(kref.prox_tril_ref(L, G, e, t) * w),
+        argnums=(0, 1))(eta, thresh)
+    for a, r in zip(g_k, g_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=1e-5, atol=1e-6)
+    check_grads(lambda e: kops.prox_tril(L, G, e, thresh), (eta,),
+                order=1, modes=["rev"], atol=5e-2, rtol=5e-2)
+
+
+@pytest.mark.parametrize("r0,c0", [(128, 0), (0, 128), (128, 128)])
+def test_prox_tril_offset_forward_and_grad(r0, c0):
+    """Tile-offset masking (DESIGN.md §10): the KERNEL path with
+    (row_offset, col_offset) — 128-aligned tiles so dispatch stays on
+    the Pallas form — must equal the corresponding slice of the full
+    prox, values AND cotangents — i.e. each shard masks exactly its
+    share of the global strict-upper region (strictly-upper tiles all
+    zeros, diagonal-crossing tiles masked elementwise, strictly-lower
+    tiles passed through)."""
+    n2, t = 256, 128
+    sign = jnp.sign(_rand((n2, n2), 18))
+    sign = jnp.where(sign == 0, 1.0, sign)
+    L = sign * (0.5 + jnp.abs(_rand((n2, n2), 19)))
+    G = _rand((n2, n2), 20, 0.3)
+    eta = jnp.float32(0.1)
+    thresh = jnp.float32(0.05)
+    # tile-consistency is pinned kernel-vs-kernel (bitwise): comparing
+    # against the unjitted ref instead would pick up XLA's ~1-ulp
+    # fusion-context drift on the eta*G multiply, not a masking bug
+    full = kops.prox_tril(L, G, eta, thresh)
+    Lt, Gt = L[r0:r0 + t, c0:c0 + t], G[r0:r0 + t, c0:c0 + t]
+    tile = kops.prox_tril(Lt, Gt, eta, thresh, row_offset=r0,
+                          col_offset=c0)
+    np.testing.assert_array_equal(np.asarray(tile),
+                                  np.asarray(full[r0:r0 + t,
+                                                  c0:c0 + t]))
+    np.testing.assert_allclose(
+        np.asarray(tile),
+        np.asarray(kref.prox_tril_ref(L, G, eta, thresh)[r0:r0 + t,
+                                                         c0:c0 + t]),
+        rtol=1e-6, atol=1e-7)
+    w = _rand((t, t), 21)
+    g_k = jax.grad(lambda l: jnp.sum(
+        kops.prox_tril(l, Gt, eta, thresh, row_offset=r0,
+                       col_offset=c0) * w))(Lt)
+    g_r = jax.grad(lambda l: jnp.sum(
+        kref.prox_tril_ref(l, Gt, eta, thresh, r0, c0) * w))(Lt)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r),
+                               rtol=1e-5, atol=1e-6)
