@@ -3,13 +3,17 @@ matrix size grows — demonstrates the O(GNN) inference scalability claim
 (Table 1) vs the spectral/graph-theoretic baselines.
 
 `admm_2d` scales the TRAINING side instead: the 2-D model-parallel ADMM
-trainer (DESIGN.md §10) on a simulated 2x2 mesh at n ∈ {1k, 2k, 4k, 8k},
-vs the single-device bucketed trainer. Simulated CPU devices share this
+trainer (DESIGN.md §10/§11) on a simulated 2x2 mesh at n ∈ {1k, 2k,
+4k, 8k}, swept over BOTH comm modes (gather vs summa) and compared to
+the single-device bucketed trainer. Simulated CPU devices share this
 host's cores, so wall-clock shows dispatch/collective overhead rather
-than speedup; the scaling payload is the per-device memory column —
-the loop carry is (n/2, n/2)-tiled — and the proof that every size
-lowers, compiles, and (for the sizes a CPU can turn around) trains
-through the real 2-D path.
+than speedup; the scaling payload per row is (a) the compiled
+program's per-device memory analysis (temp bytes is where
+gather-vs-summa separates: full-shape loop transients vs tile/panel
+ones), (b) an analytic comm-volume-per-iteration column, and (c) for
+executed rows the host-visible live-array delta. n=4k EXECUTES under
+summa (it was compile-only before the transients were tiled); n=8k
+stays compile+memory for both modes.
 """
 from __future__ import annotations
 
@@ -31,22 +35,31 @@ OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
 
 SIZES = [400, 900, 2500, 6400, 10000]
 
-# 2-D trainer sweep: sizes a 2-core CPU can EXECUTE vs compile-only
-ADMM_2D_EXEC = [1024, 2048]
-ADMM_2D_COMPILE = [4096, 8192]
+# 2-D trainer sweep on the simulated 2x2 mesh: which comm modes EXECUTE
+# at each n (summa's tile/panel transients make n=4k executable on this
+# host; gather at 4k would redundantly run full-length contractions on
+# every device) and which are compile+memory rows only.
+ADMM_2D_EXEC = {1024: ("gather", "summa"), 2048: ("gather", "summa"),
+                4096: ("summa",)}
+ADMM_2D_COMPILE = {4096: ("gather",), 8192: ("gather", "summa")}
+# single-device bucketed reference timings for the comparison column
+ADMM_2D_REF_1DEV = (1024, 2048)
 
 
 def admm_2d(quick: bool = False):
     """bench_scaling.admm_2d rows: the 2-D model-parallel trainer on a
-    simulated 2x2 mesh. Runs in a subprocess (the device-count XLA flag
-    must be set before jax initializes). n ∈ {1024, 2048} execute one
-    full ADMM iteration (wall_s + per-device memory, vs the
-    single-device bucketed trainer); n ∈ {4096, 8192} are
-    compile-and-memory rows (mode="compile") — one CPU core cannot turn
-    an 8k^3 dense iteration around, but the lowered artifact and its
-    per-device footprint are exactly what a real mesh would execute."""
-    ns_exec = ADMM_2D_EXEC[:1] if quick else ADMM_2D_EXEC
-    ns_compile = ADMM_2D_COMPILE[:1] if quick else ADMM_2D_COMPILE
+    simulated 2x2 mesh, gather vs summa comm modes. Runs in a
+    subprocess (the device-count XLA flag must be set before jax
+    initializes). Executed rows AOT-compile the exact program they run
+    (one compile serves both the memory analysis and the timed calls)
+    and record per-device temp bytes, an analytic comm-volume column,
+    wall clock, and the live-array delta; n=8k rows are compile+memory
+    only — one host cannot turn an 8k^3 dense iteration around, but
+    the lowered artifact and its per-device footprint are exactly what
+    a real mesh would execute."""
+    ns_exec = {1024: ADMM_2D_EXEC[1024]} if quick else ADMM_2D_EXEC
+    ns_compile = {4096: ("gather",)} if quick else ADMM_2D_COMPILE
+    ref_1dev = ADMM_2D_REF_1DEV[:1] if quick else ADMM_2D_REF_1DEV
     script = textwrap.dedent(f"""
         import os, json, time
         os.environ["XLA_FLAGS"] = \
@@ -68,17 +81,46 @@ def admm_2d(quick: bool = False):
         from repro.optim import adam
 
         mesh = make_mesh2d(2, 2)
+        R = C = 2
         cfg = PFMConfig(n_admm=1, n_sinkhorn=8, lr=1e-3)
         rows = []
+        repl = NamedSharding(mesh, P())
+        tile = NamedSharding(mesh, P(None, "row", "col"))
+
+        def comm_bytes_per_iter(n, B, comm_mode):
+            '''Analytic bytes RECEIVED per device per ADMM iteration
+            (f32, counting the loop body's forward-pass collectives as
+            written; the theta-grad backward roughly doubles the
+            theta-loss terms). gather: the six full-array all_gathers
+            at the loop top plus the exact-Sinkhorn gather and two
+            P A P^T passes dominate; summa: one-axis panels
+            (gather_cols / row_chunk assembly), (C-1) ring tile hops
+            per contraction, and the psum'd lse partials.'''
+            f = 4.0
+            full = (1 - 1 / (R * C)) * B * n * n * f
+            colp = (1 - 1 / R) * B * n * (n / C) * f
+            rowp = (1 - 1 / C) * B * (n / R) * n * f
+            t_hop = B * (n / R) * (n / C) * f
+            if comm_mode == "gather":
+                return 11 * full + 2 * (colp + rowp)
+            contraction = colp + 2 * rowp + (C - 1) * t_hop
+            lse = cfg.n_sinkhorn * 2 * B * n * f
+            return 8 * contraction + lse
+
+        def live_device_bytes():
+            return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                       for a in jax.live_arrays())
+
+        def train_fn(comm_mode):
+            return jax.jit(admm_mod.train_2d_fn(
+                cfg, adam(cfg.lr), mesh, ("row", "col"), None,
+                comm_mode))
 
         def b_struct(s, sharding):
             return jax.ShapeDtypeStruct((1,) + s.shape, s.dtype,
                                         sharding=sharding)
 
-        def lower_2d(n):
-            repl = NamedSharding(mesh, P())
-            tile = NamedSharding(mesh, P(None, "row", "col"))
-            fn = jax.jit(admm_mod.train_2d_fn(cfg, adam(cfg.lr), mesh))
+        def lower_structs(n, comm_mode):
             pfm = PFM(cfg, seed=0, x_mode="random")
             p_sh = jax.tree_util.tree_map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype,
@@ -100,66 +142,93 @@ def admm_2d(quick: bool = False):
                                         sharding=repl)
             w = jax.ShapeDtypeStruct((1,), jnp.float32, sharding=repl)
             with kops.mesh_scope(mesh):
-                return fn.lower(p_sh, o_sh, A, levels, x_g, mask, keys,
-                                w)
+                return train_fn(comm_mode).lower(
+                    p_sh, o_sh, A, levels, x_g, mask, keys, w)
 
-        for n in {ns_compile!r}:
-            t0 = time.perf_counter()
-            lowered = lower_2d(n)
-            t1 = time.perf_counter()
-            compiled = lowered.compile()
-            rows.append(dict(
-                bench="admm_2d", mode="compile", n=n, mesh="2x2",
-                lower_s=t1 - t0, compile_s=time.perf_counter() - t1,
-                memory=analysis.memory_analysis_dict(compiled)))
-            print("ROW=" + json.dumps(rows[-1]), flush=True)
+        for n, modes in {dict(ns_compile)!r}.items():
+            for comm_mode in modes:
+                t0 = time.perf_counter()
+                lowered = lower_structs(n, comm_mode)
+                t1 = time.perf_counter()
+                compiled = lowered.compile()
+                rows.append(dict(
+                    bench="admm_2d", mode="compile", n=n, mesh="2x2",
+                    comm_mode=comm_mode, lower_s=t1 - t0,
+                    compile_s=time.perf_counter() - t1,
+                    memory=analysis.memory_analysis_dict(compiled),
+                    comm_bytes_per_iter=comm_bytes_per_iter(
+                        n, 1, comm_mode)))
+                print("ROW=" + json.dumps(rows[-1]), flush=True)
 
-        for n in {ns_exec!r}:
+        for n, modes in {dict(ns_exec)!r}.items():
             pfm = PFM(cfg, seed=0, x_mode="random")
             A = delaunay_like(n - 24, "gradel", seed=3)
             (bucket,) = pack_buckets([pfm.prepare(A, "bench")])
             keys = jax.random.split(jax.random.PRNGKey(0), 1)
-            w = jnp.ones((1,), jnp.float32)
-            t0 = time.perf_counter()
-            out = admm_mod.admm_train_2d(
-                pfm.params, pfm.opt_state, bucket.A, bucket.levels,
-                bucket.x_g, bucket.node_mask, keys, w, cfg=cfg,
-                opt=pfm.opt, mesh=mesh)
-            jax.block_until_ready(out[0])
-            compile_s = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            out = admm_mod.admm_train_2d(
-                pfm.params, pfm.opt_state, bucket.A, bucket.levels,
-                bucket.x_g, bucket.node_mask, keys, w, cfg=cfg,
-                opt=pfm.opt, mesh=mesh)
-            jax.block_until_ready(out[0])
-            wall_2d = time.perf_counter() - t0
+            # place the bucket once; the AOT-compiled programs for both
+            # comm modes consume the same placed arrays
+            args = (
+                jax.device_put(pfm.params, jax.tree_util.tree_map(
+                    lambda _: repl, pfm.params)),
+                jax.device_put(pfm.opt_state, jax.tree_util.tree_map(
+                    lambda _: repl, pfm.opt_state)),
+                jax.device_put(bucket.A, tile),
+                jax.device_put(bucket.levels, jax.tree_util.tree_map(
+                    lambda _: repl, bucket.levels)),
+                jax.device_put(bucket.x_g, repl),
+                jax.device_put(bucket.node_mask, repl),
+                jax.device_put(keys, repl),
+                jax.device_put(jnp.ones((1,), jnp.float32), repl))
+            for comm_mode in modes:
+                live0 = live_device_bytes()
+                t0 = time.perf_counter()
+                with kops.mesh_scope(mesh):
+                    lowered = train_fn(comm_mode).lower(*args)
+                compiled = lowered.compile()
+                compile_s = time.perf_counter() - t0
+                out = compiled(*args)           # warm (first exec)
+                jax.block_until_ready(out[0])
+                t0 = time.perf_counter()
+                out = compiled(*args)
+                jax.block_until_ready(out[0])
+                wall = time.perf_counter() - t0
+                for k in ("l1", "residual", "loss"):
+                    assert np.isfinite(np.asarray(out[2][k])).all(), k
+                rows.append(dict(
+                    bench="admm_2d", mode="exec",
+                    n=int(bucket.A.shape[-1]), mesh="2x2",
+                    comm_mode=comm_mode, wall_s_2d=wall,
+                    compile_s=compile_s,
+                    memory=analysis.memory_analysis_dict(compiled),
+                    comm_bytes_per_iter=comm_bytes_per_iter(
+                        int(bucket.A.shape[-1]), 1, comm_mode),
+                    live_bytes_delta=live_device_bytes() - live0,
+                    note="4 simulated devices share 1 host's cores: "
+                         "wall_s shows overhead, not speedup"))
+                print("ROW=" + json.dumps(rows[-1]), flush=True)
+                del out, compiled, lowered
 
-            t0 = time.perf_counter()
-            ref = admm_mod.admm_train_batch(
-                pfm.params, pfm.opt_state, bucket.A, bucket.levels,
-                bucket.x_g, bucket.node_mask, keys, cfg=cfg,
-                opt=pfm.opt)
-            jax.block_until_ready(ref[0])
-            ref_compile_s = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            ref = admm_mod.admm_train_batch(
-                pfm.params, pfm.opt_state, bucket.A, bucket.levels,
-                bucket.x_g, bucket.node_mask, keys, cfg=cfg,
-                opt=pfm.opt)
-            jax.block_until_ready(ref[0])
-            wall_1dev = time.perf_counter() - t0
-            for k in ("l1", "residual", "loss"):
-                assert np.asarray(out[2][k]).shape == \
-                    np.asarray(ref[2][k]).shape
-            rows.append(dict(
-                bench="admm_2d", mode="exec", n=int(bucket.A.shape[-1]),
-                mesh="2x2", wall_s_2d=wall_2d,
-                wall_s_single_device=wall_1dev,
-                compile_s=compile_s, ref_compile_s=ref_compile_s,
-                note="4 simulated devices share 1 host's cores: "
-                     "wall_s shows overhead, not speedup"))
-            print("ROW=" + json.dumps(rows[-1]), flush=True)
+            if int(bucket.A.shape[-1]) in {tuple(ref_1dev)!r}:
+                t0 = time.perf_counter()
+                ref = admm_mod.admm_train_batch(
+                    pfm.params, pfm.opt_state, bucket.A, bucket.levels,
+                    bucket.x_g, bucket.node_mask, keys, cfg=cfg,
+                    opt=pfm.opt)
+                jax.block_until_ready(ref[0])
+                ref_compile_s = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                ref = admm_mod.admm_train_batch(
+                    pfm.params, pfm.opt_state, bucket.A, bucket.levels,
+                    bucket.x_g, bucket.node_mask, keys, cfg=cfg,
+                    opt=pfm.opt)
+                jax.block_until_ready(ref[0])
+                rows.append(dict(
+                    bench="admm_2d", mode="exec_1dev",
+                    n=int(bucket.A.shape[-1]), mesh="1x1",
+                    comm_mode="none",
+                    wall_s_single_device=time.perf_counter() - t0,
+                    ref_compile_s=ref_compile_s))
+                print("ROW=" + json.dumps(rows[-1]), flush=True)
         print("DONE=" + json.dumps(rows))
     """)
     partial = None
@@ -189,12 +258,19 @@ def admm_2d(quick: bool = False):
         rows = [dict(r, partial=partial) for r in rows]
     for r in rows:
         if r["mode"] == "exec":
-            print(f"admm_2d n={r['n']}: 2d={r['wall_s_2d']:.1f}s "
-                  f"1dev={r['wall_s_single_device']:.1f}s "
+            print(f"admm_2d n={r['n']} [{r['comm_mode']}]: "
+                  f"wall={r['wall_s_2d']:.1f}s "
+                  f"temp={r['memory']['temp_size_in_bytes'] / 1e9:.2f}GB"
+                  f" comm/iter={r['comm_bytes_per_iter'] / 1e6:.0f}MB "
                   f"(shared cores)")
+        elif r["mode"] == "exec_1dev":
+            print(f"admm_2d n={r['n']} [1dev ref]: "
+                  f"wall={r['wall_s_single_device']:.1f}s")
         else:
-            print(f"admm_2d n={r['n']}: compile={r['compile_s']:.1f}s "
-                  f"mem={r['memory']}")
+            print(f"admm_2d n={r['n']} [{r['comm_mode']}]: "
+                  f"compile={r['compile_s']:.1f}s "
+                  f"temp={r['memory']['temp_size_in_bytes'] / 1e9:.2f}GB"
+                  f" comm/iter={r['comm_bytes_per_iter'] / 1e6:.0f}MB")
     # write the artifact on the partial path too — it must never
     # disagree with the rows merged into bench_results.json
     OUT.mkdir(exist_ok=True)

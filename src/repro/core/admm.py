@@ -510,6 +510,16 @@ def admm_train_batch_sharded(params, opt_state, A, levels_tuple, x_g,
 # op sequence in stripe form is possible but brittle, and the gathered
 # buffers are transient — the loop CARRY (the memory floor across all
 # n_admm iterations) stays fully tiled.
+#
+# comm_mode="summa" (DESIGN.md §11) trades the bitwise contract for a
+# per-backend atol one and kills every full-shape transient in the loop
+# body: contractions become ring-pipelined SUMMA over panel collectives
+# (constrain.summa_matmul / row_chunk / col_chunk), the L-grad becomes
+# the hand-written stripe VJP below, the Sinkhorn runs tile-resident
+# with psum'd log-sum-exps, and even the warm start and final metrics
+# are tiled — the only (B, n, n)-shaped value left in the whole program
+# is the warm-start noise draw at init (sliced per tile; outside the
+# loop).
 
 def _llt_tile(L_full, cfg: PFMConfig, grid, axes):
     """Tile of L @ L^T from the replicated full L (stripe-chunked:
@@ -538,6 +548,140 @@ def _reordered_2d(P_tile, A_tile, cfg: PFMConfig, grid, axes):
     return tc.stripe_rows(_mm(T_full, pt_col, cfg), grid, row_axis)
 
 
+# ------------- comm_mode="summa" tile algebra (DESIGN.md §11) -----------
+def _llt_tile_summa(L_t, cfg: PFMConfig, grid, axes, mm=None):
+    """Tile of L @ L^T from tiles only: the column panel of L^T is a
+    transposed `row_chunk` (panel-sized transient), the contraction is
+    ring-pipelined SUMMA. mm overrides the matmul (metrics report in
+    plain f32 regardless of the bf16 lever, like `_batch_metrics`)."""
+    from repro.distributed import constrain as tc
+    row_axis, col_axis = axes
+    tm = L_t.shape[-1]
+    c0 = jax.lax.axis_index(col_axis) * tm
+    lt_col = jnp.swapaxes(
+        tc.row_chunk(L_t, grid, row_axis, col_axis, c0, tm), -1, -2)
+    if mm is None:
+        mm = lambda a, b: _mm(a, b, cfg)                     # noqa: E731
+    return tc.summa_matmul(L_t, lt_col, grid, axes, mm)
+
+
+def _reordered_2d_summa(P_t, A_t, cfg: PFMConfig, grid, axes):
+    """Tile of P A P^T with every transient at panel size or below: A's
+    column panel is a one-axis gather, P^T's column panel a transposed
+    `row_chunk`, and both products are ring-pipelined SUMMA (k-partials
+    accumulate tile-locally as the A-side tiles rotate the column-axis
+    ring)."""
+    from repro.distributed import constrain as tc
+    row_axis, col_axis = axes
+    tm = P_t.shape[-1]
+    c0 = jax.lax.axis_index(col_axis) * tm
+    mm = lambda a, b: _mm(a, b, cfg)                         # noqa: E731
+    a_col = tc.gather_cols(A_t, row_axis)             # (B, n, tm) of A
+    T_t = tc.summa_matmul(P_t, a_col, grid, axes, mm)     # (P A) tile
+    pt_col = jnp.swapaxes(
+        tc.row_chunk(P_t, grid, row_axis, col_axis, c0, tm), -1, -2)
+    return tc.summa_matmul(T_t, pt_col, grid, axes, mm)
+
+
+def _stripe_l_grad(L_t, W_t, cfg: PFMConfig, grid, axes):
+    """Tile of df/dL = -(W + W^T) L (see `kref.smooth_grad_L_ref` for
+    the derivation) from tiles: the W L term is ring-pipelined SUMMA
+    against L's column panel; the W^T L term contracts the transposed
+    `col_chunk` of W (this shard's block-rows of W^T, panel-sized)
+    against the same panel. Backward of the 2-D trainer's L-update
+    never touches anything (n, n)-shaped."""
+    from repro.distributed import constrain as tc
+    row_axis, col_axis = axes
+    tn = L_t.shape[-2]
+    r0 = jax.lax.axis_index(row_axis) * tn
+    mm = lambda a, b: _mm(a, b, cfg)                         # noqa: E731
+    L_col = tc.gather_cols(L_t, row_axis)             # (B, n, tm)
+    wl = tc.summa_matmul(W_t, L_col, grid, axes, mm)
+    wt_rows = jnp.swapaxes(
+        tc.col_chunk(W_t, grid, row_axis, col_axis, r0, tn), -1, -2)
+    return -(wl + mm(wt_rows, L_col))
+
+
+def _make_smooth_tile(cfg: PFMConfig, grid, axes):
+    """The tile-local ADMM smooth terms with a hand-written stripe VJP
+    (custom_vjp closed over the static cfg/grid/axes): forward returns
+    the replicated scalar sum over the batch AND mesh (psum'd tile
+    partials), backward returns the analytic cotangents
+
+        dL = -g (W + W^T) L,   dG = g R,   dM = g W,
+        with R = M - L L^T and W = G + rho R
+
+    computed entirely from tiles and panels — `jax.grad` of this never
+    gathers L_full/P_full the way the gather path's reference-shape
+    `smooth_terms` grad does. M is the carried P A P^T tile: its
+    recomputation in the reference (reuse_m=False) is value-identical
+    and independent of L, so reusing the carry is exact for the
+    L-gradient."""
+    from repro.distributed import constrain as tc
+
+    @jax.custom_vjp
+    def smooth_tile(L_t, G_t, M_t):
+        return _fwd(L_t, G_t, M_t)[0]
+
+    def _fwd(L_t, G_t, M_t):
+        R = M_t - _llt_tile_summa(L_t, cfg, grid, axes)
+        part = jnp.sum(G_t * R) + 0.5 * cfg.rho * jnp.sum(R * R)
+        val = tc.psum_scope(part, *axes)
+        return val, (L_t, G_t + cfg.rho * R, R)
+
+    def _bwd(res, g):
+        L_t, W_t, R = res
+        gL = g * _stripe_l_grad(L_t, W_t, cfg, grid, axes)
+        return gL, g * R, g * W_t
+
+    smooth_tile.defvjp(_fwd, _bwd)
+    return smooth_tile
+
+
+def _lipschitz_step_tile(L_t, A_t, n: int, cfg: PFMConfig, axes):
+    """`_lipschitz_step` from tiles: the two Frobenius sums are psum'd
+    tile partials (reassociated f32 — atol contract), producing the
+    identical replicated (B,) step on every shard."""
+    from repro.distributed import constrain as tc
+    l2 = tc.psum_scope(jnp.sum(L_t * L_t, axis=(-2, -1)), *axes)
+    a2 = tc.psum_scope(jnp.sum(A_t * A_t, axis=(-2, -1)), *axes)
+    lip = 1.0 + cfg.rho * (2.0 * l2 / n + jnp.sqrt(a2))
+    return cfg.eta / lip
+
+
+def _warm_start_L_tile(M0_t, k_L, n: int, r0, c0, tn: int, tm: int):
+    """Tile of `_warm_start_L` without carrying a full M0: the diagonal
+    lives where global row == col, which is elementwise on the local
+    M0 tile; the sub-diagonal noise slices the SAME full (n, n) draw
+    the reference makes (replicated, init-only — the one full-shape
+    transient `comm_mode="summa"` keeps, outside the loop body)."""
+    rows = r0 + jnp.arange(tn)[:, None]
+    cols = c0 + jnp.arange(tm)[None, :]
+    diag = jnp.where(rows == cols,
+                     jnp.sqrt(jnp.maximum(M0_t, 1e-3)), 0.0)
+    noise = jax.lax.dynamic_slice(jax.random.normal(k_L, (n, n)),
+                                  (r0, c0), (tn, tm))
+    return diag + 1e-3 * jnp.where(rows > cols, noise, 0.0)
+
+
+def _batch_metrics_tile(L_t, G_t, M_t, cfg: PFMConfig, grid, axes):
+    """Final per-matrix metrics from tiles (plain f32 matmul like
+    `_batch_metrics`, which deliberately ignores the bf16 lever for
+    reporting): tile partials psum'd over both axes. The reduction
+    order differs from the reference lax.map — consistent with the
+    summa path's per-backend atol contract."""
+    from repro.distributed import constrain as tc
+    R = M_t - _llt_tile_summa(L_t, cfg, grid, axes, mm=jnp.matmul)
+    l1 = tc.psum_scope(jnp.sum(jnp.abs(L_t), axis=(-2, -1)), *axes)
+    dual = tc.psum_scope(jnp.sum(G_t * R, axis=(-2, -1)), *axes)
+    rr = tc.psum_scope(jnp.sum(R * R, axis=(-2, -1)), *axes)
+    return {
+        "l1": l1,
+        "residual": jnp.sqrt(rr),
+        "loss": l1 + dual + 0.5 * cfg.rho * rr,
+    }
+
+
 def _soft_perm_tiles_2d(y, keys, cfg: PFMConfig, node_mask, grid, axes,
                         sinkhorn_mode: str):
     """Tile of soft_permutation_batch's P (rows = positions); see
@@ -552,7 +696,8 @@ def _soft_perm_tiles_2d(y, keys, cfg: PFMConfig, node_mask, grid, axes,
 
 def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
                    node_mask, keys, batch_weight, *, cfg: PFMConfig, opt,
-                   grid, axes, sinkhorn_mode: str = "exact"):
+                   grid, axes, sinkhorn_mode: str = "exact",
+                   comm_mode: str = "gather"):
     """shard_map body of the 2-D model-parallel bucketed trainer.
 
     A_tile: (B, tn, tm) — this device's tile of the (B, n, n) bucket
@@ -561,55 +706,82 @@ def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
     replicated; scores and all (B,)/(n,)-shaped quantities are computed
     identically on every device. batch_weight masks θ-grad rows exactly
     as in the 1-D trainer. Returns replicated (params, opt_state,
-    metrics)."""
+    metrics).
+
+    comm_mode="gather" (default) is the cross-backend bitwise-parity
+    path (full-shape transients, DESIGN.md §10); comm_mode="summa"
+    keeps every loop-body transient at panel size or below via the
+    SUMMA tile algebra above (per-backend atol contract, DESIGN.md
+    §11)."""
     from repro.distributed import constrain as tc
     levels = list(levels_tuple)
     row_axis, col_axis = axes
     B, tn, tm = A_tile.shape
     n = tn * grid[0]
+    summa = comm_mode == "summa"
 
     ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
     k_init, k_L, k_loop = ks[:, 0], ks[:, 1], ks[:, 2]
     r0 = jax.lax.axis_index(row_axis) * tn
     c0 = jax.lax.axis_index(col_axis) * tm
 
+    def reordered_tiles(P_t):
+        if summa:
+            return _reordered_2d_summa(P_t, A_tile, cfg, grid, axes)
+        return _reordered_2d(P_t, A_tile, cfg, grid, axes)
+
     y0 = _predict_scores_batch(params, cfg, levels, x_g)
     P0_tile = _soft_perm_tiles_2d(y0, k_init, cfg, node_mask, grid,
                                   axes, sinkhorn_mode)
-    M0_tile = _reordered_2d(P0_tile, A_tile, cfg, grid, axes)
-    M0_full = tc.gather_full(M0_tile, row_axis, col_axis)
-    L0_full = jax.vmap(lambda m0, kl: _warm_start_L(m0, kl, n))(M0_full,
-                                                               k_L)
-    L0_tile = tc.slice_tile(L0_full, grid, row_axis, col_axis)
+    M0_tile = reordered_tiles(P0_tile)
+    if summa:
+        L0_tile = jax.vmap(
+            lambda m0, kl: _warm_start_L_tile(m0, kl, n, r0, c0, tn,
+                                              tm))(M0_tile, k_L)
+    else:
+        M0_full = tc.gather_full(M0_tile, row_axis, col_axis)
+        L0_full = jax.vmap(lambda m0, kl: _warm_start_L(m0, kl, n))(
+            M0_full, k_L)
+        L0_tile = tc.slice_tile(L0_full, grid, row_axis, col_axis)
     G0_tile = jnp.zeros_like(M0_tile)
 
     grad_L = jax.grad(smooth_terms, argnums=0)
+    smooth_tile = _make_smooth_tile(cfg, grid, axes) if summa else None
 
     def body(k, carry):
         L_t, G_t, P_t, M_t, params, opt_state = carry
         kk = jax.vmap(lambda c: jax.random.fold_in(c, k))(k_loop)
-        A_full = tc.gather_full(A_tile, row_axis, col_axis)
-        L_full = tc.gather_full(L_t, row_axis, col_axis)
-        G_full = tc.gather_full(G_t, row_axis, col_axis)
-        P_full = tc.gather_full(P_t, row_axis, col_axis)
-        M_full = tc.gather_full(M_t, row_axis, col_axis)
 
-        # ---- L-update: reference-shape grad on gathered operands,
-        # tile-local fused prox/tril from global coordinates
-        gL_full = jax.vmap(
-            lambda l, p, a, g, m: grad_L(l, p, a, g, cfg.rho, cfg,
-                                         m if cfg.reuse_m else None)
-        )(L_full, P_full, A_full, G_full, M_full)
-        gL_t = tc.slice_tile(gL_full, grid, row_axis, col_axis)
-        t = jax.vmap(lambda l, a: _lipschitz_step(l, a, n, cfg))(L_full,
-                                                                A_full)
+        # ---- L-update: stripe-VJP grad from tiles (summa) or
+        # reference-shape grad on gathered operands (gather); fused
+        # prox/tril is tile-local from global coordinates either way
+        if summa:
+            gL_t = jax.grad(
+                lambda l: smooth_tile(l, G_t, M_t))(L_t)
+            t = _lipschitz_step_tile(L_t, A_tile, n, cfg, axes)
+        else:
+            A_full = tc.gather_full(A_tile, row_axis, col_axis)
+            L_full = tc.gather_full(L_t, row_axis, col_axis)
+            G_full = tc.gather_full(G_t, row_axis, col_axis)
+            P_full = tc.gather_full(P_t, row_axis, col_axis)
+            M_full = tc.gather_full(M_t, row_axis, col_axis)
+            gL_full = jax.vmap(
+                lambda l, p, a, g, m: grad_L(l, p, a, g, cfg.rho, cfg,
+                                             m if cfg.reuse_m else None)
+            )(L_full, P_full, A_full, G_full, M_full)
+            gL_t = tc.slice_tile(gL_full, grid, row_axis, col_axis)
+            t = jax.vmap(lambda l, a: _lipschitz_step(l, a, n, cfg))(
+                L_full, A_full)
         if cfg.use_kernels:
             L_t = kops.prox_tril(L_t, gL_t, t, t, row_offset=r0,
                                  col_offset=c0)
         else:
             L_t = kref.prox_tril_ref(L_t, gL_t, t, t, r0, c0)
-        L_full = tc.gather_full(L_t, row_axis, col_axis)
-        llt_t = _llt_tile(L_full, cfg, grid, axes)
+        if summa:
+            llt_t = _llt_tile_summa(L_t, cfg, grid, axes)
+        else:
+            L_full = tc.gather_full(L_t, row_axis, col_axis)
+            llt_t = _llt_tile(L_full, cfg, grid, axes)
 
         # ---- theta-update: tile-local loss, grads psum'd over BOTH
         # mesh axes into one shared replicated Adam step
@@ -617,7 +789,7 @@ def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
             y = _predict_scores_batch(p_, cfg, levels, x_g)
             Pt = _soft_perm_tiles_2d(y, kk, cfg, node_mask, grid,
                                      axes, sinkhorn_mode)
-            Mt = _reordered_2d(Pt, A_tile, cfg, grid, axes)
+            Mt = reordered_tiles(Pt)
             R = Mt - llt_t
             per_b = jnp.sum(G_t * R, axis=(-2, -1)) \
                 + 0.5 * cfg.rho * jnp.sum(R * R, axis=(-2, -1))
@@ -635,9 +807,9 @@ def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
         kk1 = jax.vmap(lambda c: jax.random.fold_in(c, 1))(kk)
         P_t = _soft_perm_tiles_2d(y, kk1, cfg, node_mask, grid, axes,
                                   sinkhorn_mode)
-        M_t = _reordered_2d(P_t, A_tile, cfg, grid, axes)
+        M_t = reordered_tiles(P_t)
 
-        # ---- dual update — tile-local, reusing the stripe-chunked LL^T
+        # ---- dual update — tile-local, reusing this iteration's LL^T
         G_t = G_t + cfg.rho * (M_t - llt_t)
         return (L_t, G_t, P_t, M_t, params, opt_state)
 
@@ -645,25 +817,45 @@ def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
         0, cfg.n_admm, body,
         (L0_tile, G0_tile, P0_tile, M0_tile, params, opt_state))
 
+    if summa:
+        return params, opt_state, _batch_metrics_tile(L_t, G_t, M_t,
+                                                      cfg, grid, axes)
     L = tc.gather_full(L_t, row_axis, col_axis)
     G = tc.gather_full(G_t, row_axis, col_axis)
     M = tc.gather_full(M_t, row_axis, col_axis)
     return params, opt_state, _batch_metrics(L, G, M, cfg)
 
 
+def _resolve_2d_modes(comm_mode: str, sinkhorn_mode: str | None):
+    """comm_mode selects the 2-D trainer's data-movement strategy;
+    sinkhorn_mode=None resolves to the natural Sinkhorn for that
+    strategy ("tiled" under summa — nothing (n, n)-shaped anywhere —
+    "exact" under gather, preserving the bitwise pin)."""
+    if comm_mode not in ("gather", "summa"):
+        raise ValueError(f"unknown comm_mode {comm_mode!r} "
+                         "(expected 'gather' or 'summa')")
+    if sinkhorn_mode is None:
+        sinkhorn_mode = "tiled" if comm_mode == "summa" else "exact"
+    return comm_mode, sinkhorn_mode
+
+
 @functools.lru_cache(maxsize=16)
 def train_2d_fn(cfg: PFMConfig, opt, mesh, axes=("row", "col"),
-                sinkhorn_mode: str = "exact"):
+                sinkhorn_mode: str | None = None,
+                comm_mode: str = "gather"):
     """The shard_map'd (unjitted) 2-D trainer — the jit / .lower()
     target for live training and the train_8k dry-run. Trace under
     `kops.mesh_scope(mesh)` so kernel wrappers lower to their
     shard-friendly XLA forms inside the region."""
     from repro.distributed.sharding import (get_shard_map,
                                             pfm_train_specs_2d)
+    comm_mode, sinkhorn_mode = _resolve_2d_modes(comm_mode,
+                                                 sinkhorn_mode)
     in_specs, out_specs = pfm_train_specs_2d(axes)
     grid = (mesh.shape[axes[0]], mesh.shape[axes[1]])
     fn = functools.partial(_admm_train_2d, cfg=cfg, opt=opt, grid=grid,
-                           axes=tuple(axes), sinkhorn_mode=sinkhorn_mode)
+                           axes=tuple(axes), sinkhorn_mode=sinkhorn_mode,
+                           comm_mode=comm_mode)
     # check_rep=False: replication of the P() outputs is by construction
     # (identical psum'd updates on identical replicated state), but the
     # checker cannot see through fori_loop carries.
@@ -672,8 +864,10 @@ def train_2d_fn(cfg: PFMConfig, opt, mesh, axes=("row", "col"),
 
 
 @functools.lru_cache(maxsize=16)
-def _trainer_2d(cfg: PFMConfig, opt, mesh, axes, sinkhorn_mode):
-    jitted = jax.jit(train_2d_fn(cfg, opt, mesh, axes, sinkhorn_mode))
+def _trainer_2d(cfg: PFMConfig, opt, mesh, axes, sinkhorn_mode,
+                comm_mode):
+    jitted = jax.jit(train_2d_fn(cfg, opt, mesh, axes, sinkhorn_mode,
+                                 comm_mode))
 
     def call(params, opt_state, A, levels_tuple, x_g, node_mask, keys,
              batch_weight):
@@ -685,7 +879,8 @@ def _trainer_2d(cfg: PFMConfig, opt, mesh, axes, sinkhorn_mode):
 
 def admm_train_2d(params, opt_state, A, levels_tuple, x_g, node_mask,
                   keys, batch_weight, *, cfg: PFMConfig, opt, mesh,
-                  axes=("row", "col"), sinkhorn_mode: str = "exact"):
+                  axes=("row", "col"), sinkhorn_mode: str | None = None,
+                  comm_mode: str = "gather"):
     """2-D model-parallel bucketed ADMM over a (row, col) mesh.
 
     Each (n, n) of the bucket's L/Γ/P/M state is sharded over BOTH mesh
@@ -695,14 +890,44 @@ def admm_train_2d(params, opt_state, A, levels_tuple, x_g, node_mask,
     state are replicated; tile-local θ-grad sums are psum'd over both
     axes into one shared Adam step per ADMM iteration.
 
-    With a frozen encoder (lr=0) this is bitwise-equal per matrix to
+    comm_mode="gather" (default): loop transients gather to full shape
+    so every reduction sees the reference op order — with a frozen
+    encoder (lr=0) this is bitwise-equal per matrix to
     `admm_train_batch` on a given backend (pinned by
     tests/test_admm_2d.py); at lr > 0 the paths differ only in θ-grad
     summation order and stay atol-close.
+
+    comm_mode="summa": every transient in the loop body stays at tile
+    or panel size — ring-pipelined SUMMA contractions, the stripe-VJP
+    L-grad, psum'd-lse tiled Sinkhorn (the default sinkhorn_mode under
+    this comm mode), tiled warm start and metrics. Per-device memory is
+    O(n²/RC) + panels; parity vs the gather path is a per-backend atol
+    contract (the psums reassociate f32 sums — DESIGN.md §11).
     """
-    return _trainer_2d(cfg, opt, mesh, tuple(axes), sinkhorn_mode)(
+    # resolve BEFORE the lru_cache lookup so sinkhorn_mode=None and its
+    # resolved spelling share one cache entry (and one compiled program)
+    comm_mode, sinkhorn_mode = _resolve_2d_modes(comm_mode,
+                                                 sinkhorn_mode)
+    return _trainer_2d(cfg, opt, mesh, tuple(axes), sinkhorn_mode,
+                       comm_mode)(
         params, opt_state, A, levels_tuple, x_g, node_mask, keys,
         batch_weight)
+
+
+# ------------------------------ compile-cache hygiene -------------------
+def clear_compile_caches():
+    """Drop every cached jitted trainer/inference factory AND their
+    underlying XLA executables (jax.clear_caches). The lru_caches above
+    are all bounded (maxsize=), but each cached entry pins compiled
+    programs for every bucket signature it has seen — a long-lived
+    serve process cycling through many (cfg, mesh, shape) combinations
+    grows compiled-program memory without limit unless it calls this
+    periodically (e.g. between corpus generations)."""
+    for fac in (_single_scorer, _batch_scorer, _flat_batch_scorer,
+                _batch_trainer, sharded_train_fn, _sharded_trainer,
+                train_2d_fn, _trainer_2d):
+        fac.cache_clear()
+    jax.clear_caches()
 
 
 # ------------------------- alternative losses (ablation baselines) ------

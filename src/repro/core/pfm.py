@@ -193,7 +193,7 @@ class PFM:
     # ------------------------------------------------------------ train
     def fit(self, matrices: Sequence, epochs: int = 1, verbose=False, *,
             batched: bool = True, max_batch: int = 32, mesh=None,
-            mesh2d=None):
+            mesh2d=None, comm_mode: str = "gather"):
         """Algorithm 1: outer epochs over the training set, inner ADMM
         per matrix. `matrices` may be scipy matrices or (name, A) pairs.
 
@@ -222,7 +222,13 @@ class PFM:
         padding). Each bucket's padded size must divide evenly by both
         mesh axis sizes. Per-matrix keys again match the single-device
         bucketed path, so with a frozen encoder the two are exactly
-        equivalent per matrix (bitwise — tests/test_admm_2d.py)."""
+        equivalent per matrix (bitwise — tests/test_admm_2d.py).
+
+        comm_mode (2-D path only) selects the trainer's data-movement
+        strategy: "gather" (default — full-shape transients, bitwise
+        lr=0 parity) or "summa" (every loop transient at tile/panel
+        size, per-backend atol parity — the production mode for n
+        beyond a device's memory, DESIGN.md §11)."""
         prepped = self._prep_items(matrices)  # PreparedMatrix pass through
 
         if mesh is not None and mesh2d is not None:
@@ -233,7 +239,7 @@ class PFM:
         if mesh2d is not None:
             return self._fit_2d(prepped, mesh2d, epochs=epochs,
                                 max_batch=max_batch, key=key,
-                                verbose=verbose)
+                                verbose=verbose, comm_mode=comm_mode)
         if mesh is not None:
             batched = True  # the sharded trainer IS the batched trainer
         if not batched:
@@ -319,7 +325,7 @@ class PFM:
         return self.history
 
     def _fit_2d(self, prepped, mesh2d, *, epochs, max_batch, key,
-                verbose):
+                verbose, comm_mode: str = "gather"):
         """2-D model-parallel epochs (DESIGN.md §10): each bucket's
         dense A stack is tiled over the mesh's two axes once (epochs
         reuse the placed arrays), per-matrix keys are identical to the
@@ -363,7 +369,7 @@ class PFM:
                     self.params, self.opt_state, tree["A"],
                     tree["levels"], tree["x_g"], tree["node_mask"],
                     keys, tree["weight"], cfg=self.cfg, opt=self.opt,
-                    mesh=mesh2d, axes=axes)
+                    mesh=mesh2d, axes=axes, comm_mode=comm_mode)
                 metrics = {k: np.asarray(v) for k, v in metrics.items()}
                 jax.block_until_ready(self.params)
                 wall = time.perf_counter() - t0

@@ -238,16 +238,17 @@ def soft_permutation_batch_2d(scores, keys, *, grid, row_axis: str,
         slice tiles back out. This is what keeps the 2-D trainer
         bitwise-equal to the bucketed path at lr=0: the reduction runs
         at reference shape behind the same op boundary.
-      * "tiled" — `kernels.sinkhorn.sinkhorn_tiled`: each normalization
-        all-gathers only a one-axis panel and reduces locally, so the
-        SINKHORN stage never materializes an (n, n) buffer (the final
-        tile transpose still gathers once — replacing it with a
-        pairwise tile exchange is part of the ROADMAP TPU-transients
-        item). XLA's fusion context shifts the lse's exp/sum by ~1 ulp
-        per iteration relative to the reference program, so this mode's
-        parity contract is atol-tight, not bitwise
-        (tests/test_admm_2d.py pins both)."""
-    from repro.kernels.sinkhorn import sinkhorn_tiled
+      * "tiled" — `kops.sinkhorn_tiled`: every normalization runs
+        tile-resident with a psum'd log-sum-exp (per-shard max/exp-sum
+        partials combined with pmax/psum — kernels/sinkhorn.py;
+        REPRO_FORCE_REF=1 drops to the panel-gather fallback), so the
+        SINKHORN stage never materializes anything wider than a tile,
+        and the final tile transpose is the panel-assembled pairwise
+        exchange (`constrain.transpose_tile_panels`) — no (n, n)
+        buffer anywhere. The psum reassociates the f32 sums, so this
+        mode's parity contract is atol-tight per backend, not bitwise
+        (tests/test_admm_2d.py pins both; DESIGN.md §11). This is the
+        default Sinkhorn under `comm_mode="summa"`."""
     B, n = scores.shape
     R, C = grid
     tn, tm = n // R, n // C
@@ -267,8 +268,9 @@ def soft_permutation_batch_2d(scores, keys, *, grid, row_axis: str,
     log_p = _gumbel_log_p(p_hat, u, tau, noise_scale)
     from repro.distributed import constrain as tc
     if mode == "tiled":
-        x = sinkhorn_tiled(log_p, n_iters, row_axis, col_axis)
-        return tc.transpose_tile(jnp.exp(x), grid, row_axis, col_axis)
+        x = kops.sinkhorn_tiled(log_p, n_iters, row_axis, col_axis)
+        return tc.transpose_tile_panels(jnp.exp(x), grid, row_axis,
+                                        col_axis)
     lp_full = tc.gather_full(log_p, row_axis, col_axis)
     sk_full = _sinkhorn_normalize(lp_full, n_iters, use_kernel)
     return tc.slice_tile(jnp.swapaxes(jnp.exp(sk_full), -1, -2), grid,

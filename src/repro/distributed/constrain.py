@@ -35,8 +35,39 @@ def gather_rows(x_tile, col_axis: str):
                               tiled=True)
 
 
+def axis_size(axis: str) -> int:
+    """Static size of a mesh axis from inside a shard_map body
+    (psum of a Python 1 constant-folds to the axis size at trace
+    time)."""
+    return jax.lax.psum(1, axis)
+
+
 def gather_full(x_tile, row_axis: str, col_axis: str):
-    """(…, tn, tm) tile -> the full (…, n, n) array on every device."""
+    """(…, tn, tm) tile -> the full (…, n, n) array on every device.
+
+    ONE all_gather over the flattened (row, col) mesh axes: the stacked
+    (…, R·C, tn, tm) result orders tiles row-major (tile (r, c) at index
+    r·C + c — jax stacks multi-axis gathers by the axis names in order
+    given), so a local reshape/swap reassembles the global array. Pure
+    data movement — element values are identical to the two-collective
+    composition (`gather_full_composed`), so the lr=0 bitwise parity
+    contract of the gather-mode 2-D trainer is unaffected; the win is
+    one collective launch instead of two on the critical path."""
+    R = axis_size(row_axis)
+    C = axis_size(col_axis)
+    tn, tm = x_tile.shape[-2:]
+    g = jax.lax.all_gather(x_tile, (row_axis, col_axis),
+                           axis=x_tile.ndim - 2, tiled=False)
+    g = g.reshape(g.shape[:-3] + (R, C, tn, tm))
+    g = jnp.swapaxes(g, -3, -2)                   # (…, R, tn, C, tm)
+    return g.reshape(g.shape[:-4] + (R * tn, C * tm))
+
+
+def gather_full_composed(x_tile, row_axis: str, col_axis: str):
+    """Documented fallback for `gather_full`: compose the two one-axis
+    gathers (cols then rows). Bitwise-identical output; two collective
+    launches instead of one. Kept for backends whose multi-axis
+    all_gather lowering is unavailable or slower."""
     return gather_cols(gather_rows(x_tile, col_axis), row_axis)
 
 
@@ -56,7 +87,11 @@ def transpose_tile(x_tile, grid, row_axis: str, col_axis: str):
     """Local tile of the global transpose. A tile of X^T generally lives
     on a different device than any tile of X (and spans devices on a
     non-square mesh), so this gathers, transposes replicated, and
-    re-slices — pure data movement, bitwise-exact."""
+    re-slices — pure data movement, bitwise-exact. Documented fallback:
+    the live path (`transpose_tile_panels`) assembles the same values
+    from panels without ever materializing the full array; keep this
+    form for debugging panel-assembly suspects against a full gather
+    (like `gather_full_composed` backs `gather_full`)."""
     full = gather_full(x_tile, row_axis, col_axis)
     return slice_tile(jnp.swapaxes(full, -1, -2), grid, row_axis,
                       col_axis)
@@ -81,3 +116,166 @@ def col_block_rows(full, grid, col_axis: str):
     c = jax.lax.axis_index(col_axis)
     return jax.lax.dynamic_slice_in_dim(full, c * tm, tm,
                                         axis=full.ndim - 2)
+
+
+# --------------------- SUMMA panel collectives (DESIGN.md §11) ----------
+#
+# The helpers below are the communication-minimal contraction toolkit of
+# `comm_mode="summa"`: nothing here ever materializes a full (…, n, n)
+# buffer — peak transients are one-axis panels ((…, tn, n) or
+# (…, n, tm)) or single tiles. All sums they introduce (psum'd
+# k-partials, masked-psum chunk assembly) REASSOCIATE the f32
+# accumulation relative to the reference program, so everything built
+# on them carries a per-backend atol contract, not the gather path's
+# cross-backend bitwise one.
+
+def bcast_panel(x, axis: str, src):
+    """Broadcast `x` from the shard at index `src` along `axis` to every
+    shard on that axis (masked psum: non-source shards contribute
+    zeros). `src` may be a traced index. Building block kept for tests
+    and step-wise SUMMA schedules: the production summa path moves its
+    panels through `summa_matmul`'s ppermute ring and the inlined
+    masked psums of `row_chunk`/`col_chunk`, not through this helper —
+    changing it does not change comm_mode="summa"."""
+    i = jax.lax.axis_index(axis)
+    return jax.lax.psum(jnp.where(i == src, x, jnp.zeros_like(x)), axis)
+
+
+def psum_scope(x, *axes: str):
+    """Reduce SUMMA k-partials (or any tile-local partial sums) over one
+    or more mesh axes in the order given."""
+    for a in axes:
+        x = jax.lax.psum(x, a)
+    return x
+
+
+def _chunk_align(tn: int, size: int):
+    if not (tn % size == 0 or size % tn == 0):
+        raise ValueError(
+            f"SUMMA chunk assembly needs the tile side ({tn}) and chunk "
+            f"size ({size}) to divide one another — power-of-two n_pad "
+            f"over power-of-two meshes always satisfies this")
+
+
+def row_chunk(x_tile, grid, row_axis: str, col_axis: str, start,
+              size: int):
+    """Global row chunk X[start:start+size, :] of a (row, col)-tiled X,
+    replicated on every shard: (…, tn, tm) tiles -> (…, size, n).
+
+    Built without any full gather: each shard forms its full-width row
+    panel (one col-axis gather, (…, tn, n)), places its overlap with
+    the chunk into a zero (…, size, n) frame, and a masked psum over
+    the row axis assembles the chunk. `start` may be traced
+    (axis_index-derived) but must be a multiple of `size`, and tile
+    side tn and `size` must divide one another so every row block falls
+    entirely inside or outside the chunk (checked statically)."""
+    R, _ = grid
+    tn = x_tile.shape[-2]
+    n = tn * R
+    _chunk_align(tn, size)
+    panel = gather_rows(x_tile, col_axis)             # (…, tn, n)
+    r = jax.lax.axis_index(row_axis)
+    if tn <= size:
+        # whole row blocks in or out of the chunk
+        inside = (r * tn >= start) & ((r + 1) * tn <= start + size)
+        off = jnp.where(inside, r * tn - start, 0)
+        zeros = jnp.zeros(panel.shape[:-2] + (size, n), panel.dtype)
+        idx = (jnp.int32(0),) * (panel.ndim - 2) + (off, jnp.int32(0))
+        buf = jax.lax.dynamic_update_slice(zeros, panel, idx)
+        contrib = jnp.where(inside, buf, 0.0)
+    else:
+        # the chunk lies inside exactly one row block
+        owner = start // tn
+        off = jnp.where(r == owner, start - r * tn, 0)
+        sl = jax.lax.dynamic_slice_in_dim(panel, off, size,
+                                          axis=panel.ndim - 2)
+        contrib = jnp.where(r == owner, sl, 0.0)
+    return jax.lax.psum(contrib, row_axis)
+
+
+def col_chunk(x_tile, grid, row_axis: str, col_axis: str, start,
+              size: int):
+    """Global column chunk X[:, start:start+size] replicated on every
+    shard: (…, tn, tm) tiles -> (…, n, size). Mirror of `row_chunk`
+    (full-height panel over the row axis, masked psum over the column
+    axis)."""
+    _, C = grid
+    tm = x_tile.shape[-1]
+    n = tm * C
+    _chunk_align(tm, size)
+    panel = gather_cols(x_tile, row_axis)             # (…, n, tm)
+    c = jax.lax.axis_index(col_axis)
+    if tm <= size:
+        inside = (c * tm >= start) & ((c + 1) * tm <= start + size)
+        off = jnp.where(inside, c * tm - start, 0)
+        zeros = jnp.zeros(panel.shape[:-2] + (n, size), panel.dtype)
+        idx = (jnp.int32(0),) * (panel.ndim - 2) + (jnp.int32(0), off)
+        buf = jax.lax.dynamic_update_slice(zeros, panel, idx)
+        contrib = jnp.where(inside, buf, 0.0)
+    else:
+        owner = start // tm
+        off = jnp.where(c == owner, start - c * tm, 0)
+        sl = jax.lax.dynamic_slice_in_dim(panel, off, size,
+                                          axis=panel.ndim - 1)
+        contrib = jnp.where(c == owner, sl, 0.0)
+    return jax.lax.psum(contrib, col_axis)
+
+
+def transpose_tile_panels(x_tile, grid, row_axis: str, col_axis: str):
+    """Local tile of the global transpose WITHOUT a full gather (the
+    communication-minimal replacement for `transpose_tile`): the
+    (r0:r0+tn, c0:c0+tm) tile of X^T is X[c0:c0+tm, r0:r0+tn]^T — a
+    `row_chunk` of X column-sliced and transposed locally. Peak
+    transient is panel-sized; element values are identical to
+    `transpose_tile` (pure data movement)."""
+    R, C = grid
+    tn, tm = x_tile.shape[-2:]
+    r0 = jax.lax.axis_index(row_axis) * tn
+    c0 = jax.lax.axis_index(col_axis) * tm
+    ch = row_chunk(x_tile, grid, row_axis, col_axis, c0, tm)
+    sl = jax.lax.dynamic_slice_in_dim(ch, r0, tn, axis=ch.ndim - 1)
+    return jnp.swapaxes(sl, -1, -2)
+
+
+def summa_matmul(a_tile, b_colpanel, grid, axes, mm=None):
+    """Tile of C = A @ B by ring-pipelined SUMMA (the variant used for
+    the largest contractions in the 2-D trainer's loop body).
+
+    a_tile: (…, tn, tm) — this shard's tile of A over (row, col);
+    b_colpanel: (…, n, tmB) — this shard's full-height column panel of
+    B (`gather_cols` of B's tiles, or a transposed `row_chunk` for a
+    B = X^T operand). Per k-step, each shard multiplies ONE (…, tn, tm)
+    tile of its block-row of A against the matching row chunk of the
+    panel and accumulates; tiles rotate around the column-axis ring
+    (ppermute), so after C steps every k block has contributed. Peak
+    live state is the B panel + two tiles — no (…, tn, n) row panel of
+    A is ever resident, which is what separates this from the bulk
+    panel-gather form. The static trip count keeps the loop
+    reverse-differentiable (the θ-grads flow through this)."""
+    row_axis, col_axis = axes
+    _, C = grid
+    if mm is None:
+        mm = jnp.matmul
+    tn, tmA = a_tile.shape[-2:]
+    c = jax.lax.axis_index(col_axis)
+    perm = [(p, (p - 1) % C) for p in range(C)]
+
+    def partial(a_rot, s, acc):
+        k = jax.lax.rem(c + s, C)
+        b_chunk = jax.lax.dynamic_slice_in_dim(
+            b_colpanel, k * tmA, tmA, axis=b_colpanel.ndim - 2)
+        return acc + mm(a_rot, b_chunk)
+
+    def step(s, carry):
+        a_rot, acc = carry
+        acc = partial(a_rot, s, acc)
+        return jax.lax.ppermute(a_rot, col_axis, perm), acc
+
+    # C-1 rotate-and-accumulate steps in the scan, the last k-partial
+    # outside it: the final rotation would only restore the start tile,
+    # so running it inside the loop is a pure wasted hop (and would
+    # make the analytic comm model's (C-1) hop count a lie)
+    acc0 = jnp.zeros(a_tile.shape[:-2] + (tn, b_colpanel.shape[-1]),
+                     jnp.float32)
+    a_rot, acc = jax.lax.fori_loop(0, C - 1, step, (a_tile, acc0))
+    return partial(a_rot, C - 1, acc)

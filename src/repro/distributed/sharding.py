@@ -244,7 +244,10 @@ def pfm_train_specs_2d(axes=("row", "col")):
     batch dim stays whole (no B-padding needed, unlike the 1-D
     data-parallel trainer). The hierarchy / x_g / node_mask / keys are
     O(n)-or-less and replicated, as are θ, the Adam state, and the (B,)
-    metrics."""
+    metrics. The specs are identical for both comm modes — gather and
+    summa differ only in what moves INSIDE the shard_map region
+    (full-array gathers vs panels/rings), not in how the region's
+    boundary is sharded."""
     row, col = axes
     repl = P()
     tile = P(None, row, col)

@@ -134,6 +134,22 @@ def sinkhorn(log_p: jnp.ndarray, n_iters: int = 20) -> jnp.ndarray:
     return _sinkhorn_cvjp(log_p, n_iters)
 
 
+def sinkhorn_tiled(log_p_tile: jnp.ndarray, n_iters: int, row_axis: str,
+                   col_axis: str, lse_mode: str = "psum") -> jnp.ndarray:
+    """Dispatch for the 2-D-sharded Sinkhorn (shard_map bodies only):
+    log_p_tile is this shard's (…, tn, tm) tile of a (row_axis,
+    col_axis)-sharded log-space matrix. Default is the psum'd-lse form
+    (tile-resident, atol contract — DESIGN.md §11); REPRO_FORCE_REF=1
+    drops to the panel-gather form, whose local full-extent reductions
+    are the closest a tiled program gets to the reference op order —
+    the same role the pure-jnp oracles play for the Pallas kernels."""
+    from repro.kernels.sinkhorn import sinkhorn_tiled as _tiled
+    if _force_ref():
+        lse_mode = "panel"
+    return _tiled(log_p_tile, n_iters, row_axis, col_axis,
+                  lse_mode=lse_mode)
+
+
 # ------------------------------------------------------------ prox_tril
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
 def _prox_tril_cvjp(L, G, eta, thresh, row_offset, col_offset, block):

@@ -35,6 +35,23 @@ def sinkhorn_chunked(log_p: jnp.ndarray, n_iters: int) -> jnp.ndarray:
     return out
 
 
+def smooth_grad_L_ref(L, G, M, rho) -> jnp.ndarray:
+    """Closed-form gradient of the ADMM smooth terms w.r.t. L — the
+    oracle the 2-D trainer's stripe VJP (DESIGN.md §11) is pinned
+    against.
+
+    f(L) = <G, R> + rho/2 ||R||_F^2 with R = M - L L^T, so with
+    W = G + rho * R:
+
+        df = <W, dR> = -<W, dL L^T + L dL^T>  =>  df/dL = -(W + W^T) L
+
+    (matching autodiff of `admm.smooth_terms`, which emits the same two
+    matmuls as -W L - W^T L). Batch-generic over leading dims."""
+    Lt = jnp.swapaxes(L, -1, -2)
+    W = G + rho * (M - L @ Lt)
+    return -(W + jnp.swapaxes(W, -1, -2)) @ L
+
+
 def _bcast_scalar(s, ndim: int):
     """Lift a scalar or (B,) per-matrix vector to broadcast against a
     (..., n, m) operand."""

@@ -54,28 +54,65 @@ def _sinkhorn_kernel(x_ref, o_ref, *, n_iters: int):
     o_ref[...] = jax.lax.fori_loop(0, n_iters, body, x).astype(o_ref.dtype)
 
 
+def _logsumexp_psum(x_tile, axis: int, mesh_axis: str):
+    """Distributed log-sum-exp over one sharded axis, tile-resident:
+    local max -> pmax, local exp-sum at the global max -> psum. Nothing
+    wider than the tile is ever materialized (the panel form gathers a
+    full-extent panel instead). The pmax'd shift is stop_gradient'd:
+    lse is invariant to the shift, so treating it as a constant yields
+    exactly the softmax cotangent — and keeps reverse-mode AD from
+    needing a (nonexistent) pmax transpose rule. The psum of per-shard
+    partial sums REASSOCIATES the f32 sum relative to the reference
+    reduction order, so users of this form carry an atol contract
+    (DESIGN.md §11), never the bitwise one."""
+    m = jnp.max(x_tile, axis=axis, keepdims=True)
+    # stop_gradient BEFORE the pmax: pmax has no differentiation rule,
+    # and none is needed — lse is shift-invariant, so a constant shift
+    # already yields the exact softmax cotangent
+    m = jax.lax.pmax(jax.lax.stop_gradient(m), mesh_axis)
+    s = jnp.sum(jnp.exp(x_tile - m), axis=axis, keepdims=True)
+    s = jax.lax.psum(s, mesh_axis)
+    return jnp.log(s) + m
+
+
 def sinkhorn_tiled(x_tile: jnp.ndarray, n_iters: int,
-                   row_axis: str, col_axis: str) -> jnp.ndarray:
-    """2-D model-parallel Sinkhorn for a shard_map body (DESIGN.md §10).
+                   row_axis: str, col_axis: str,
+                   lse_mode: str = "psum") -> jnp.ndarray:
+    """2-D model-parallel Sinkhorn for a shard_map body (DESIGN.md §10,
+    §11).
 
     x_tile: (..., tn, tm) — this device's tile of a global (..., n, n)
     log-space matrix sharded over a (row_axis, col_axis) mesh. Each
-    normalization reduces over exactly one mesh axis: the column step
-    all-gathers the tile over `row_axis` into a full-height (n, tm)
-    panel, the row step over `col_axis` into a full-width (tn, n) panel,
-    and the logsumexp runs locally on the gathered panel. Gather-then-
-    reduce is chosen over a psum-of-partials logsumexp deliberately: the
-    local reduction then sees the full axis extent in the same element
-    order as the single-device kernel, which is what keeps the 2-D
-    trainer bitwise-equal to the bucketed path at lr=0
-    (tests/test_admm_2d.py); a psum of per-shard partial sums would
-    reassociate the f32 sum and break that contract.
+    normalization reduces over exactly one mesh axis; lse_mode selects
+    how:
+
+      * "psum" (default) — `_logsumexp_psum`: per-shard max/exp-sum
+        partials combined with pmax/psum, so NOTHING wider than the
+        tile is ever resident. This is the communication- and
+        memory-minimal form `comm_mode="summa"` runs on; the psum
+        reassociates the f32 sums, so its parity contract is atol
+        per backend.
+      * "panel" — the documented fallback: all-gather the full extent
+        of the reduced axis into a one-axis panel ((n, tm) for the
+        column step, (tn, n) for the row step) and reduce locally, so
+        the f32 sum sees the full axis in reference element order.
+        Gather-then-reduce drifts only ~1 ulp (XLA fusion context)
+        from the reference program — the tightest the tiled Sinkhorn
+        gets; a panel is O(n²/R) or O(n²/C) transient per step.
 
     The iteration count is static and the loop is unrolled (like
     `ref.sinkhorn_ref`), so reverse-mode AD — needed by the θ-grads of
     the 2-D trainer — works through the collectives.
     """
     x = x_tile.astype(jnp.float32)
+    if lse_mode == "psum":
+        for _ in range(n_iters):
+            x = x - _logsumexp_psum(x, x.ndim - 2, row_axis)
+            x = x - _logsumexp_psum(x, x.ndim - 1, col_axis)
+        return x
+    if lse_mode != "panel":
+        raise ValueError(f"unknown lse_mode {lse_mode!r} "
+                         "(expected 'psum' or 'panel')")
     for _ in range(n_iters):
         colp = jax.lax.all_gather(x, row_axis, axis=x.ndim - 2,
                                   tiled=True)

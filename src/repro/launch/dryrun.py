@@ -247,6 +247,13 @@ def _run_pfm_cell(shape_name: str, mesh, n_chips) -> dict:
                     s.shape, s.dtype,
                     sharding=NamedSharding(mesh, P())), opt_state_shape)
             if kind == "train_2d":
+                # comm_mode="summa" (the factory default): the memory
+                # number this cell exists for is the per-device temp
+                # footprint of the tile/panel-transient production
+                # trainer, not the gather-mode parity path (whose
+                # full-shape loop transients measured 14.1 GB/device
+                # on this 16x16 mesh — DESIGN.md §11)
+                rec["comm_mode"] = "summa"
                 step = pfm_launch.make_pfm_train_2d_step(cfg, opt, mesh)
             else:
                 step = pfm_launch.make_pfm_train_batch_step(cfg, opt,

@@ -9,12 +9,17 @@ single-device memory.
 Shapes:
   train_8k    — n=8192 reorder-training step through the REAL 2-D
                 model-parallel trainer (core/admm.admm_train_2d,
-                DESIGN.md §10): every (n, n) of L/Γ/P/M tiled over the
-                mesh's (data, model) axes inside one shard_map region,
-                θ replicated, θ-grads psum'd over both axes. (Until
-                PR 4 this cell was a GSPMD annotation-only sketch
-                behind REPRO_PFM_SHARD2D; that escape hatch is
-                retired.)
+                DESIGN.md §10/§11): every (n, n) of L/Γ/P/M tiled over
+                the mesh's (data, model) axes inside one shard_map
+                region, θ replicated, θ-grads psum'd over both axes.
+                Runs comm_mode="summa" — ring-pipelined SUMMA
+                contractions, stripe-VJP L-grad, psum'd-lse tiled
+                Sinkhorn — so per-device transients stay at tile/panel
+                size (the gather mode's full-shape loop transients put
+                the 16x16-mesh cell at 14.1 GB/device temp; summa is
+                what makes n >= 8k production-real). (Until PR 4 this
+                cell was a GSPMD annotation-only sketch behind
+                REPRO_PFM_SHARD2D; that escape hatch is retired.)
   train_64x1k — B=64 matrices at n=1024: the data-parallel bucketed
                 trainer (DESIGN.md §8) shard_map'd over the mesh's data
                 axis, θ replicated, θ-grads psum'd
@@ -118,13 +123,18 @@ def pfm_input_specs(shape_name: str, mesh):
 
 
 def make_pfm_train_2d_step(cfg: PFMConfig, opt, mesh,
-                           axes=("data", "model")):
-    """The 2-D model-parallel trainer (DESIGN.md §10) as a lowering
+                           axes=("data", "model"),
+                           comm_mode: str = "summa"):
+    """The 2-D model-parallel trainer (DESIGN.md §10/§11) as a lowering
     target: the whole ADMM loop shard_map'd with every (n, n) of the
     dense state tiled over `axes`, θ replicated, θ-grads psum'd over
-    both axes. Trace under kops.mesh_scope(mesh) so kernels lower to
-    their chunked-XLA forms."""
-    return admm_mod.train_2d_fn(cfg, opt, mesh, tuple(axes))
+    both axes. Defaults to comm_mode="summa" (tile/panel transients
+    only — the production mode this dry-run exists to size); pass
+    comm_mode="gather" to lower the bitwise-parity path instead. Trace
+    under kops.mesh_scope(mesh) so kernels lower to their chunked-XLA
+    forms."""
+    return admm_mod.train_2d_fn(cfg, opt, mesh, tuple(axes),
+                                comm_mode=comm_mode)
 
 
 def make_pfm_train_batch_step(cfg: PFMConfig, opt, mesh,

@@ -9,7 +9,8 @@ The in-process tests need a multi-device backend and are marked
 (the dedicated CI jobs do exactly this). On a single-device session they
 skip. `test_2d_parity_subprocess_smoke` is the always-runnable tier-1
 pin: it spawns a fresh interpreter with 8 simulated CPU devices and
-asserts exact lr=0 parity there.
+asserts exact lr=0 parity there (parametrized over both comm modes:
+exact for "gather", atol for "summa").
 
 Parity contract (the acceptance criterion of PR 4): with a frozen
 encoder (lr=0) the 2-D trainer — every (n, n) of L/Γ/P/M tiled over a
@@ -23,7 +24,15 @@ reference-shape Sinkhorn/L-grad stages documented in DESIGN.md §10. At
 lr > 0 the paths differ only in θ-grad summation order (a 2-axis psum
 tree vs one flat sum) and stay atol-close. The communication-optimal
 `sinkhorn_mode="tiled"` variant trades the bitwise contract for
-panel-only gathers and is pinned atol-tight here.
+tile-resident psum'd log-sum-exps and is pinned atol-tight here.
+
+`comm_mode="summa"` (DESIGN.md §11) is pinned separately, per backend
+at atol: ring-pipelined SUMMA contractions, the stripe-VJP L-grad, the
+psum'd-lse tiled Sinkhorn, and the panel collectives they are built
+from each have direct oracles here, the end-to-end fit parity covers
+f32 + bf16 / square + non-square meshes / pure-pad tiles, and the
+no-full-transient claim is asserted on the compiled HLO's memory
+analysis.
 """
 import pathlib
 import subprocess
@@ -143,10 +152,12 @@ def test_fit2d_small_lr_close():
 
 @_NEEDS(4)
 def test_admm_2d_tiled_sinkhorn_close():
-    """sinkhorn_mode="tiled" (panel-gathered normalizations, nothing
-    (n, n)-shaped materialized in the Sinkhorn) drifts ~1 ulp per
-    normalization from the reference program — its contract is tight
-    atol, not bitwise (DESIGN.md §10)."""
+    """sinkhorn_mode="tiled" now runs the psum'd log-sum-exp (nothing
+    wider than a tile resident, pmax/psum-combined partials) plus the
+    panel-assembled tile transpose — the psums reassociate the f32
+    sums, so its contract is per-backend atol, not bitwise (DESIGN.md
+    §11; the older ~1-ulp panel-gather form is only reachable via
+    REPRO_FORCE_REF=1 through kops.sinkhorn_tiled)."""
     cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0)
     pfm = PFM(cfg, seed=0, x_mode="random")
     prepped = [pfm.prepare(A, nm) for nm, A in _mats([100, 107])]
@@ -188,11 +199,364 @@ def test_fit_mesh_and_mesh2d_exclusive():
         pfm.fit(_mats([100]), mesh=mesh, mesh2d=mesh2d)
 
 
+# ------------------- comm_mode="summa" (DESIGN.md §11) ------------------
+def _fit_summa_pair(cfg, mats, mesh2d, *, epochs=1):
+    ref = PFM(cfg, seed=0, x_mode="random")
+    h_ref = ref.fit(mats, epochs=epochs)
+    shd = PFM(cfg, seed=0, x_mode="random")
+    h_shd = shd.fit(mats, epochs=epochs, mesh2d=mesh2d,
+                    comm_mode="summa")
+    assert [h["matrix"] for h in h_ref] == [h["matrix"] for h in h_shd]
+    return h_ref, h_shd
+
+
+def _assert_atol(h_ref, h_shd, rtol):
+    for a, b in zip(h_ref, h_shd):
+        for k in ("l1", "residual", "loss"):
+            np.testing.assert_allclose(
+                b[k], a[k], rtol=rtol, atol=1e-6,
+                err_msg=f"{a['matrix']}/{k}")
+
+
+@pytest.mark.tier1
+@_NEEDS(4)
+@pytest.mark.parametrize("matmul_dtype", ["f32", "bf16"])
+def test_fit2d_summa_lr0_close_2x2(matmul_dtype):
+    """lr=0 on a 2x2 mesh: the summa path's psums reassociate f32 sums
+    (ring k-partials, psum'd lse, psum'd metrics), so its contract vs
+    the single-device bucketed path is atol per backend — observed
+    ~1e-7 relative at these sizes; pinned with margin."""
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0,
+                    matmul_dtype=matmul_dtype)
+    rtol = 1e-4 if matmul_dtype == "f32" else 2e-2
+    h_ref, h_shd = _fit_summa_pair(cfg, _mats([100, 107, 114]),
+                                   _mesh2d(2, 2), epochs=2)
+    _assert_atol(h_ref, h_shd, rtol)
+
+
+@pytest.mark.tier1
+@_NEEDS(8)
+def test_fit2d_summa_lr0_close_nonsquare_4x2():
+    """Non-square mesh (tn != tm): exercises both `row_chunk` assembly
+    cases (tile side vs chunk size), asymmetric ring trip counts, and
+    the panel transpose on rectangular tiles."""
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0)
+    h_ref, h_shd = _fit_summa_pair(cfg, _mats([100, 121]),
+                                   _mesh2d(4, 2))
+    _assert_atol(h_ref, h_shd, 1e-4)
+
+
+@pytest.mark.tier1
+@_NEEDS(8)
+def test_fit2d_summa_pure_pad_tiles():
+    """True n 60/63 inside the 128 pad on a 4x2 mesh: whole row-tiles
+    and half of every panel are pure padding; the tiled warm start,
+    stripe grads, and psum'd lse must handle the all-pad tiles without
+    NaN leakage into the psums."""
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0)
+    h_ref, h_shd = _fit_summa_pair(cfg, _mats([60, 63]), _mesh2d(4, 2))
+    _assert_atol(h_ref, h_shd, 1e-4)
+
+
+@pytest.mark.tier1
+@_NEEDS(4)
+def test_fit2d_summa_small_lr_close():
+    """lr>0: θ-grads flow through the SUMMA contractions and the
+    psum'd-lse Sinkhorn (ring transposes, chunk-assembly transposes);
+    trajectories stay close to the single-device path."""
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=1e-3)
+    h_ref, h_shd = _fit_summa_pair(cfg, _mats([100, 107, 114]),
+                                   _mesh2d(2, 2))
+    for a, b in zip(h_ref, h_shd):
+        np.testing.assert_allclose(b["l1"], a["l1"], rtol=5e-3)
+        np.testing.assert_allclose(b["residual"], a["residual"],
+                                   rtol=0.2, atol=1e-3)
+
+
+def _lower_2d_cell(cfg, n, mesh, comm_mode):
+    """Lower one admm_train_2d bucket (B=1, synthetic hierarchy) for
+    compile-time memory/HLO inspection."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import admm as admm_mod
+    from repro.kernels import ops as kops
+    from repro.launch.pfm_step import _synthetic_levels
+    from repro.optim import adam
+
+    repl = NamedSharding(mesh, P())
+    tile = NamedSharding(mesh, P(None, "row", "col"))
+
+    def b_struct(s, sharding=repl):
+        return jax.ShapeDtypeStruct((1,) + s.shape, s.dtype,
+                                    sharding=sharding)
+
+    pfm = PFM(cfg, seed=0, x_mode="random")
+    p_sh = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=repl),
+        pfm.state_dict()["params"])
+    o_sh = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=repl),
+        pfm.opt_state)
+    levels = jax.tree_util.tree_map(b_struct, _synthetic_levels(n))
+    fn = jax.jit(admm_mod.train_2d_fn(cfg, adam(cfg.lr), mesh,
+                                      ("row", "col"), None, comm_mode))
+    with kops.mesh_scope(mesh):
+        return fn.lower(
+            p_sh, o_sh,
+            b_struct(jax.ShapeDtypeStruct((n, n), jnp.float32), tile),
+            levels,
+            b_struct(jax.ShapeDtypeStruct((n, 1), jnp.float32)),
+            b_struct(jax.ShapeDtypeStruct((n,), jnp.float32)),
+            jax.ShapeDtypeStruct((1, 2), jnp.uint32, sharding=repl),
+            jax.ShapeDtypeStruct((1,), jnp.float32, sharding=repl))
+
+
+def _hlo_computations(txt):
+    """Parse a compiled HLO module's text into {name: body_text}."""
+    comps, name, buf = {}, None, []
+    for line in txt.splitlines():
+        if name is None:
+            if (line.startswith("%") or line.startswith("ENTRY")) \
+                    and line.rstrip().endswith("{"):
+                toks = line.split()
+                name = (toks[1] if toks[0] == "ENTRY" else
+                        toks[0]).lstrip("%")
+                buf = [line]
+        else:
+            buf.append(line)
+            if line.startswith("}"):
+                comps[name] = "\n".join(buf)
+                name = None
+    return comps
+
+
+def _loop_reachable_computations(txt):
+    """Every computation reachable from ANY while-loop body (the ADMM
+    fori_loop, the ring SUMMA steps, the encoder's scatter scans, and
+    all fusions/calls they invoke) — i.e. the program's entire
+    steady state; only straight-line init/final code is excluded."""
+    import re
+    comps = _hlo_computations(txt)
+    seen = set()
+    stack = list(set(re.findall(r"body=%?([\w.\-]+)", txt)))
+    while stack:
+        c = stack.pop()
+        if c in seen or c not in comps:
+            continue
+        seen.add(c)
+        stack.extend(re.findall(
+            r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)", comps[c]))
+    return {c: comps[c] for c in seen}
+
+
+@_NEEDS(4)
+def test_summa_no_full_transient_in_loop():
+    """The acceptance pin of comm_mode="summa": the compiled program
+    produces no full (B, n, n) value inside ANY loop body. Asserted on
+    the compiled HLO two ways: (1) walking every computation reachable
+    from a while body — zero instructions with a full-shape result
+    under summa (the one full-shape value left, the warm-start noise
+    draw, is straight-line init code), vs hundreds under gather;
+    (2) memory analysis — the summa program's per-device temp drops by
+    multiples of the full-buffer size (the θ-machinery floor is shared
+    by both modes, so the small-n ratio understates the large-n win:
+    14.1 GB -> 0.82 GB on the 16x16 train_8k cell)."""
+    import re
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=2, lr=1e-3, use_kernels=False)
+    n = 512
+    mesh = _mesh2d(2, 2)
+    comp = {m: _lower_2d_cell(cfg, n, mesh, m).compile()
+            for m in ("gather", "summa")}
+    full_pat = re.compile(rf"= f32\[1,{n},{n}\]")
+    in_loops = {}
+    for m, c in comp.items():
+        reach = _loop_reachable_computations(c.as_text())
+        assert reach, f"{m}: found no while bodies — parser broke?"
+        in_loops[m] = sum(len(full_pat.findall(t))
+                          for t in reach.values())
+    assert in_loops["summa"] == 0, in_loops
+    assert in_loops["gather"] > 0, in_loops
+    temp = {m: c.memory_analysis().temp_size_in_bytes
+            for m, c in comp.items()}
+    full_bytes = n * n * 4
+    assert temp["summa"] < 0.65 * temp["gather"], temp
+    assert temp["gather"] - temp["summa"] > 4 * full_bytes, temp
+
+
+# ---------------- SUMMA building blocks vs direct oracles ---------------
+def _shmap(mesh, body, in_specs, out_specs):
+    from repro.distributed.sharding import get_shard_map
+    return jax.jit(get_shard_map()(body, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, check_rep=False))
+
+
+@_NEEDS(8)
+@pytest.mark.parametrize("rc", [(4, 2), (2, 4)])
+def test_summa_panel_collectives_oracles(rc):
+    """gather_full (one flattened-axes collective) == the composed
+    two-collective form == the replicated input; row/col_chunk,
+    transpose_tile_panels, bcast_panel, and summa_matmul against numpy
+    slices — on both rectangular orientations so both chunk-assembly
+    cases (tile side <= / > chunk size) run."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import constrain as tc
+    R, C = rc
+    mesh = _mesh2d(R, C)
+    n = 16
+    tn, tm = n // R, n // C
+    X = jax.random.normal(jax.random.PRNGKey(0), (3, n, n))
+    Y = jax.random.normal(jax.random.PRNGKey(1), (3, n, n))
+    t2 = P(None, "row", "col")
+
+    def body(x_t, y_t):
+        full = tc.gather_full(x_t, "row", "col")
+        full2 = tc.gather_full_composed(x_t, "row", "col")
+        rch = tc.row_chunk(x_t, (R, C), "row", "col",
+                           jax.lax.axis_index("col") * tm, tm)
+        cch = tc.col_chunk(x_t, (R, C), "row", "col",
+                           jax.lax.axis_index("row") * tn, tn)
+        xt = tc.transpose_tile_panels(x_t, (R, C), "row", "col")
+        prod = tc.summa_matmul(x_t, tc.gather_cols(y_t, "row"),
+                               (R, C), ("row", "col"))
+        b0 = tc.bcast_panel(x_t, "col", 1)
+        return full, full2, rch, cch, xt, prod, b0
+
+    # out_specs: rch varies only with the col index (rows [c*tm, ..))
+    # and is replicated across rows — concatenating the C shards along
+    # the row dim reassembles X; dually for cch. b0 (the col-axis
+    # broadcast of tile (r, 1)) varies only with the row index and
+    # reassembles X's second column-block.
+    f = _shmap(mesh, body, (t2, t2),
+               (P(None, None, None), P(None, None, None),
+                P(None, "col", None), P(None, None, "row"),
+                t2, t2, P(None, "row", None)))
+    full, full2, rch, cch, xt, prod, b0 = f(X, Y)
+    Xn = np.asarray(X)
+    np.testing.assert_array_equal(np.asarray(full), Xn)
+    np.testing.assert_array_equal(np.asarray(full2), Xn)
+    np.testing.assert_array_equal(np.asarray(rch), Xn)
+    np.testing.assert_array_equal(np.asarray(cch), Xn)
+    np.testing.assert_array_equal(np.asarray(xt),
+                                  np.swapaxes(Xn, -1, -2))
+    np.testing.assert_allclose(np.asarray(prod),
+                               np.asarray(X @ Y), rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(b0), Xn[:, :, tm:2 * tm])
+
+
+@_NEEDS(4)
+def test_summa_stripe_l_grad_matches_reference():
+    """The hand-written stripe VJP (DESIGN.md §11): value AND L-grad of
+    the tile-local smooth terms vs (a) the closed-form oracle
+    kref.smooth_grad_L_ref and (b) autodiff through the reference
+    smooth_terms at full shape."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import admm as admm_mod
+    from repro.kernels import ref as kref
+    cfg = PFMConfig()
+    R, C = 2, 2
+    mesh = _mesh2d(R, C)
+    n, B = 64, 2
+    k = jax.random.PRNGKey(3)
+    kL, kG, kM = jax.random.split(k, 3)
+    L = jnp.tril(jax.random.normal(kL, (B, n, n)))
+    G = jax.random.normal(kG, (B, n, n))
+    M = jax.random.normal(kM, (B, n, n))
+    t2 = P(None, "row", "col")
+
+    def body(L_t, G_t, M_t):
+        smooth = admm_mod._make_smooth_tile(cfg, (R, C),
+                                            ("row", "col"))
+        val, grad = jax.value_and_grad(smooth)(L_t, G_t, M_t)
+        return val, grad
+
+    val, grad = _shmap(mesh, body, (t2, t2, t2), (P(), t2))(L, G, M)
+    g_oracle = kref.smooth_grad_L_ref(L, G, M, cfg.rho)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(g_oracle),
+                               rtol=2e-4, atol=2e-4)
+
+    ref_val = 0.0
+    g_auto = []
+    for b in range(B):
+        v, g = jax.value_and_grad(admm_mod.smooth_terms)(
+            L[b], None, None, G[b], cfg.rho, cfg, M[b])
+        ref_val += float(v)
+        g_auto.append(g)
+    np.testing.assert_allclose(float(val), ref_val, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(
+        jnp.stack(g_auto)), rtol=2e-4, atol=2e-4)
+
+
+def _masked_gumbel_logits(n, true_ns, seed=5, sigma=0.02):
+    """Training-realistic log-space Sinkhorn inputs: node-masked
+    SoftRank distributions + Gumbel noise (masked entries near
+    log(eps)/tau ~ -150, where a careless distributed lse under- or
+    overflows)."""
+    from repro.core import reorder
+    from repro.core.reorder import _gumbel_log_p
+    b = len(true_ns)
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (b, n))
+    masks = jnp.stack([(jnp.arange(n) < t).astype(jnp.float32)
+                       for t in true_ns])
+    p_hat = jax.vmap(
+        lambda y, m: reorder.rank_distribution(y, sigma, m))(scores,
+                                                             masks)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), b)
+    u = jax.vmap(lambda kk, p: jax.random.uniform(kk, p.shape))(keys,
+                                                                p_hat)
+    return _gumbel_log_p(p_hat, u, 0.3, 1.0)
+
+
+@_NEEDS(8)
+@pytest.mark.parametrize("rc", [(2, 2), (4, 2)])
+@pytest.mark.parametrize("dtype", ["f32", "bf16"])
+def test_summa_sinkhorn_tiled_psum_lse_matches_oracle(rc, dtype):
+    """The psum'd-lse tiled Sinkhorn vs the exact oracle at reference
+    shape: atol contract on 2x2 and 4x2 meshes, f32 and bf16 inputs,
+    ragged/masked training logits."""
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import ref as kref
+    from repro.kernels.sinkhorn import sinkhorn_tiled
+    R, C = rc
+    mesh = _mesh2d(R, C)
+    n = 128
+    log_p = _masked_gumbel_logits(n, [100, 90])
+    if dtype == "bf16":
+        log_p = log_p.astype(jnp.bfloat16)
+    t2 = P(None, "row", "col")
+    out = _shmap(mesh, lambda t: sinkhorn_tiled(t, 4, "row", "col"),
+                 (t2,), t2)(log_p)
+    ref = kref.sinkhorn_ref(log_p, 4)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.tier1
+def test_compile_caches_bounded_and_clearable():
+    """Every jitted trainer/inference factory cache is bounded, and
+    clear_compile_caches() empties them (long-lived serve processes
+    call it to cap compiled-program memory)."""
+    from repro.core import admm as admm_mod
+    facs = (admm_mod._single_scorer, admm_mod._batch_scorer,
+            admm_mod._flat_batch_scorer, admm_mod._batch_trainer,
+            admm_mod.sharded_train_fn, admm_mod._sharded_trainer,
+            admm_mod.train_2d_fn, admm_mod._trainer_2d)
+    for fac in facs:
+        assert fac.cache_info().maxsize is not None, fac
+    # populate one entry, then clear
+    admm_mod._single_scorer(PFMConfig())
+    assert admm_mod._single_scorer.cache_info().currsize >= 1
+    admm_mod.clear_compile_caches()
+    for fac in facs:
+        assert fac.cache_info().currsize == 0, fac
+
+
 @pytest.mark.slow
 @pytest.mark.tier1
-def test_2d_parity_subprocess_smoke():
+@pytest.mark.parametrize("comm_mode", ["gather", "summa"])
+def test_2d_parity_subprocess_smoke(comm_mode):
     """Always-runnable pin: fresh interpreter, 8 simulated CPU devices,
-    exact lr=0 parity of PFM.fit(mesh2d=2x2) vs the bucketed path."""
+    lr=0 parity of PFM.fit(mesh2d=2x2) vs the bucketed path — exact
+    for comm_mode="gather", atol for "summa"."""
     script = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = \
@@ -214,11 +578,16 @@ def test_2d_parity_subprocess_smoke():
         a = PFM(cfg, seed=0, x_mode="random")
         ha = a.fit(mats, epochs=1)
         b = PFM(cfg, seed=0, x_mode="random")
-        hb = b.fit(mats, epochs=1, mesh2d=make_mesh2d(2, 2))
+        hb = b.fit(mats, epochs=1, mesh2d=make_mesh2d(2, 2),
+                   comm_mode={comm_mode!r})
         for x, y in zip(ha, hb):
             assert x["matrix"] == y["matrix"]
             for k in ("l1", "residual", "loss"):
-                assert x[k] == y[k], (x["matrix"], k, x[k], y[k])
+                if {comm_mode!r} == "gather":
+                    assert x[k] == y[k], (x["matrix"], k, x[k], y[k])
+                else:
+                    rel = abs(y[k] - x[k]) / (abs(x[k]) + 1e-9)
+                    assert rel < 1e-4, (x["matrix"], k, x[k], y[k])
         print("ADMM_2D_OK")
     """)
     res = subprocess.run([sys.executable, "-c", script],
