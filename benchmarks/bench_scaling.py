@@ -14,6 +14,12 @@ ones), (b) an analytic comm-volume-per-iteration column, and (c) for
 executed rows the host-visible live-array delta. n=4k EXECUTES under
 summa (it was compile-only before the transients were tiled); n=8k
 stays compile+memory for both modes.
+
+The `carry="bcsr"` sweep (DESIGN.md §12) rides the same harness in its
+own subprocess: the block-sparse slot carry plus left-sparse SUMMA
+rings make n=16k EXECUTABLE on this host (dense summa is compile-only
+past 4k), with the block-occupancy census trajectory recorded per row,
+and n=32k is pinned as a compile+memory row.
 """
 from __future__ import annotations
 
@@ -44,6 +50,198 @@ ADMM_2D_EXEC = {1024: ("gather", "summa"), 2048: ("gather", "summa"),
 ADMM_2D_COMPILE = {4096: ("gather",), 8192: ("gather", "summa")}
 # single-device bucketed reference timings for the comparison column
 ADMM_2D_REF_1DEV = (1024, 2048)
+
+# carry="bcsr" sweep (summa only): n -> static per-block-row slot
+# budget S. At n=16k on the 2x2 mesh the tile is 8192^2 (nbc=64
+# 128-blocks); S=4 carries 1/16 of the dense state and the exec row is
+# the point of the sweep — the dense summa carry is compile-only past
+# 4k on one host. n=32k (nbc=128) is compile+memory only.
+ADMM_2D_BCSR_EXEC = {16384: 4}
+ADMM_2D_BCSR_COMPILE = {32768: 4}
+
+
+def _run_rows(script, timeout=5400, tag="admm_2d"):
+    """Run a bench subprocess and parse its incremental ROW= protocol.
+    A crash or timeout mid-sweep must not masquerade as a completed
+    run: whatever rows were emitted are kept but marked partial."""
+    partial = None
+    stdout = ""
+    try:
+        res = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True,
+                             timeout=timeout)
+        stdout = res.stdout
+        if res.returncode != 0:
+            partial = f"subprocess exited {res.returncode}"
+            print(f"{tag} crashed:", res.stderr[-3000:])
+        if not any(ln.startswith("ROW=") for ln in stdout.splitlines()):
+            print(f"{tag} produced no rows:", res.stderr[-3000:])
+            return []
+    except subprocess.TimeoutExpired as e:
+        stdout = (e.stdout or b"").decode() if isinstance(
+            e.stdout, bytes) else (e.stdout or "")
+        partial = "timeout"
+    rows = [json.loads(ln[len("ROW="):])
+            for ln in stdout.splitlines() if ln.startswith("ROW=")]
+    if partial:
+        print(f"{tag} incomplete ({partial}); keeping {len(rows)} "
+              f"partial rows")
+        rows = [dict(r, partial=partial) for r in rows]
+    return rows
+
+
+def _bcsr_script(ns_exec, ns_compile):
+    """Subprocess source for the carry="bcsr" sweep. Separate from the
+    dense sweep so the n=16k execution gets its own timeout budget.
+    ns_exec / ns_compile map n -> static slot budget S."""
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    return textwrap.dedent(f"""
+        import os, json, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=4"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import admm as admm_mod
+        from repro.core.admm import PFMConfig
+        from repro.core.pfm import PFM, pack_buckets
+        from repro.data import delaunay_like
+        from repro.kernels import ops as kops
+        from repro.launch import analysis
+        from repro.launch.mesh import make_mesh2d
+        from repro.launch.pfm_step import _synthetic_levels
+        from repro.optim import adam
+
+        mesh = make_mesh2d(2, 2)
+        R = C = 2
+        BS = 128
+        repl = NamedSharding(mesh, P())
+        tile = NamedSharding(mesh, P(None, "row", "col"))
+        rows = []
+
+        def comm_bytes_per_iter(n, B, slots):
+            '''Analytic bytes received per device per iteration for the
+            bcsr summa loop: the dense one-axis panels match the dense
+            summa column, but each ring tile hop moves the left
+            operand's (nbr, S) slot arrays instead of a dense tile —
+            occupancy-scaled by S/nbc.'''
+            f = 4.0
+            nbc = (n / C) / BS
+            occ = min(1.0, slots / nbc)
+            colp = (1 - 1 / R) * B * n * (n / C) * f
+            rowp = (1 - 1 / C) * B * (n / R) * n * f
+            t_hop = B * (n / R) * (n / C) * f * occ
+            contraction = colp + 2 * rowp + (C - 1) * t_hop
+            lse = 8 * 2 * B * n * f
+            return 8 * contraction + lse
+
+        def train_fn(cfg):
+            return jax.jit(admm_mod.train_2d_fn(
+                cfg, adam(cfg.lr), mesh, ("row", "col"), None,
+                "summa", "bcsr"))
+
+        def b_struct(s, sharding):
+            return jax.ShapeDtypeStruct((1,) + s.shape, s.dtype,
+                                        sharding=sharding)
+
+        def lower_structs(n, cfg):
+            pfm = PFM(cfg, seed=0, x_mode="random")
+            p_sh = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                               sharding=repl),
+                pfm.state_dict()["params"])
+            o_sh = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                               sharding=repl),
+                pfm.opt_state)
+            levels = jax.tree_util.tree_map(
+                lambda s: b_struct(s, repl), _synthetic_levels(n))
+            x_g = b_struct(jax.ShapeDtypeStruct((n, 1), jnp.float32),
+                           repl)
+            mask = b_struct(jax.ShapeDtypeStruct((n,), jnp.float32),
+                            repl)
+            A = b_struct(jax.ShapeDtypeStruct((n, n), jnp.float32),
+                         tile)
+            keys = jax.ShapeDtypeStruct((1, 2), jnp.uint32,
+                                        sharding=repl)
+            w = jax.ShapeDtypeStruct((1,), jnp.float32, sharding=repl)
+            with kops.mesh_scope(mesh):
+                return train_fn(cfg).lower(
+                    p_sh, o_sh, A, levels, x_g, mask, keys, w)
+
+        for n, slots in {dict(ns_compile)!r}.items():
+            cfg = PFMConfig(n_admm=1, n_sinkhorn=8, lr=1e-3,
+                            bcsr_slots=slots)
+            t0 = time.perf_counter()
+            lowered = lower_structs(n, cfg)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            rows.append(dict(
+                bench="admm_2d", mode="compile", n=n, mesh="2x2",
+                comm_mode="summa", carry="bcsr",
+                bcsr=dict(bs=BS, slots=slots, nbc=n // C // BS),
+                lower_s=t1 - t0,
+                compile_s=time.perf_counter() - t1,
+                memory=analysis.memory_analysis_dict(compiled),
+                comm_bytes_per_iter=comm_bytes_per_iter(n, 1, slots)))
+            print("ROW=" + json.dumps(rows[-1]), flush=True)
+            del compiled, lowered
+
+        for n, slots in {dict(ns_exec)!r}.items():
+            cfg = PFMConfig(n_admm=1, n_sinkhorn=8, lr=1e-3,
+                            bcsr_slots=slots)
+            pfm = PFM(cfg, seed=0, x_mode="random")
+            A = delaunay_like(n - 24, "gradel", seed=3)
+            (bucket,) = pack_buckets([pfm.prepare(A, "bench")])
+            keys = jax.random.split(jax.random.PRNGKey(0), 1)
+            args = (
+                jax.device_put(pfm.params, jax.tree_util.tree_map(
+                    lambda _: repl, pfm.params)),
+                jax.device_put(pfm.opt_state, jax.tree_util.tree_map(
+                    lambda _: repl, pfm.opt_state)),
+                jax.device_put(bucket.A, tile),
+                jax.device_put(bucket.levels, jax.tree_util.tree_map(
+                    lambda _: repl, bucket.levels)),
+                jax.device_put(bucket.x_g, repl),
+                jax.device_put(bucket.node_mask, repl),
+                jax.device_put(keys, repl),
+                jax.device_put(jnp.ones((1,), jnp.float32), repl))
+            t0 = time.perf_counter()
+            with kops.mesh_scope(mesh):
+                lowered = train_fn(cfg).lower(*args)
+            compiled = lowered.compile()
+            compile_s = time.perf_counter() - t0
+            # ONE timed execution (no warm call): at n=16k a second
+            # pass would double a multi-thousand-second row for a
+            # dispatch-overhead refinement that shared-core simulated
+            # devices cannot measure anyway
+            t0 = time.perf_counter()
+            out = compiled(*args)
+            jax.block_until_ready(out[0])
+            wall = time.perf_counter() - t0
+            for k in ("l1", "residual", "loss"):
+                assert np.isfinite(np.asarray(out[2][k])).all(), k
+            occ = np.asarray(out[2]["bcsr_occupancy"])
+            rows.append(dict(
+                bench="admm_2d", mode="exec",
+                n=int(bucket.A.shape[-1]), mesh="2x2",
+                comm_mode="summa", carry="bcsr",
+                bcsr=dict(bs=BS, slots=slots,
+                          nbc=int(bucket.A.shape[-1]) // C // BS),
+                block_occupancy=occ.tolist(),
+                wall_s_2d=wall, compile_s=compile_s,
+                memory=analysis.memory_analysis_dict(compiled),
+                comm_bytes_per_iter=comm_bytes_per_iter(
+                    int(bucket.A.shape[-1]), 1, slots),
+                note="4 simulated devices share 1 host's cores: "
+                     "wall_s is cold (compile-cached, no warm call) "
+                     "and shows overhead, not speedup"))
+            print("ROW=" + json.dumps(rows[-1]), flush=True)
+            del out, compiled, lowered, args
+        print("DONE=" + json.dumps(rows))
+    """)
 
 
 def admm_2d(quick: bool = False):
@@ -231,43 +429,28 @@ def admm_2d(quick: bool = False):
                 print("ROW=" + json.dumps(rows[-1]), flush=True)
         print("DONE=" + json.dumps(rows))
     """)
-    partial = None
-    try:
-        res = subprocess.run([sys.executable, "-c", script],
-                             capture_output=True, text=True,
-                             timeout=5400)
-        stdout = res.stdout
-        if res.returncode != 0:
-            # a crash mid-sweep (OOM, assert) must not masquerade as a
-            # completed run: keep whatever rows were emitted, but mark
-            # them and surface the diagnostic
-            partial = f"subprocess exited {res.returncode}"
-            print("admm_2d crashed:", res.stderr[-3000:])
-        if not any(ln.startswith("ROW=") for ln in stdout.splitlines()):
-            print("admm_2d produced no rows:", res.stderr[-3000:])
-            return []
-    except subprocess.TimeoutExpired as e:
-        stdout = (e.stdout or b"").decode() if isinstance(
-            e.stdout, bytes) else (e.stdout or "")
-        partial = "timeout"
-    rows = [json.loads(ln[len("ROW="):])
-            for ln in stdout.splitlines() if ln.startswith("ROW=")]
-    if partial:
-        print(f"admm_2d incomplete ({partial}); keeping {len(rows)} "
-              f"partial rows")
-        rows = [dict(r, partial=partial) for r in rows]
+    rows = _run_rows(script, tag="admm_2d[dense]")
+    bcsr_exec = {1024: 1} if quick else ADMM_2D_BCSR_EXEC
+    bcsr_compile = {} if quick else ADMM_2D_BCSR_COMPILE
+    rows += _run_rows(_bcsr_script(bcsr_exec, bcsr_compile),
+                      tag="admm_2d[bcsr]")
     for r in rows:
+        lbl = r["comm_mode"] + ("+bcsr" if r.get("carry") == "bcsr"
+                                else "")
         if r["mode"] == "exec":
-            print(f"admm_2d n={r['n']} [{r['comm_mode']}]: "
+            occ = (f" occ={r['block_occupancy'][-1][0]:.2f}"
+                   f"/budget={r['block_occupancy'][-1][2]:.2f}"
+                   if r.get("block_occupancy") else "")
+            print(f"admm_2d n={r['n']} [{lbl}]: "
                   f"wall={r['wall_s_2d']:.1f}s "
                   f"temp={r['memory']['temp_size_in_bytes'] / 1e9:.2f}GB"
-                  f" comm/iter={r['comm_bytes_per_iter'] / 1e6:.0f}MB "
-                  f"(shared cores)")
+                  f" comm/iter={r['comm_bytes_per_iter'] / 1e6:.0f}MB"
+                  f"{occ} (shared cores)")
         elif r["mode"] == "exec_1dev":
             print(f"admm_2d n={r['n']} [1dev ref]: "
                   f"wall={r['wall_s_single_device']:.1f}s")
         else:
-            print(f"admm_2d n={r['n']} [{r['comm_mode']}]: "
+            print(f"admm_2d n={r['n']} [{lbl}]: "
                   f"compile={r['compile_s']:.1f}s "
                   f"temp={r['memory']['temp_size_in_bytes'] / 1e9:.2f}GB"
                   f" comm/iter={r['comm_bytes_per_iter'] / 1e6:.0f}MB")

@@ -57,6 +57,18 @@ class PFMConfig(NamedTuple):
     reuse_m: bool = False      # reuse M = P A P^T between the theta-loss
     #                            forward and the Gamma dual update
     matmul_dtype: str = "f32"  # "bf16": n^3 matmuls in bf16, f32 accum
+    # ---- carry="bcsr" knobs for the 2-D trainer (DESIGN.md §12):
+    bcsr_block: int = 128      # block side bs (MXU-aligned default)
+    bcsr_slots: int = 0        # S: occupied blocks kept per block-row;
+    #                            0 = auto (nbc // 8); >= nbc selects the
+    #                            dense-tile fallback (bitwise superset)
+    bcsr_repack_every: int = 1  # census re-pack cadence K: fill-in is
+    #                            admitted into the budget every K ADMM
+    #                            iterations; between repacks the support
+    #                            is frozen and the L-update runs per
+    #                            occupied block (kops.prox_tril_blocks)
+    bcsr_thresh: float = 0.0   # block-norm threshold for the occupancy
+    #                            METRIC only (no value is ever zeroed)
 
 
 def _mm(a, b, cfg: "PFMConfig"):
@@ -638,6 +650,99 @@ def _make_smooth_tile(cfg: PFMConfig, grid, axes):
     return smooth_tile
 
 
+# ------------- carry="bcsr" tile algebra (DESIGN.md §12) ----------------
+#
+# The bcsr carry replaces the dense (B, tn, tm) L/Γ/M loop tiles with
+# census-packed BCSR-ELL slot arrays (core/bcsr.py) and swaps every
+# O(n^3)-class contraction whose LEFT operand is one of those tensors
+# for the block-sparse SUMMA ring (constrain.summa_matmul_bcsr +
+# kernels/ops.bsmm): per-device contraction cost scales with the slot
+# budget S instead of the tile width. Right-hand operands stay dense
+# panels, and per-iteration dense TILE transients (scatter, W, prox
+# candidate — O(n^2/RC) elementwise) remain: the memory the carry
+# saves is the O(n^2/RC) * n_tensors * loop-lifetime state, which is
+# what the dense carry's floor was made of. P drops out of the carry
+# entirely (the summa body only ever recomputes it).
+
+def _llt_tile_summa_bcsr(L_t, Lv, Lc, grid, axes):
+    """Tile of L @ L^T with L's tile in slot form: same transposed
+    `row_chunk` column panel as `_llt_tile_summa`, block-sparse ring
+    contraction. L_t is the scattered dense tile (panel source only —
+    `row_chunk` needs the dense layout); the multiply reads (Lv, Lc)."""
+    from repro.distributed import constrain as tc
+    row_axis, col_axis = axes
+    tm = L_t.shape[-1]
+    c0 = jax.lax.axis_index(col_axis) * tm
+    lt_col = jnp.swapaxes(
+        tc.row_chunk(L_t, grid, row_axis, col_axis, c0, tm), -1, -2)
+    return tc.summa_matmul_bcsr(Lv, Lc, lt_col, grid, axes)
+
+
+def _reordered_2d_summa_bcsr(P_t, A_t, cfg: PFMConfig, grid, axes, spec):
+    """Tile of P A P^T with both contractions' left operands
+    census-packed: T = (pack P) A, M = (pack T) P^T. The census keeps
+    each block-row's S largest-norm blocks (stop-gradient selection,
+    differentiable values — autodiff flows through the kept blocks
+    exactly like through the kept entries of a prox), so with a soft
+    near-permutation P this is a budgeted approximation of the
+    reordered matrix; `bcsr_occupancy`'s captured-mass column reports
+    how faithful it currently is."""
+    from repro.core import bcsr as bx
+    from repro.distributed import constrain as tc
+    row_axis, col_axis = axes
+    tm = P_t.shape[-1]
+    c0 = jax.lax.axis_index(col_axis) * tm
+    a_col = tc.gather_cols(A_t, row_axis)             # (B, n, tm) of A
+    pv, pc = bx.pack_tile(P_t, spec)
+    T_t = tc.summa_matmul_bcsr(pv, pc, a_col, grid, axes)
+    pt_col = jnp.swapaxes(
+        tc.row_chunk(P_t, grid, row_axis, col_axis, c0, tm), -1, -2)
+    tv, tcids = bx.pack_tile(T_t, spec)
+    return tc.summa_matmul_bcsr(tv, tcids, pt_col, grid, axes)
+
+
+def _make_smooth_tile_bcsr(cfg: PFMConfig, grid, axes, spec):
+    """`_make_smooth_tile` with block-sparse contractions: forward packs
+    L for the LL^T ring; backward packs W and (via the pairwise-ppermute
+    `transpose_tile_panels`) W^T for the two L-gradient products
+
+        dL = -g ((pack W) L + (pack W^T) L),   dG = g R,   dM = g W.
+
+    L_t arrives as a scatter of the slot carry, so its support already
+    fits the budget and the forward pack is exact; the W packs are the
+    budgeted approximation the schedule signs up for (W is G + rho*R —
+    its fill beyond S blocks per block-row contributes nothing to the
+    L-gradient until a repack admits it)."""
+    from repro.core import bcsr as bx
+    from repro.distributed import constrain as tc
+
+    @jax.custom_vjp
+    def smooth_tile(L_t, G_t, M_t):
+        return _fwd(L_t, G_t, M_t)[0]
+
+    def _fwd(L_t, G_t, M_t):
+        lv, lc = bx.pack_tile(L_t, spec)
+        R = M_t - _llt_tile_summa_bcsr(L_t, lv, lc, grid, axes)
+        part = jnp.sum(G_t * R) + 0.5 * cfg.rho * jnp.sum(R * R)
+        val = tc.psum_scope(part, *axes)
+        return val, (L_t, G_t + cfg.rho * R, R)
+
+    def _bwd(res, g):
+        L_t, W_t, R = res
+        row_axis, col_axis = axes
+        L_col = tc.gather_cols(L_t, row_axis)         # (B, n, tm)
+        wv, wc = bx.pack_tile(W_t, spec)
+        wl = tc.summa_matmul_bcsr(wv, wc, L_col, grid, axes)
+        Wt_t = tc.transpose_tile_panels(W_t, grid, row_axis, col_axis)
+        wtv, wtc = bx.pack_tile(Wt_t, spec)
+        wtl = tc.summa_matmul_bcsr(wtv, wtc, L_col, grid, axes)
+        gL = -g * (wl + wtl)
+        return gL, g * R, g * W_t
+
+    smooth_tile.defvjp(_fwd, _bwd)
+    return smooth_tile
+
+
 def _lipschitz_step_tile(L_t, A_t, n: int, cfg: PFMConfig, axes):
     """`_lipschitz_step` from tiles: the two Frobenius sums are psum'd
     tile partials (reassociated f32 — atol contract), producing the
@@ -652,15 +757,18 @@ def _lipschitz_step_tile(L_t, A_t, n: int, cfg: PFMConfig, axes):
 def _warm_start_L_tile(M0_t, k_L, n: int, r0, c0, tn: int, tm: int):
     """Tile of `_warm_start_L` without carrying a full M0: the diagonal
     lives where global row == col, which is elementwise on the local
-    M0 tile; the sub-diagonal noise slices the SAME full (n, n) draw
-    the reference makes (replicated, init-only — the one full-shape
-    transient `comm_mode="summa"` keeps, outside the loop body)."""
+    M0 tile; the sub-diagonal noise is the counter-exact tile of the
+    SAME full (n, n) normal draw the reference makes
+    (reorder._normal_tile — bits generated straight from the tile's
+    flat counters), so comm_mode="summa" materializes nothing
+    (n, n)-shaped even at init. Under a non-threefry PRNG config the
+    noise falls back to draw-and-slice, preserving parity over peak
+    memory."""
     rows = r0 + jnp.arange(tn)[:, None]
     cols = c0 + jnp.arange(tm)[None, :]
     diag = jnp.where(rows == cols,
                      jnp.sqrt(jnp.maximum(M0_t, 1e-3)), 0.0)
-    noise = jax.lax.dynamic_slice(jax.random.normal(k_L, (n, n)),
-                                  (r0, c0), (tn, tm))
+    noise = reorder._normal_tile(k_L, n, n, r0, tn, c0, tm)
     return diag + 1e-3 * jnp.where(rows > cols, noise, 0.0)
 
 
@@ -697,7 +805,7 @@ def _soft_perm_tiles_2d(y, keys, cfg: PFMConfig, node_mask, grid, axes,
 def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
                    node_mask, keys, batch_weight, *, cfg: PFMConfig, opt,
                    grid, axes, sinkhorn_mode: str = "exact",
-                   comm_mode: str = "gather"):
+                   comm_mode: str = "gather", carry: str = "dense"):
     """shard_map body of the 2-D model-parallel bucketed trainer.
 
     A_tile: (B, tn, tm) — this device's tile of the (B, n, n) bucket
@@ -712,13 +820,30 @@ def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
     path (full-shape transients, DESIGN.md §10); comm_mode="summa"
     keeps every loop-body transient at panel size or below via the
     SUMMA tile algebra above (per-backend atol contract, DESIGN.md
-    §11)."""
+    §11).
+
+    carry="bcsr" (summa only) stores the L/Γ/M loop state as
+    census-packed BCSR-ELL slot arrays and runs the left-sparse SUMMA
+    ring for the loop's contractions (DESIGN.md §12); P drops out of
+    the carry. When the resolved slot budget covers every block
+    (BcsrSpec.full — small tiles, or bcsr_slots >= nbc) the loop runs
+    the DENSE summa body verbatim (pack→scatter is the identity there),
+    so full-occupancy bcsr output is bitwise the dense-carry output;
+    either way the metrics gain a "bcsr_occupancy" (n_admm, 3)
+    trajectory [occupied_frac, captured_mass_frac, budget_frac]."""
     from repro.distributed import constrain as tc
     levels = list(levels_tuple)
     row_axis, col_axis = axes
     B, tn, tm = A_tile.shape
     n = tn * grid[0]
     summa = comm_mode == "summa"
+    track_occ = carry == "bcsr"
+    spec = None
+    if track_occ:
+        from repro.core import bcsr as bx
+        spec = bx.resolve_spec(tn, tm, cfg.bcsr_block, cfg.bcsr_slots)
+    use_bcsr = track_occ and not spec.full
+    nmesh = grid[0] * grid[1]
 
     ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
     k_init, k_L, k_loop = ks[:, 0], ks[:, 1], ks[:, 2]
@@ -747,6 +872,114 @@ def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
 
     grad_L = jax.grad(smooth_terms, argnums=0)
     smooth_tile = _make_smooth_tile(cfg, grid, axes) if summa else None
+    smooth_tile_b = (_make_smooth_tile_bcsr(cfg, grid, axes, spec)
+                     if use_bcsr else None)
+
+    if use_bcsr:
+        # ---------------- BCSR slot-carry loop (DESIGN.md §12) --------
+        # L/Γ/M live in the fori_loop carry as (values, col_ids) slot
+        # pairs; P is dead in the summa body (recomputed from θ each
+        # iteration before its only read) and drops out entirely. Every
+        # contraction whose LEFT operand is one of the carried tiles
+        # runs the block-sparse SUMMA ring, skipping unoccupied blocks.
+        K = max(1, cfg.bcsr_repack_every)
+
+        def _prox_dense(op):
+            # repack iteration: dense prox (support may move), then a
+            # fresh census re-ranks the budget. Collective-free — the
+            # psum of the stats happens outside the cond.
+            L_t_, gL_t_, Lv_, Lc_, t_ = op
+            if cfg.use_kernels:
+                Ld = kops.prox_tril(L_t_, gL_t_, t_, t_, row_offset=r0,
+                                    col_offset=c0)
+            else:
+                Ld = kref.prox_tril_ref(L_t_, gL_t_, t_, t_, r0, c0)
+            v, c = bx.pack_tile(Ld, spec)
+            return v, c, bx.census_stats(Ld, spec, cfg.bcsr_thresh)
+
+        def _prox_frozen(op):
+            # frozen-schedule iteration: prox touches ONLY the occupied
+            # slots (support held fixed at the last census).
+            L_t_, gL_t_, Lv_, Lc_, t_ = op
+            gv_ = bx.gather_tile(gL_t_, Lc_, spec)
+            if cfg.use_kernels:
+                v = kops.prox_tril_blocks(Lv_, gv_, Lc_, t_, t_,
+                                          row_offset=r0, col_offset=c0)
+            else:
+                v = kref.prox_tril_blocks_ref(Lv_, gv_, Lc_, t_, t_,
+                                              r0, c0)
+            return v, Lc_, bx.census_stats_slots(v, spec,
+                                                 cfg.bcsr_thresh)
+
+        def body_bcsr(k, carry_b):
+            Lv, Lc, Gv, Gc, Mv, Mc, occ, params, opt_state = carry_b
+            kk = jax.vmap(lambda c: jax.random.fold_in(c, k))(k_loop)
+            L_t = bx.scatter_tile(Lv, Lc, spec)
+            G_t = bx.scatter_tile(Gv, Gc, spec)
+            M_t = bx.scatter_tile(Mv, Mc, spec)
+
+            # ---- L-update: stripe-VJP grad with left-sparse rings
+            gL_t = jax.grad(
+                lambda l: smooth_tile_b(l, G_t, M_t))(L_t)
+            t = _lipschitz_step_tile(L_t, A_tile, n, cfg, axes)
+            op = (L_t, gL_t, Lv, Lc, t)
+            if K == 1:
+                Lv, Lc, stats = _prox_dense(op)
+            else:
+                Lv, Lc, stats = jax.lax.cond(
+                    jnp.equal(jnp.mod(k, K), 0), _prox_dense,
+                    _prox_frozen, op)
+            stats = tc.psum_scope(stats, row_axis, col_axis) / nmesh
+            occ = jax.lax.dynamic_update_slice(occ, stats[None], (k, 0))
+            L_t = bx.scatter_tile(Lv, Lc, spec)
+            llt_t = _llt_tile_summa_bcsr(L_t, Lv, Lc, grid, axes)
+
+            # ---- theta-update (identical structure to the dense body)
+            def theta_loss_2d(p_):
+                y = _predict_scores_batch(p_, cfg, levels, x_g)
+                Pt = _soft_perm_tiles_2d(y, kk, cfg, node_mask, grid,
+                                         axes, sinkhorn_mode)
+                Mt = _reordered_2d_summa_bcsr(Pt, A_tile, cfg, grid,
+                                              axes, spec)
+                R = Mt - llt_t
+                per_b = jnp.sum(G_t * R, axis=(-2, -1)) \
+                    + 0.5 * cfg.rho * jnp.sum(R * R, axis=(-2, -1))
+                if batch_weight is not None:
+                    per_b = jnp.where(batch_weight > 0, per_b, 0.0)
+                return jnp.sum(per_b)
+
+            gT = jax.grad(theta_loss_2d)(params)
+            gT = jax.lax.psum(jax.lax.psum(gT, row_axis), col_axis)
+            updates, opt_state = opt.update(gT, opt_state, params)
+            params = apply_updates(params, updates)
+
+            # ---- recompute M and the dual with the stepped params; P
+            # is a transient here, never carried
+            y = _predict_scores_batch(params, cfg, levels, x_g)
+            kk1 = jax.vmap(lambda c: jax.random.fold_in(c, 1))(kk)
+            P_t = _soft_perm_tiles_2d(y, kk1, cfg, node_mask, grid,
+                                      axes, sinkhorn_mode)
+            M_new = _reordered_2d_summa_bcsr(P_t, A_tile, cfg, grid,
+                                             axes, spec)
+            G_new = G_t + cfg.rho * (M_new - llt_t)
+            Gv, Gc = bx.pack_tile(G_new, spec)
+            Mv, Mc = bx.pack_tile(M_new, spec)
+            return (Lv, Lc, Gv, Gc, Mv, Mc, occ, params, opt_state)
+
+        Lv0, Lc0 = bx.pack_tile(L0_tile, spec)
+        Gv0, Gc0 = bx.pack_tile(G0_tile, spec)
+        Mv0, Mc0 = bx.pack_tile(M0_tile, spec)
+        occ0 = jnp.zeros((cfg.n_admm, 3), jnp.float32)
+        Lv, Lc, Gv, Gc, Mv, Mc, occ, params, opt_state = \
+            jax.lax.fori_loop(0, cfg.n_admm, body_bcsr,
+                              (Lv0, Lc0, Gv0, Gc0, Mv0, Mc0, occ0,
+                               params, opt_state))
+        L_t = bx.scatter_tile(Lv, Lc, spec)
+        G_t = bx.scatter_tile(Gv, Gc, spec)
+        M_t = bx.scatter_tile(Mv, Mc, spec)
+        metrics = _batch_metrics_tile(L_t, G_t, M_t, cfg, grid, axes)
+        metrics["bcsr_occupancy"] = occ
+        return params, opt_state, metrics
 
     def body(k, carry):
         L_t, G_t, P_t, M_t, params, opt_state = carry
@@ -813,6 +1046,28 @@ def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
         G_t = G_t + cfg.rho * (M_t - llt_t)
         return (L_t, G_t, P_t, M_t, params, opt_state)
 
+    if track_occ:
+        # spec.full dense fallback of carry="bcsr": run the dense summa
+        # body VERBATIM (this is what makes full-occupancy bcsr bitwise
+        # the dense carry), only wrapping it to record the occupancy
+        # trajectory the bcsr loop would have reported.
+        def body_occ(k, c2):
+            occ, inner = c2
+            inner = body(k, inner)
+            stats = bx.census_stats(inner[0], spec, cfg.bcsr_thresh)
+            stats = tc.psum_scope(stats, row_axis, col_axis) / nmesh
+            occ = jax.lax.dynamic_update_slice(occ, stats[None], (k, 0))
+            return occ, inner
+
+        occ0 = jnp.zeros((cfg.n_admm, 3), jnp.float32)
+        occ, (L_t, G_t, P_t, M_t, params, opt_state) = jax.lax.fori_loop(
+            0, cfg.n_admm, body_occ,
+            (occ0, (L0_tile, G0_tile, P0_tile, M0_tile, params,
+                    opt_state)))
+        metrics = _batch_metrics_tile(L_t, G_t, M_t, cfg, grid, axes)
+        metrics["bcsr_occupancy"] = occ
+        return params, opt_state, metrics
+
     L_t, G_t, P_t, M_t, params, opt_state = jax.lax.fori_loop(
         0, cfg.n_admm, body,
         (L0_tile, G0_tile, P0_tile, M0_tile, params, opt_state))
@@ -826,36 +1081,48 @@ def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
     return params, opt_state, _batch_metrics(L, G, M, cfg)
 
 
-def _resolve_2d_modes(comm_mode: str, sinkhorn_mode: str | None):
+def _resolve_2d_modes(comm_mode: str, sinkhorn_mode: str | None,
+                      carry: str = "dense"):
     """comm_mode selects the 2-D trainer's data-movement strategy;
     sinkhorn_mode=None resolves to the natural Sinkhorn for that
     strategy ("tiled" under summa — nothing (n, n)-shaped anywhere —
-    "exact" under gather, preserving the bitwise pin)."""
+    "exact" under gather, preserving the bitwise pin). carry selects
+    the ADMM loop-state representation: "dense" tiles, or "bcsr"
+    slot arrays (summa only — the gather path materializes full shapes
+    anyway, so a sparse carry there saves nothing)."""
     if comm_mode not in ("gather", "summa"):
         raise ValueError(f"unknown comm_mode {comm_mode!r} "
                          "(expected 'gather' or 'summa')")
+    if carry not in ("dense", "bcsr"):
+        raise ValueError(f"unknown carry {carry!r} "
+                         "(expected 'dense' or 'bcsr')")
+    if carry == "bcsr" and comm_mode != "summa":
+        raise ValueError("carry='bcsr' requires comm_mode='summa' — "
+                         "the gather path gathers full shapes every "
+                         "iteration, so a block-sparse carry would not "
+                         "reduce its footprint")
     if sinkhorn_mode is None:
         sinkhorn_mode = "tiled" if comm_mode == "summa" else "exact"
-    return comm_mode, sinkhorn_mode
+    return comm_mode, sinkhorn_mode, carry
 
 
 @functools.lru_cache(maxsize=16)
 def train_2d_fn(cfg: PFMConfig, opt, mesh, axes=("row", "col"),
                 sinkhorn_mode: str | None = None,
-                comm_mode: str = "gather"):
+                comm_mode: str = "gather", carry: str = "dense"):
     """The shard_map'd (unjitted) 2-D trainer — the jit / .lower()
     target for live training and the train_8k dry-run. Trace under
     `kops.mesh_scope(mesh)` so kernel wrappers lower to their
     shard-friendly XLA forms inside the region."""
     from repro.distributed.sharding import (get_shard_map,
                                             pfm_train_specs_2d)
-    comm_mode, sinkhorn_mode = _resolve_2d_modes(comm_mode,
-                                                 sinkhorn_mode)
+    comm_mode, sinkhorn_mode, carry = _resolve_2d_modes(
+        comm_mode, sinkhorn_mode, carry)
     in_specs, out_specs = pfm_train_specs_2d(axes)
     grid = (mesh.shape[axes[0]], mesh.shape[axes[1]])
     fn = functools.partial(_admm_train_2d, cfg=cfg, opt=opt, grid=grid,
                            axes=tuple(axes), sinkhorn_mode=sinkhorn_mode,
-                           comm_mode=comm_mode)
+                           comm_mode=comm_mode, carry=carry)
     # check_rep=False: replication of the P() outputs is by construction
     # (identical psum'd updates on identical replicated state), but the
     # checker cannot see through fori_loop carries.
@@ -865,9 +1132,9 @@ def train_2d_fn(cfg: PFMConfig, opt, mesh, axes=("row", "col"),
 
 @functools.lru_cache(maxsize=16)
 def _trainer_2d(cfg: PFMConfig, opt, mesh, axes, sinkhorn_mode,
-                comm_mode):
+                comm_mode, carry):
     jitted = jax.jit(train_2d_fn(cfg, opt, mesh, axes, sinkhorn_mode,
-                                 comm_mode))
+                                 comm_mode, carry))
 
     def call(params, opt_state, A, levels_tuple, x_g, node_mask, keys,
              batch_weight):
@@ -880,7 +1147,7 @@ def _trainer_2d(cfg: PFMConfig, opt, mesh, axes, sinkhorn_mode,
 def admm_train_2d(params, opt_state, A, levels_tuple, x_g, node_mask,
                   keys, batch_weight, *, cfg: PFMConfig, opt, mesh,
                   axes=("row", "col"), sinkhorn_mode: str | None = None,
-                  comm_mode: str = "gather"):
+                  comm_mode: str = "gather", carry: str = "dense"):
     """2-D model-parallel bucketed ADMM over a (row, col) mesh.
 
     Each (n, n) of the bucket's L/Γ/P/M state is sharded over BOTH mesh
@@ -903,13 +1170,23 @@ def admm_train_2d(params, opt_state, A, levels_tuple, x_g, node_mask,
     this comm mode), tiled warm start and metrics. Per-device memory is
     O(n²/RC) + panels; parity vs the gather path is a per-backend atol
     contract (the psums reassociate f32 sums — DESIGN.md §11).
+
+    carry="bcsr" (summa only): the L/Γ/M loop state is carried as
+    census-packed BCSR-ELL slot arrays with a static per-block-row
+    budget (cfg.bcsr_slots; 0 = auto nbc//8) and the loop contractions
+    run a left-sparse SUMMA ring skipping unoccupied blocks; every
+    cfg.bcsr_repack_every iterations a masked block-norm census repacks
+    the budget on device (DESIGN.md §12). Metrics gain a
+    "bcsr_occupancy" (n_admm, 3) trajectory. When the resolved budget
+    covers every block the trainer runs the dense summa body verbatim
+    — full-occupancy bcsr output is bitwise the dense-carry output.
     """
     # resolve BEFORE the lru_cache lookup so sinkhorn_mode=None and its
     # resolved spelling share one cache entry (and one compiled program)
-    comm_mode, sinkhorn_mode = _resolve_2d_modes(comm_mode,
-                                                 sinkhorn_mode)
+    comm_mode, sinkhorn_mode, carry = _resolve_2d_modes(
+        comm_mode, sinkhorn_mode, carry)
     return _trainer_2d(cfg, opt, mesh, tuple(axes), sinkhorn_mode,
-                       comm_mode)(
+                       comm_mode, carry)(
         params, opt_state, A, levels_tuple, x_g, node_mask, keys,
         batch_weight)
 

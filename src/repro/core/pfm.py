@@ -193,7 +193,8 @@ class PFM:
     # ------------------------------------------------------------ train
     def fit(self, matrices: Sequence, epochs: int = 1, verbose=False, *,
             batched: bool = True, max_batch: int = 32, mesh=None,
-            mesh2d=None, comm_mode: str = "gather"):
+            mesh2d=None, comm_mode: str = "gather",
+            carry: str = "dense"):
         """Algorithm 1: outer epochs over the training set, inner ADMM
         per matrix. `matrices` may be scipy matrices or (name, A) pairs.
 
@@ -228,7 +229,10 @@ class PFM:
         strategy: "gather" (default — full-shape transients, bitwise
         lr=0 parity) or "summa" (every loop transient at tile/panel
         size, per-backend atol parity — the production mode for n
-        beyond a device's memory, DESIGN.md §11)."""
+        beyond a device's memory, DESIGN.md §11). carry (2-D summa
+        only) selects the ADMM loop-state representation: "dense"
+        tiles, or "bcsr" block-sparse slot arrays with on-device
+        densify-on-fill-in repacking (DESIGN.md §12)."""
         prepped = self._prep_items(matrices)  # PreparedMatrix pass through
 
         if mesh is not None and mesh2d is not None:
@@ -239,7 +243,8 @@ class PFM:
         if mesh2d is not None:
             return self._fit_2d(prepped, mesh2d, epochs=epochs,
                                 max_batch=max_batch, key=key,
-                                verbose=verbose, comm_mode=comm_mode)
+                                verbose=verbose, comm_mode=comm_mode,
+                                carry=carry)
         if mesh is not None:
             batched = True  # the sharded trainer IS the batched trainer
         if not batched:
@@ -325,7 +330,8 @@ class PFM:
         return self.history
 
     def _fit_2d(self, prepped, mesh2d, *, epochs, max_batch, key,
-                verbose, comm_mode: str = "gather"):
+                verbose, comm_mode: str = "gather",
+                carry: str = "dense"):
         """2-D model-parallel epochs (DESIGN.md §10): each bucket's
         dense A stack is tiled over the mesh's two axes once (epochs
         reuse the placed arrays), per-matrix keys are identical to the
@@ -369,12 +375,20 @@ class PFM:
                     self.params, self.opt_state, tree["A"],
                     tree["levels"], tree["x_g"], tree["node_mask"],
                     keys, tree["weight"], cfg=self.cfg, opt=self.opt,
-                    mesh=mesh2d, axes=axes, comm_mode=comm_mode)
+                    mesh=mesh2d, axes=axes, comm_mode=comm_mode,
+                    carry=carry)
                 metrics = {k: np.asarray(v) for k, v in metrics.items()}
+                # (n_admm, 3) trajectory, batch-aggregated — not a
+                # per-matrix column; record the final census per row
+                occ = metrics.pop("bcsr_occupancy", None)
                 jax.block_until_ready(self.params)
                 wall = time.perf_counter() - t0
                 for bi, name in enumerate(bucket.names):
                     rec = {k: float(v[bi]) for k, v in metrics.items()}
+                    if occ is not None and occ.size:
+                        rec.update(bcsr_occupied=float(occ[-1, 0]),
+                                   bcsr_captured=float(occ[-1, 1]),
+                                   bcsr_budget=float(occ[-1, 2]))
                     rec.update(epoch=epoch, matrix=name,
                                wall_s=wall / bucket.size,
                                bucket_size=bucket.size)

@@ -178,6 +178,29 @@ def _counter_tile_ok() -> bool:
     return impl == "threefry2x32"
 
 
+def _tile_bits(key, threefry_2x32, n: int, m: int, r0, tn: int, c0,
+               tm: int):
+    """The tile's raw uint32 random bits of a full (n, m) f32 draw,
+    generated directly from the tile elements' flat counters.
+
+    uniform/normal's random_bits calls threefry_2x32(key, iota(size)),
+    which splits the counters in half and maps pair (i, half+i) to
+    outputs (out[i], out[half+i]) — so flat position p is lane p//half
+    of counter pair p%half."""
+    size = n * m
+    assert size % 2 == 0, (n, m)
+    half = size // 2
+    rows = r0 + jnp.arange(tn)
+    cols = c0 + jnp.arange(tm)
+    p = (rows[:, None] * m + cols[None, :]).reshape(-1)
+    i = (p % half).astype(jnp.uint32)
+    lane = p // half
+    cnt = jnp.concatenate([i, i + jnp.uint32(half)])
+    bits2 = threefry_2x32(key, cnt)
+    k2 = tn * tm
+    return jnp.where(lane == 0, bits2[:k2], bits2[k2:])
+
+
 def _uniform_tile(key, n: int, m: int, r0, tn: int, c0, tm: int):
     """Exactly `jax.random.uniform(key, (n, m))[r0:r0+tn, c0:c0+tm]`,
     without materializing the full draw: threefry is counter-based, so
@@ -192,27 +215,45 @@ def _uniform_tile(key, n: int, m: int, r0, tn: int, c0, tm: int):
         from jax._src.prng import threefry_2x32
     except ImportError:  # pragma: no cover - jax internals moved
         return _uniform_tile_fallback(key, n, m, r0, c0, tn, tm)
-    size = n * m
-    assert size % 2 == 0, (n, m)
-    half = size // 2
-    rows = r0 + jnp.arange(tn)
-    cols = c0 + jnp.arange(tm)
-    p = (rows[:, None] * m + cols[None, :]).reshape(-1)
-    # uniform's random_bits calls threefry_2x32(key, iota(size)), which
-    # splits the counters in half and maps pair (i, half+i) to outputs
-    # (out[i], out[half+i]) — so flat position p is lane p//half of
-    # counter pair p%half
-    i = (p % half).astype(jnp.uint32)
-    lane = p // half
-    cnt = jnp.concatenate([i, i + jnp.uint32(half)])
-    bits2 = threefry_2x32(key, cnt)
-    k2 = tn * tm
-    bits = jnp.where(lane == 0, bits2[:k2], bits2[k2:])
+    bits = _tile_bits(key, threefry_2x32, n, m, r0, tn, c0, tm)
     # float conversion mirrors jax's _uniform for f32 (9-bit shift into
     # the mantissa, bitcast, shift to [0, 1))
     fb = (bits >> jnp.uint32(9)) | jnp.uint32(0x3f800000)
     u = jax.lax.bitcast_convert_type(fb, jnp.float32) - 1.0
     return jax.lax.max(0.0, u).reshape(tn, tm)
+
+
+def _normal_tile_fallback(key, n, m, r0, c0, tn, tm):
+    """Draw-and-slice: materializes the full (n, m) normal draw but
+    matches the reference path's noise under ANY PRNG configuration."""
+    x = jax.random.normal(key, (n, m))
+    return jax.lax.dynamic_slice(x, (r0, c0), (tn, tm))
+
+
+def _normal_tile(key, n: int, m: int, r0, tn: int, c0, tm: int):
+    """Exactly `jax.random.normal(key, (n, m))[r0:r0+tn, c0:c0+tm]`,
+    without materializing the full draw — the normal-distribution
+    sibling of `_uniform_tile`, used by the 2-D trainer's warm start so
+    comm_mode="summa" carries NO full-shape transient at all, init
+    included. Mirrors jax's `_normal_real` for f32 op for op: uniform
+    bits mapped to (lo, 1) with lo = nextafter(-1, 0), then
+    sqrt(2) * erf_inv. Same fallback rules as `_uniform_tile`."""
+    if not _counter_tile_ok():
+        return _normal_tile_fallback(key, n, m, r0, c0, tn, tm)
+    try:
+        from jax._src.prng import threefry_2x32
+    except ImportError:  # pragma: no cover - jax internals moved
+        return _normal_tile_fallback(key, n, m, r0, c0, tn, tm)
+    import numpy as np
+    bits = _tile_bits(key, threefry_2x32, n, m, r0, tn, c0, tm)
+    fb = (bits >> jnp.uint32(9)) | jnp.uint32(0x3f800000)
+    f = jax.lax.bitcast_convert_type(fb, jnp.float32) - 1.0
+    lo = np.nextafter(np.float32(-1.0), np.float32(0.0),
+                      dtype=np.float32)
+    u = jax.lax.max(lo, f * (np.float32(1.0) - lo) + lo)
+    x = jax.lax.mul(np.array(np.sqrt(2), np.float32),
+                    jax.lax.erf_inv(u))
+    return x.reshape(tn, tm)
 
 
 def soft_permutation_batch_2d(scores, keys, *, grid, row_axis: str,

@@ -221,13 +221,14 @@ def col_chunk(x_tile, grid, row_axis: str, col_axis: str, start,
     return jax.lax.psum(contrib, col_axis)
 
 
-def transpose_tile_panels(x_tile, grid, row_axis: str, col_axis: str):
-    """Local tile of the global transpose WITHOUT a full gather (the
-    communication-minimal replacement for `transpose_tile`): the
-    (r0:r0+tn, c0:c0+tm) tile of X^T is X[c0:c0+tm, r0:r0+tn]^T — a
-    `row_chunk` of X column-sliced and transposed locally. Peak
-    transient is panel-sized; element values are identical to
-    `transpose_tile` (pure data movement)."""
+def transpose_tile_panels_psum(x_tile, grid, row_axis: str,
+                               col_axis: str):
+    """Masked-psum form of the panel transpose (the pre-ppermute
+    implementation, kept as the test oracle and the non-square-mesh
+    fallback): the (r0:r0+tn, c0:c0+tm) tile of X^T is
+    X[c0:c0+tm, r0:r0+tn]^T — a `row_chunk` of X column-sliced and
+    transposed locally. Peak transient is panel-sized; element values
+    are identical to `transpose_tile` (pure data movement)."""
     R, C = grid
     tn, tm = x_tile.shape[-2:]
     r0 = jax.lax.axis_index(row_axis) * tn
@@ -235,6 +236,28 @@ def transpose_tile_panels(x_tile, grid, row_axis: str, col_axis: str):
     ch = row_chunk(x_tile, grid, row_axis, col_axis, c0, tm)
     sl = jax.lax.dynamic_slice_in_dim(ch, r0, tn, axis=ch.ndim - 1)
     return jnp.swapaxes(sl, -1, -2)
+
+
+def transpose_tile_panels(x_tile, grid, row_axis: str, col_axis: str):
+    """Local tile of the global transpose. On a square mesh (R == C)
+    this is ONE pairwise ppermute over the flattened (row, col) device
+    grid: the (r, c) tile of X^T is X_{c,r}^T, so every device sends its
+    locally-transposed tile straight to its mirror (c, r) — no gather,
+    no psum tree, per-device traffic exactly one tile (the masked-psum
+    form moves a full panel per device and reduces R-way). The perm is
+    an involution (transpose pairs swap, diagonal devices self-send), so
+    it is well-defined regardless of how the runtime linearizes the
+    tuple axis. Pure data movement — bitwise-identical values to
+    `transpose_tile_panels_psum`, which remains the oracle in tests and
+    the fallback on non-square meshes (where a tile of X^T straddles
+    device boundaries of X and no per-device pairing exists)."""
+    R, C = grid
+    if R != C:
+        return transpose_tile_panels_psum(x_tile, grid, row_axis,
+                                          col_axis)
+    perm = [(i * C + j, j * R + i) for i in range(R) for j in range(C)]
+    return jax.lax.ppermute(jnp.swapaxes(x_tile, -1, -2),
+                            (row_axis, col_axis), perm)
 
 
 def summa_matmul(a_tile, b_colpanel, grid, axes, mm=None):
@@ -278,4 +301,56 @@ def summa_matmul(a_tile, b_colpanel, grid, axes, mm=None):
     acc0 = jnp.zeros(a_tile.shape[:-2] + (tn, b_colpanel.shape[-1]),
                      jnp.float32)
     a_rot, acc = jax.lax.fori_loop(0, C - 1, step, (a_tile, acc0))
+    return partial(a_rot, C - 1, acc)
+
+
+def summa_matmul_bcsr(a_vals, a_cids, b_colpanel, grid, axes,
+                      bsmm_fn=None):
+    """Tile of C = A @ B by the same ring-pipelined SUMMA as
+    `summa_matmul`, with A's tiles carried in BCSR-ELL slot form
+    (DESIGN.md §12): a_vals (B, nbr, S, bs, bs), a_cids (B, nbr, S)
+    int32 — this shard's census-packed tile of A — and b_colpanel
+    (B, n, tmB) the dense full-height column panel of B.
+
+    The ring is unchanged (same perm, same k-chunk schedule, C-1 hops);
+    what rotates is the (values, col_ids) PAIR, and the local multiply
+    is the block-sparse contraction `bsmm_fn` (kernels/ops.bsmm unless
+    overridden) instead of a dense matmul. This works because local
+    col_ids are ring-invariant: after s hops device c holds the tile
+    from column rem(c+s, C), whose local block-col j addresses row
+    j*bs of exactly the b_chunk sliced at k = rem(c+s, C) — the same
+    indices are valid at every ring position, so no re-indexing travels
+    with the tiles. Per-step traffic is the packed tile
+    (S/nbc of the dense tile) plus the int32 col_ids.
+
+    Accumulation is f32 from a zero accumulator, matching
+    `summa_matmul`'s atol contract."""
+    row_axis, col_axis = axes
+    _, C = grid
+    if bsmm_fn is None:
+        from repro.kernels import ops as kops
+        bsmm_fn = kops.bsmm
+    B, nbr, S, bs, _ = a_vals.shape
+    tn = nbr * bs
+    tmA = b_colpanel.shape[-2] // C
+    c = jax.lax.axis_index(col_axis)
+    perm = [(p, (p - 1) % C) for p in range(C)]
+
+    def partial(a_rot, s, acc):
+        vals, cids = a_rot
+        k = jax.lax.rem(c + s, C)
+        b_chunk = jax.lax.dynamic_slice_in_dim(
+            b_colpanel, k * tmA, tmA, axis=b_colpanel.ndim - 2)
+        return acc + bsmm_fn(vals, cids, b_chunk)
+
+    def step(s, carry):
+        a_rot, acc = carry
+        acc = partial(a_rot, s, acc)
+        a_rot = (jax.lax.ppermute(a_rot[0], col_axis, perm),
+                 jax.lax.ppermute(a_rot[1], col_axis, perm))
+        return a_rot, acc
+
+    acc0 = jnp.zeros((B, tn, b_colpanel.shape[-1]), jnp.float32)
+    a_rot, acc = jax.lax.fori_loop(0, C - 1, step,
+                                   ((a_vals, a_cids), acc0))
     return partial(a_rot, C - 1, acc)

@@ -27,12 +27,14 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.prox_tril import prox_tril_pallas
+from repro.kernels.prox_tril import prox_tril_blocks_pallas, prox_tril_pallas
 from repro.kernels.sinkhorn import SINKHORN_VMEM_LIMIT, sinkhorn_pallas
-from repro.kernels.spmm import bcsr_ell_pack, spmm_pallas  # noqa: F401
+from repro.kernels.spmm import (bcsr_ell_pack, bsmm_pallas,  # noqa: F401
+                                spmm_pallas)
 
 
 _DIST_MODE = False
@@ -303,3 +305,99 @@ def spmm(values, col_ids, x):
         # shard-friendly chunked contraction (DESIGN.md §10)
         return ref.spmm_chunked(values, col_ids, x)
     return spmm_pallas(values, col_ids, x, interpret=_interpret())
+
+
+# ----------------------------------------------------------------- bsmm
+def _int_zeros(a):
+    """Symbolic-zero cotangent for an integer-dtype primal (float0)."""
+    return np.zeros(a.shape, jax.dtypes.float0)
+
+
+@jax.custom_vjp
+def _bsmm_cvjp(values, col_ids, x):
+    return bsmm_pallas(values, col_ids, x, interpret=_interpret())
+
+
+def _bsmm_fwd(values, col_ids, x):
+    return _bsmm_cvjp(values, col_ids, x), (values, col_ids, x)
+
+
+def _bsmm_bwd(res, g):
+    values, col_ids, x = res
+    _, vjp = jax.vjp(lambda v, xx: ref.bsmm_ref(v, col_ids, xx),
+                     values, x)
+    dv, dx = vjp(g)
+    return dv, _int_zeros(col_ids), dx
+
+
+_bsmm_cvjp.defvjp(_bsmm_fwd, _bsmm_bwd)
+
+
+def bsmm(values, col_ids, x):
+    """Batched block-sparse (BCSR-ELL slot) x dense-panel matmul — the
+    local contraction of the block-sparse SUMMA ring (DESIGN.md §12).
+    values: (B, nbr, S, bs, bs); col_ids: (B, nbr, S) int32; x:
+    (B, nbc*bs, ncols) -> (B, nbr*bs, ncols). The kernel path carries a
+    custom VJP (backward = VJP of the oracle at the saved inputs —
+    exact, since ref == kernel math); the distributed path is the
+    block-row-scanned XLA form, which autodiffs natively."""
+    bs = values.shape[-1]
+    ncols = x.shape[-1]
+    if _force_ref() or bs % 128 != 0 or ncols % 128 != 0:
+        return ref.bsmm_ref(values, col_ids, x)
+    if dist_mode():
+        return ref.bsmm_chunked(values, col_ids, x)
+    return _bsmm_cvjp(values, col_ids, x)
+
+
+# ----------------------------------------------------- prox_tril_blocks
+@jax.custom_vjp
+def _prox_tril_blocks_cvjp(Lv, Gv, col_ids, eta, thresh, row_offset,
+                           col_offset):
+    return prox_tril_blocks_pallas(Lv, Gv, col_ids, eta, thresh,
+                                   row_offset, col_offset,
+                                   interpret=_interpret())
+
+
+def _prox_tril_blocks_fwd(Lv, Gv, col_ids, eta, thresh, row_offset,
+                          col_offset):
+    out = _prox_tril_blocks_cvjp(Lv, Gv, col_ids, eta, thresh,
+                                 row_offset, col_offset)
+    return out, (Lv, Gv, col_ids, eta, thresh, row_offset, col_offset)
+
+
+def _prox_tril_blocks_bwd(res, g):
+    Lv, Gv, col_ids, eta, thresh, ro, co = res
+    _, vjp = jax.vjp(
+        lambda l, gg, e, t: ref.prox_tril_blocks_ref(l, gg, col_ids, e,
+                                                     t, ro, co),
+        Lv, Gv, eta, thresh)
+    dL, dG, de, dt = vjp(g)
+    return (dL, dG, _int_zeros(col_ids), de, dt, jnp.zeros_like(ro),
+            jnp.zeros_like(co))
+
+
+_prox_tril_blocks_cvjp.defvjp(_prox_tril_blocks_fwd,
+                              _prox_tril_blocks_bwd)
+
+
+def prox_tril_blocks(Lv, Gv, col_ids, eta, thresh, row_offset=0,
+                     col_offset=0):
+    """`prox_tril` restricted to the occupied blocks of a BCSR-ELL tile
+    (DESIGN.md §12): the frozen-support L-update of the bcsr carry.
+    Lv/Gv: (B, nbr, S, bs, bs) slot values; col_ids: (B, nbr, S) int32;
+    eta/thresh scalar or (B,); offsets place the tile globally. Same
+    global tril predicate as the dense op, cost O(occupied blocks)."""
+    bs = Lv.shape[-1]
+    if _force_ref() or bs % 128 != 0:
+        return ref.prox_tril_blocks_ref(Lv, Gv, col_ids, eta, thresh,
+                                        row_offset, col_offset)
+    if dist_mode():
+        # elementwise per occupied block — the oracle IS the
+        # shard-friendly XLA form
+        return ref.prox_tril_blocks_ref(Lv, Gv, col_ids, eta, thresh,
+                                        row_offset, col_offset)
+    return _prox_tril_blocks_cvjp(
+        Lv, Gv, col_ids, eta, thresh,
+        jnp.asarray(row_offset, jnp.float32),
+        jnp.asarray(col_offset, jnp.float32))

@@ -88,3 +88,59 @@ def prox_tril_pallas(L: jnp.ndarray, G: jnp.ndarray, eta, thresh,
         interpret=interpret,
     )(scal, L, G)
     return out[0] if squeeze else out
+
+
+def _prox_tril_blocks_kernel(cids_ref, scal_ref, l_ref, g_ref, o_ref,
+                             *, bs: int):
+    b = pl.program_id(0)
+    r = pl.program_id(1)
+    s_id = pl.program_id(2)
+    eta = scal_ref[0, b]
+    thr = scal_ref[1, b]
+    r0 = scal_ref[2, b].astype(jnp.int32)
+    c0 = scal_ref[3, b].astype(jnp.int32)
+    x = l_ref[0, 0, 0].astype(jnp.float32) - \
+        eta * g_ref[0, 0, 0].astype(jnp.float32)
+    s = jnp.sign(x) * jnp.maximum(jnp.abs(x) - thr, 0.0)
+    rows = r0 + r * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = c0 + cids_ref[b, r, s_id] * bs + \
+        jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    o_ref[0, 0, 0] = jnp.where(rows >= cols, s, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prox_tril_blocks_pallas(Lv: jnp.ndarray, Gv: jnp.ndarray,
+                            col_ids: jnp.ndarray, eta, thresh,
+                            row_offset=0, col_offset=0,
+                            interpret: bool = False):
+    """`prox_tril_pallas` restricted to the occupied blocks of a
+    BCSR-ELL tile (DESIGN.md §12): Lv/Gv are (B, nbr, S, bs, bs) slot
+    values, col_ids the (B, nbr, S) int32 block columns. The grid walks
+    slots instead of dense tiles, so the fused prox costs O(occupied)
+    rather than O(tile); the tril predicate compares the same GLOBAL
+    coordinates as the dense kernel, with the block column dereferenced
+    from the scalar-prefetched col_ids."""
+    b, nbr, S, bs, _ = Lv.shape
+    scal = jnp.stack(
+        [jnp.broadcast_to(jnp.asarray(eta, jnp.float32), (b,)),
+         jnp.broadcast_to(jnp.asarray(thresh, jnp.float32), (b,)),
+         jnp.broadcast_to(jnp.asarray(row_offset, jnp.float32), (b,)),
+         jnp.broadcast_to(jnp.asarray(col_offset, jnp.float32), (b,))])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nbr, S),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, bs, bs),
+                         lambda k, r, s, cids, sc: (k, r, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, bs, bs),
+                         lambda k, r, s, cids, sc: (k, r, s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, bs, bs),
+                               lambda k, r, s, cids, sc: (k, r, s, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_prox_tril_blocks_kernel, bs=bs),
+        out_shape=jax.ShapeDtypeStruct(Lv.shape, Lv.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(col_ids, scal, Lv, Gv)

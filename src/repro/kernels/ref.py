@@ -124,6 +124,55 @@ def spmm_chunked(values: jnp.ndarray, col_ids: jnp.ndarray,
     return out.reshape(nbr * bs, ncols)
 
 
+def bsmm_ref(values: jnp.ndarray, col_ids: jnp.ndarray,
+             x: jnp.ndarray) -> jnp.ndarray:
+    """Batched block-sparse (BCSR-ELL slot) x dense-panel oracle.
+
+    values: (B, nbr, S, bs, bs); col_ids: (B, nbr, S) int32 (block
+    column per slot; padded slots hold zero values, so their col_id-0
+    gather contributes zeros); x: (B, nbc*bs, ncols). Returns
+    (B, nbr*bs, ncols). Per-matrix math is exactly `spmm_ref`."""
+    return jax.vmap(spmm_ref)(values, col_ids, x)
+
+
+def bsmm_chunked(values: jnp.ndarray, col_ids: jnp.ndarray,
+                 x: jnp.ndarray) -> jnp.ndarray:
+    """Shard-friendly batched block-sparse matmul: per matrix a
+    lax.scan over block-rows (one (S, bs, bs) slot panel resident per
+    step) — the XLA analogue of the Pallas kernel's (B, nbr, S) grid,
+    used in distributed lowering where a pallas_call cannot be
+    partitioned. Per-block-row math is identical to `bsmm_ref` (same
+    einsum), so results are bitwise equal on a given backend."""
+    return jax.vmap(spmm_chunked)(values, col_ids, x)
+
+
+def prox_tril_blocks_ref(Lv: jnp.ndarray, Gv: jnp.ndarray,
+                         col_ids: jnp.ndarray, eta, thresh,
+                         row_offset=0, col_offset=0) -> jnp.ndarray:
+    """`prox_tril_ref` restricted to the occupied blocks of a BCSR-ELL
+    tile: soft_threshold(Lv - eta*Gv, thresh) masked by the GLOBAL tril
+    predicate of each block's coordinates.
+
+    Lv, Gv: (B, nbr, S, bs, bs) slot values; col_ids: (B, nbr, S) int32
+    block columns; eta/thresh: scalar or per-matrix (B,);
+    row_offset/col_offset: global coordinates of the tile's (0, 0)
+    element (ints or traced scalars). Block (b, r, s) covers global rows
+    row_offset + r*bs + i and cols col_offset + col_ids[b,r,s]*bs + j,
+    so the mask is elementwise `row >= col` in global coordinates —
+    bitwise the same predicate `prox_tril_ref` applies to the scattered
+    dense tile."""
+    bs = Lv.shape[-1]
+    X = Lv - _bcast_scalar(eta, Lv.ndim) * Gv
+    S = jnp.sign(X) * jnp.maximum(jnp.abs(X) - _bcast_scalar(
+        thresh, Lv.ndim), 0.0)
+    rblock = jax.lax.broadcasted_iota(jnp.int32, S.shape, 1)
+    rows = row_offset + rblock * bs + jax.lax.broadcasted_iota(
+        jnp.int32, S.shape, S.ndim - 2)
+    cols = col_offset + col_ids[..., None, None] * bs + \
+        jax.lax.broadcasted_iota(jnp.int32, S.shape, S.ndim - 1)
+    return jnp.where(rows >= cols, S, 0.0).astype(S.dtype)
+
+
 def attention_chunked(q, k, v, *, causal: bool = True,
                       window: int | None = None,
                       sm_scale: float | None = None, block_q: int = 512):

@@ -124,17 +124,19 @@ def pfm_input_specs(shape_name: str, mesh):
 
 def make_pfm_train_2d_step(cfg: PFMConfig, opt, mesh,
                            axes=("data", "model"),
-                           comm_mode: str = "summa"):
+                           comm_mode: str = "summa",
+                           carry: str = "dense"):
     """The 2-D model-parallel trainer (DESIGN.md §10/§11) as a lowering
     target: the whole ADMM loop shard_map'd with every (n, n) of the
     dense state tiled over `axes`, θ replicated, θ-grads psum'd over
     both axes. Defaults to comm_mode="summa" (tile/panel transients
     only — the production mode this dry-run exists to size); pass
-    comm_mode="gather" to lower the bitwise-parity path instead. Trace
-    under kops.mesh_scope(mesh) so kernels lower to their chunked-XLA
-    forms."""
+    comm_mode="gather" to lower the bitwise-parity path instead, or
+    carry="bcsr" (summa only) to lower the block-sparse slot-carry loop
+    (DESIGN.md §12). Trace under kops.mesh_scope(mesh) so kernels lower
+    to their chunked-XLA forms."""
     return admm_mod.train_2d_fn(cfg, opt, mesh, tuple(axes),
-                                comm_mode=comm_mode)
+                                comm_mode=comm_mode, carry=carry)
 
 
 def make_pfm_train_batch_step(cfg: PFMConfig, opt, mesh,

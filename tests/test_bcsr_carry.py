@@ -1,0 +1,329 @@
+"""BCSR tile-carry battery (DESIGN.md §12).
+
+Pins, from the bottom of the stack up:
+
+  * the device-side census pack/scatter (core/bcsr.py): property-tested
+    roundtrip on tiles whose per-block-row support fits the slot budget
+    (via tests/_hyp_compat.py), bitwise identity at full budget, and the
+    occupancy census on known patterns (including the all-zero-tile
+    captured=1.0 convention);
+  * the host-side `bcsr_ell_pack` (kernels/spmm.py): property-tested
+    reconstruction against the densified scipy matrix — the pack must
+    come from the CSR coordinate lists alone, so ragged sizes, empty
+    block-rows and duplicate/explicit-zero entries all roundtrip;
+  * the block-sparse SUMMA ring (`summa_matmul_bcsr`) against the dense
+    `summa_matmul` oracle on square and non-square meshes, f32 and
+    bf16, with empty block-rows in the left operand (multidevice-marked
+    — skips on a single-device session);
+  * the trainer-level carry contract in a subprocess with 8 simulated
+    devices (always-runnable tier-1 pin): at lr=0 a FULL-occupancy
+    `carry="bcsr"` fit is bitwise-equal to the dense summa carry (the
+    spec.full dispatch runs the dense body verbatim), a partial-budget
+    fit stays finite and reports a sane occupancy census, and
+    carry="bcsr" under comm_mode="gather" is rejected.
+"""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from _hyp_compat import given, settings, st
+from repro.core import bcsr as bx
+
+_NDEV = len(jax.devices())
+
+
+def _NEEDS(n):
+    def deco(fn):
+        fn = pytest.mark.multidevice(fn)
+        return pytest.mark.skipif(
+            _NDEV < n,
+            reason=f"needs >= {n} simulated devices (XLA_FLAGS="
+                   f"--xla_force_host_platform_device_count=8 before "
+                   f"jax initializes)")(fn)
+    return deco
+
+
+# ------------------------------------------- device-side pack / scatter
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), nbr=st.integers(1, 4),
+       nbc=st.integers(1, 6))
+def test_pack_scatter_roundtrip_property(seed, nbr, nbc):
+    """If every block-row's support fits the slot budget, scatter∘pack
+    is the identity (bitwise) and the col_ids come out strictly
+    ascending over the occupied slots."""
+    bs, B = 8, 2
+    rng = np.random.default_rng(seed)
+    spec = bx.BcsrSpec(bs, max(1, (nbc + 1) // 2), nbr, nbc)
+    x = np.zeros((B, nbr * bs, nbc * bs), np.float32)
+    for b in range(B):
+        for r in range(nbr):
+            k = int(rng.integers(0, spec.slots + 1))
+            for c in rng.choice(nbc, size=k, replace=False):
+                blk = rng.standard_normal((bs, bs)).astype(np.float32)
+                blk[np.abs(blk) < 0.05] = 0.3  # no all-zero blocks
+                x[b, r * bs:(r + 1) * bs, c * bs:(c + 1) * bs] = blk
+    vals, cids = bx.pack_tile(jnp.asarray(x), spec)
+    np.testing.assert_array_equal(
+        np.asarray(bx.scatter_tile(vals, cids, spec)), x)
+    assert (np.diff(np.asarray(cids), axis=-1) > 0).all()
+
+
+def test_pack_full_budget_is_identity():
+    """S >= nbc (spec.full): the census selects 0..nbc-1 in order, so
+    pack/scatter roundtrip any dense tile bitwise — the property the
+    trainer's dense-fallback dispatch rests on."""
+    spec = bx.resolve_spec(32, 40, 8, 99)
+    assert spec.full and spec.slots == spec.nbc == 5
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 32, 40))
+    vals, cids = bx.pack_tile(x, spec)
+    assert (np.asarray(cids) == np.arange(5)).all()
+    np.testing.assert_array_equal(
+        np.asarray(bx.scatter_tile(vals, cids, spec)), np.asarray(x))
+    # gather at the packed support reproduces the packed values
+    np.testing.assert_array_equal(
+        np.asarray(bx.gather_tile(x, cids, spec)), np.asarray(vals))
+
+
+def test_resolve_spec_validation_and_auto_budget():
+    with pytest.raises(ValueError):
+        bx.resolve_spec(33, 40, 8, 1)       # bs does not divide tn
+    s = bx.resolve_spec(64, 64, 8, 0)        # auto: nbc//8 = 1
+    assert (s.nbr, s.nbc, s.slots) == (8, 8, 1) and not s.full
+    assert bx.resolve_spec(16, 16, 8, 7).slots == 2  # clamped to nbc
+
+
+def test_census_stats_known_patterns():
+    spec = bx.BcsrSpec(8, 1, 2, 4)
+    x = np.zeros((1, 16, 32), np.float32)
+    x[0, :8, :8] = 1.0        # block (0, 0)
+    x[0, 8:, 8:16] = 2.0      # block (1, 1)
+    s = np.asarray(bx.census_stats(jnp.asarray(x), spec, 0.0))
+    assert s[0] == pytest.approx(2 / 8)   # 2 of 8 blocks occupied
+    assert s[1] == pytest.approx(1.0)     # 1 block/row: S=1 captures all
+    assert s[2] == pytest.approx(0.25)    # budget 1/4
+    # all-zero tile is perfectly captured by ANY budget
+    z = np.asarray(bx.census_stats(jnp.zeros((1, 16, 32)), spec, 0.0))
+    assert z[0] == 0.0 and z[1] == 1.0
+    # frozen-schedule (slot-array) census: captured is 1.0 by
+    # construction, occupied is budget-scaled
+    vals = jnp.ones((1, 2, 1, 8, 8))
+    ss = np.asarray(bx.census_stats_slots(vals, spec, 0.0))
+    assert ss[0] == pytest.approx(0.25) and ss[1] == 1.0
+    ss0 = np.asarray(bx.census_stats_slots(jnp.zeros_like(vals),
+                                           spec, 0.0))
+    assert ss0[0] == 0.0
+
+
+# ------------------------------------------ host-side BCSR-ELL packing
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(5, 90))
+def test_bcsr_ell_pack_roundtrip_property(seed, n):
+    """bcsr_ell_pack densified == the scipy matrix densified (zero-pad
+    to the block grid), for ragged n, random sparsity — including
+    matrices with empty rows/block-rows."""
+    from repro.kernels.spmm import bcsr_ell_pack
+    bs = 16
+    rs = np.random.RandomState(seed % (2 ** 32))
+    A = sp.random(n, n, density=0.08, random_state=rs, format="csr",
+                  dtype=np.float64)
+    values, col_ids, nbc = bcsr_ell_pack(A, bs=bs)
+    values, col_ids = np.asarray(values), np.asarray(col_ids)
+    nbr, max_bpr = col_ids.shape
+    dense = np.zeros((nbr * bs, nbc * bs), np.float32)
+    ref = dense.copy()
+    ref[:n, :n] = A.toarray().astype(np.float32)
+    # padded slots carry zero values, so scattering every slot is safe
+    for r in range(nbr):
+        for j in range(max_bpr):
+            c = col_ids[r, j]
+            dense[r * bs:(r + 1) * bs, c * bs:(c + 1) * bs] += \
+                values[r, j]
+    np.testing.assert_array_equal(dense, ref)
+
+
+def test_bcsr_ell_pack_canonicalizes_duplicates_and_zeros():
+    """COO inputs with duplicate coordinates and explicit zeros must be
+    canonicalized before packing (sum_duplicates / eliminate_zeros)."""
+    from repro.kernels.spmm import bcsr_ell_pack
+    row = np.array([0, 0, 3, 5])
+    col = np.array([1, 1, 4, 2])
+    dat = np.array([2.0, 3.0, 0.0, 7.0])
+    A = sp.coo_matrix((dat, (row, col)), shape=(8, 8))
+    values, col_ids, nbc = bcsr_ell_pack(A, bs=4)
+    dense = np.zeros((8, 8), np.float32)
+    v, c = np.asarray(values), np.asarray(col_ids)
+    for r in range(c.shape[0]):
+        for j in range(c.shape[1]):
+            dense[r * 4:(r + 1) * 4, c[r, j] * 4:(c[r, j] + 1) * 4] += \
+                v[r, j]
+    np.testing.assert_array_equal(dense, np.asarray(A.todense(),
+                                                    dtype=np.float32))
+
+
+# --------------------------------------- block-sparse SUMMA vs oracle
+def _shmap(mesh, body, in_specs, out_specs):
+    from jax.sharding import PartitionSpec  # noqa: F401
+    from repro.distributed.sharding import get_shard_map
+    return get_shard_map()(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False)
+
+
+def _block_sparse(seed, B, n, bs, slots, grid, dtype, empty_rows=()):
+    """(B, n, n) whose (bs x bs) block support fits a per-TILE-block-row
+    budget of `slots` on the given (R, C) mesh grid (0..slots random
+    blocks per tile segment); block-rows in empty_rows are zeroed."""
+    R, C = grid
+    nb = n // bs
+    seg = nb // C                     # block-cols per column tile
+    rng = np.random.default_rng(seed)
+    mask = np.zeros((B, nb, nb), bool)
+    for b in range(B):
+        for r in range(nb):
+            if r in empty_rows:
+                continue
+            for c in range(C):
+                k = int(rng.integers(0, slots + 1))
+                cols = rng.choice(seg, size=k, replace=False)
+                mask[b, r, c * seg + cols] = True
+    x = rng.standard_normal((B, n, n)).astype(np.float32)
+    m = np.repeat(np.repeat(mask, bs, axis=1), bs, axis=2)
+    return jnp.asarray(x * m).astype(dtype)
+
+
+@_NEEDS(4)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_summa_bcsr_vs_dense_oracle_2x2(dtype, tol):
+    _summa_bcsr_oracle((2, 2), dtype, tol, slots=2)
+
+
+@_NEEDS(8)
+def test_summa_bcsr_vs_dense_oracle_nonsquare_4x2():
+    _summa_bcsr_oracle((4, 2), jnp.float32, 2e-5, slots=3)
+
+
+def _summa_bcsr_oracle(rc, dtype, tol, slots):
+    """pack_tile + summa_matmul_bcsr == dense summa_matmul == numpy,
+    when the left operand's support fits the per-tile budget — with
+    empty block-rows (their slots are all zero-padding) exercised."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import constrain as tc
+    R, C = rc
+    mesh = _mesh2d(R, C)
+    bs, B = 8, 2
+    n = 32 * max(R, C)
+    tn, tm = n // R, n // C
+    spec = bx.BcsrSpec(bs, slots, tn // bs, tm // bs)
+    assert not spec.full
+    # support capped at the budget per tile block-row by construction,
+    # plus empty global block-rows 0 and last
+    X = _block_sparse(0, B, n, bs, slots, rc, dtype,
+                      empty_rows=(0, n // bs - 1))
+    Y = jax.random.normal(jax.random.PRNGKey(1), (B, n, n)).astype(dtype)
+    t2 = P(None, "row", "col")
+
+    def body(x_t, y_t):
+        vals, cids = bx.pack_tile(x_t, spec)
+        y_col = tc.gather_cols(y_t, "row")
+        sparse = tc.summa_matmul_bcsr(vals, cids, y_col, (R, C),
+                                      ("row", "col"))
+        dense = tc.summa_matmul(x_t, y_col, (R, C), ("row", "col"))
+        # the budget must actually cover the support on EVERY tile
+        # (psum'd — a replicated out_spec would only report tile (0,0))
+        lost = jax.lax.psum(
+            jnp.sum(jnp.abs(x_t - bx.scatter_tile(vals, cids, spec))),
+            ("row", "col"))
+        return sparse, dense, lost
+
+    sparse, dense, lost = _shmap(mesh, body, (t2, t2),
+                                 (t2, t2, P()))(X, Y)
+    assert float(lost) == 0.0, "test setup: support exceeded the budget"
+    ref = np.asarray(X.astype(jnp.float32)) @ \
+        np.asarray(Y.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(sparse, dtype=np.float32),
+                               np.asarray(dense, dtype=np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(sparse, dtype=np.float32),
+                               ref, rtol=10 * tol, atol=10 * tol)
+
+
+def _mesh2d(r, c):
+    from repro.launch.mesh import make_mesh2d
+    return make_mesh2d(r, c)
+
+
+# ----------------------------------------- trainer-level carry contract
+@pytest.mark.tier1
+def test_bcsr_carry_subprocess_smoke():
+    """Always-runnable pin (fresh interpreter, 8 simulated devices):
+    full-occupancy carry="bcsr" is BITWISE the dense summa carry at
+    lr=0; a partial budget trains finite with a sane occupancy census;
+    bcsr+gather is rejected."""
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, {str(pathlib.Path("src").resolve())!r})
+        import jax, numpy as np
+        from repro.core.admm import PFMConfig
+        from repro.core.pfm import PFM
+        from repro.data import delaunay_like
+        from repro.launch.mesh import make_mesh2d
+
+        assert len(jax.devices()) == 8
+        mesh = make_mesh2d(2, 2)
+        mats = [(f"m{{i}}", delaunay_like(200 + 11 * i, "gradel",
+                                          seed=11 + i))
+                for i in range(2)]
+
+        # full occupancy == dense carry, bitwise, lr=0 (256-bucket,
+        # bs=64 -> nbc=2 <= slots)
+        cfg0 = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0,
+                         bcsr_block=64, bcsr_slots=8)
+        a = PFM(cfg0, seed=0, x_mode="random")
+        ha = a.fit(mats, mesh2d=mesh, comm_mode="summa",
+                   carry="dense")
+        b = PFM(cfg0, seed=0, x_mode="random")
+        hb = b.fit(mats, mesh2d=mesh, comm_mode="summa",
+                   carry="bcsr")
+        for x, y in zip(ha, hb):
+            assert x["matrix"] == y["matrix"]
+            for k in ("l1", "residual", "loss"):
+                assert x[k] == y[k], (x["matrix"], k, x[k], y[k])
+            assert y["bcsr_budget"] == 1.0 and y["bcsr_captured"] == 1.0
+        for pa, pb in zip(jax.tree_util.tree_leaves(a.params),
+                          jax.tree_util.tree_leaves(b.params)):
+            assert (np.asarray(pa) == np.asarray(pb)).all()
+
+        # partial budget: finite, census within bounds, repack cadence
+        cfg1 = PFMConfig(n_admm=3, n_sinkhorn=4, bcsr_block=64,
+                         bcsr_slots=1, bcsr_repack_every=2)
+        c = PFM(cfg1, seed=0, x_mode="random")
+        hc = c.fit(mats, mesh2d=mesh, comm_mode="summa", carry="bcsr")
+        for r in hc:
+            assert np.isfinite(r["loss"]), r
+            assert r["bcsr_budget"] == 0.5
+            assert 0.0 <= r["bcsr_occupied"] <= 1.0
+            assert 0.0 <= r["bcsr_captured"] <= 1.0
+
+        # bcsr under gather is a contract violation
+        try:
+            PFM(cfg1, seed=0).fit(mats, mesh2d=mesh,
+                                  comm_mode="gather", carry="bcsr")
+            raise AssertionError("bcsr+gather must raise")
+        except ValueError:
+            pass
+        print("BCSR_CARRY_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=900)
+    assert "BCSR_CARRY_OK" in res.stdout, res.stderr[-3000:]
