@@ -247,6 +247,62 @@ def fit_throughput_sharded(quick: bool = False):
     return [row]
 
 
+def ingest_throughput(quick: bool = False):
+    """Real-matrix ingest + prepared-hierarchy cache wall-clock
+    (DESIGN.md §13): Matrix Market parse throughput over the committed
+    fixture collection, then cold (build_hierarchy + .npz publish) vs
+    warm (.npz load) `HierarchyCache.get_or_build` over the same
+    matrices — the row that justifies shipping a cache at all."""
+    import tempfile
+
+    from repro.data.suitesparse import HierarchyCache, SuiteSparseSet
+
+    fixtures = (pathlib.Path(__file__).resolve().parents[1]
+                / "tests" / "fixtures" / "mtx")
+    sss = SuiteSparseSet(fixtures)
+    reps = 2 if quick else 5
+
+    t_read = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        mats = [sss.load(name) for name in sss.names]
+        t_read.append(time.perf_counter() - t0)
+    nnz_total = sum(A.nnz for A in mats)
+
+    with tempfile.TemporaryDirectory() as td:
+        cache = HierarchyCache(td)
+        t0 = time.perf_counter()
+        for A in mats:
+            cache.get_or_build(A)
+        t_cold = time.perf_counter() - t0
+        assert cache.stats() == {"hits": 0, "misses": len(mats)}
+        t_warm = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for A in mats:
+                cache.get_or_build(A)
+            t_warm.append(time.perf_counter() - t0)
+        assert cache.stats()["misses"] == len(mats)
+    row = {
+        "n_matrices": len(mats),
+        "nnz_total": int(nnz_total),
+        "read_mtx_s": min(t_read),
+        "read_mtx_nnz_per_s": float(nnz_total / min(t_read)),
+        "prepare_cold_s": t_cold,
+        "prepare_warm_s": min(t_warm),
+        "cache_speedup": t_cold / min(t_warm),
+    }
+    print(f"ingest: {len(mats)} matrices ({nnz_total} nnz) "
+          f"read={min(t_read) * 1e3:.1f}ms "
+          f"prepare cold={t_cold * 1e3:.1f}ms "
+          f"warm={min(t_warm) * 1e3:.1f}ms "
+          f"cache speedup={row['cache_speedup']:.1f}x")
+    OUT.mkdir(exist_ok=True)
+    (OUT / "ingest_throughput.json").write_text(
+        json.dumps([row], indent=2))
+    return [row]
+
+
 def run(pfm: PFM | None = None, quick: bool = False):
     cases = make_test_set()
     if quick:
@@ -277,6 +333,7 @@ def main(quick=False):
     tp = fit_throughput(quick=quick)
     tp_perm = permutation_throughput(quick=quick)
     tp_sharded = fit_throughput_sharded(quick=quick)
+    tp_ingest = ingest_throughput(quick=quick)
     rows = run(quick=quick)
     cats = [k for k in rows[0] if k not in ("method",)
             and not k.endswith("_ms")]
@@ -287,7 +344,8 @@ def main(quick=False):
             + f",{r['All_lu_ms']:.1f},{r['All_order_ms']:.1f}")
     return {"table2": rows, "fit_throughput": tp,
             "permutation_throughput": tp_perm,
-            "fit_throughput_sharded": tp_sharded}
+            "fit_throughput_sharded": tp_sharded,
+            "ingest_throughput": tp_ingest}
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ import numpy as np
 import scipy.sparse as sp
 import scipy.sparse.linalg as spla
 
-from repro.core.graph import symmetrize_pattern
+from repro.core.graph import canonicalize_csr, symmetrize_pattern
 
 
 def apply_perm(A: sp.spmatrix, perm: np.ndarray) -> sp.csr_matrix:
@@ -74,8 +74,13 @@ def lu_fillin_splu(A: sp.spmatrix, perm: np.ndarray | None = None):
     sentinel row — dict(failed=True, error=...) with the metric keys set
     to None — instead of propagating: a single structurally singular
     matrix must not crash a full Table-2 sweep (launch/eval_fillin skips
-    and records it)."""
-    A = sp.csr_matrix(A).astype(np.float64)
+    and records it).
+
+    The input is canonicalized first (duplicates summed, explicit
+    zeros dropped — graph.canonicalize_csr): `A.nnz` is the fill-in
+    denominator, and phantom stored zeros from a dirty `.mtx` would
+    silently deflate every ratio."""
+    A = canonicalize_csr(A).astype(np.float64)
     if perm is not None:
         A = apply_perm(A, perm)
     A = A.tocsc()

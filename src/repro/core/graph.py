@@ -171,6 +171,24 @@ def unflatten_levels(flat_i, flat_f, layout):
     return levels
 
 
+def canonicalize_csr(A: sp.spmatrix) -> sp.csr_matrix:
+    """THE ingest canonicalization choke point: duplicate COO entries
+    summed, explicitly stored zeros eliminated, indices sorted.
+
+    Real `.mtx` files routinely carry both defects; without this,
+    `A.nnz` — the denominator of every fill-in ratio and the baseline
+    term of `lu_fillin_splu` — counts phantom nonzeros, and
+    assembled-but-cancelled entries pollute `symmetrize_pattern`'s
+    graph. Every loader (data/suitesparse.read_mtx) and every metric
+    entry point (core/fillin) funnels through here."""
+    A = sp.coo_matrix(A)
+    A.sum_duplicates()
+    A.eliminate_zeros()
+    A = A.tocsr()
+    A.sort_indices()
+    return A
+
+
 def symmetrize_pattern(A: sp.spmatrix) -> sp.csr_matrix:
     A = sp.csr_matrix(A)
     S = (abs(A) + abs(A).T)

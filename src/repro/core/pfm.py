@@ -145,9 +145,14 @@ def _extract_perm(y_pad: np.ndarray, n: int) -> np.ndarray:
 
 class PFM:
     def __init__(self, cfg: PFMConfig | None = None, seed: int = 0,
-                 se_max_n: int = 600, x_mode: str = "se"):
+                 se_max_n: int = 600, x_mode: str = "se",
+                 hierarchy_cache=None):
         self.cfg = cfg or PFMConfig()
         self.seed = seed
+        # optional data/suitesparse.HierarchyCache: prepare() loads the
+        # coarsening hierarchy from the content-hash keyed on-disk
+        # cache instead of rebuilding it host-side (DESIGN.md §13)
+        self.hierarchy_cache = hierarchy_cache
         # beyond se_max_n the learned S_e is out of its training regime;
         # fall back to the exact Fiedler estimate (the quantity S_e
         # approximates) for the spectral embedding
@@ -166,7 +171,10 @@ class PFM:
     # ------------------------------------------------------------ prep
     def prepare(self, A: sp.spmatrix, name: str = "") -> PreparedMatrix:
         A = sp.csr_matrix(A)
-        gd = build_hierarchy(A, seed=self.seed)
+        if self.hierarchy_cache is not None:
+            gd = self.hierarchy_cache.get_or_build(A, seed=self.seed)
+        else:
+            gd = build_hierarchy(A, seed=self.seed)
         levels = gd.as_jnp()
         if self.x_mode == "random":
             key = jax.random.PRNGKey(self.seed)

@@ -7,3 +7,9 @@ from repro.data.matrices import (  # noqa: F401
     make_test_set,
 )
 from repro.data.tokens import TokenPipeline  # noqa: F401
+from repro.data.suitesparse import (  # noqa: F401
+    HierarchyCache,
+    SuiteSparseSet,
+    read_mtx,
+    write_mtx,
+)

@@ -67,38 +67,89 @@ def grid_3d(nx: int, ny: int | None = None, nz: int | None = None,
     return _spd_from_pattern(S, rng)
 
 
-def _domain_points(n: int, geometry: str, rng: np.random.Generator):
+def _geometry_mask(cand: np.ndarray, geometry: str) -> np.ndarray:
+    """Hard membership mask for the paper's geometries (GradeL removes
+    the upper-right quadrant; HoleK removes K disks) — separated from
+    the *density* rejection so the deterministic fallback below can
+    respect the domain shape without the probabilistic filter."""
+    keep = np.ones(len(cand), bool)
+    if geometry == "gradel":
+        keep &= ~((cand[:, 0] > 0.5) & (cand[:, 1] > 0.5))
+    elif geometry.startswith("hole"):
+        k = int(geometry[4:])
+        centers = np.stack([
+            0.5 + 0.3 * np.cos(2 * np.pi * np.arange(k) / k),
+            0.5 + 0.3 * np.sin(2 * np.pi * np.arange(k) / k)], axis=1)
+        for ctr in centers:
+            keep &= np.linalg.norm(cand - ctr, axis=1) > 0.08
+    return keep
+
+
+def _domain_points(n: int, geometry: str, rng: np.random.Generator,
+                   max_rounds: int = 32):
     """Sample points in the paper's geometries: GradeL (L-shaped with
-    graded density), Hole3/Hole6 (disk with 3/6 holes)."""
+    graded density), Hole3/Hole6 (disk with 3/6 holes).
+
+    The rejection loop is BOUNDED: an unlucky rng stream (or a
+    geometry whose density filter keeps almost nothing) previously
+    spun forever. After max_rounds the remainder is filled with a
+    deterministic jittered grid restricted to the hard geometry mask
+    — density grading is sacrificed, termination is not."""
     pts = []
-    while len(pts) < n:
+    for _ in range(max_rounds):
+        if len(pts) >= n:
+            break
         cand = rng.random((4 * n, 2))
+        cand = cand[_geometry_mask(cand, geometry)]
         if geometry == "gradel":
-            # L-shape: remove upper-right quadrant; grade density toward
-            # the re-entrant corner
-            keep = ~((cand[:, 0] > 0.5) & (cand[:, 1] > 0.5))
-            cand = cand[keep]
+            # grade density toward the re-entrant corner
             d = np.linalg.norm(cand - 0.5, axis=1)
             keep = rng.random(len(cand)) < np.clip(1.2 - d, 0.15, 1.0)
             cand = cand[keep]
-        elif geometry.startswith("hole"):
-            k = int(geometry[4:])
-            centers = np.stack([
-                0.5 + 0.3 * np.cos(2 * np.pi * np.arange(k) / k),
-                0.5 + 0.3 * np.sin(2 * np.pi * np.arange(k) / k)], axis=1)
-            keep = np.ones(len(cand), bool)
-            for ctr in centers:
-                keep &= np.linalg.norm(cand - ctr, axis=1) > 0.08
-            cand = cand[keep]
         pts.extend(cand.tolist())
+    if len(pts) < n:  # deterministic fallback: mask-respecting grid
+        side = int(np.ceil(np.sqrt(4 * n))) + 1
+        g = (np.arange(side) + 0.5) / side
+        gx, gy = np.meshgrid(g, g)
+        grid = np.stack([gx.ravel(), gy.ravel()], axis=1)
+        grid = grid + 1e-3 * np.sin(1.0 + 7.0 * grid[:, ::-1])  # de-tie
+        grid = grid[_geometry_mask(grid, geometry)]
+        pts.extend(grid.tolist())
+    if len(pts) < n:
+        raise ValueError(
+            f"could not place {n} points in geometry {geometry!r} "
+            f"(got {len(pts)}) — the hard mask excludes nearly the "
+            "whole unit square")
     return np.asarray(pts[:n])
+
+
+def _triangulate(pts: np.ndarray, rng: np.random.Generator,
+                 max_tries: int = 5) -> Delaunay:
+    """Delaunay with jitter-retry: degenerate draws (duplicate or
+    collinear points) make qhull raise QhullError on a flat initial
+    simplex. Each retry perturbs the points by an exponentially
+    growing (but still mesh-scale-negligible) jitter; the final
+    attempt's error propagates."""
+    try:
+        from scipy.spatial import QhullError
+    except ImportError:  # scipy < 1.8
+        from scipy.spatial.qhull import QhullError
+    p = pts
+    for t in range(max_tries):
+        try:
+            return Delaunay(p)
+        except (QhullError, ValueError):
+            if t == max_tries - 1:
+                raise
+            p = pts + rng.normal(size=pts.shape) * (1e-8 * 10.0 ** t)
+    raise AssertionError("unreachable")
 
 
 def delaunay_like(n: int, geometry: str = "gradel", seed: int = 0):
     """Triangulate points in the chosen geometry; adjacency = mesh edges."""
     rng = np.random.default_rng(seed)
     pts = _domain_points(n, geometry, rng)
-    tri = Delaunay(pts)
+    tri = _triangulate(pts, rng)
     edges = set()
     for simplex in tri.simplices:
         for a in range(3):
@@ -118,7 +169,7 @@ def fem_like(n: int, geometry: str = "gradel", seed: int = 0):
     edge graph)."""
     rng = np.random.default_rng(seed)
     pts = _domain_points(n, geometry, rng)
-    tri = Delaunay(pts)
+    tri = _triangulate(pts, rng)
     edges = set()
     for simplex in tri.simplices:
         s = [int(v) for v in simplex]
@@ -146,8 +197,27 @@ GEOMETRIES = ("gradel", "hole3", "hole6")
 
 
 def make_training_set(n_matrices: int = 24, n_min: int = 100,
-                      n_max: int = 500, seed: int = 0):
-    """Mixed set mirroring the paper's training distribution."""
+                      n_max: int = 500, seed: int = 0,
+                      source: str = "synthetic", mtx_dir=None,
+                      manifest=None):
+    """Mixed set mirroring the paper's training distribution.
+
+    source="suitesparse" instead loads (name, A) items from a local
+    Matrix Market collection (`mtx_dir` + optional `manifest`,
+    data/suitesparse.SuiteSparseSet) — the paper's actual benchmark
+    matrices; n_matrices caps the count, the size bounds filter."""
+    if source == "suitesparse":
+        if mtx_dir is None:
+            raise ValueError(
+                "make_training_set(source='suitesparse') needs mtx_dir")
+        from repro.data.suitesparse import suitesparse_items
+        items = [(name, A) for name, A
+                 in suitesparse_items(mtx_dir, manifest=manifest)
+                 if n_min <= A.shape[0] <= n_max or n_max <= 0]
+        return items[:n_matrices] if n_matrices else items
+    if source != "synthetic":
+        raise ValueError(f"unknown source {source!r} "
+                         "(expected 'synthetic' or 'suitesparse')")
     rng = np.random.default_rng(seed)
     out = []
     kinds = ["grid2d", "grid3d", "delaunay", "fem"]
@@ -169,10 +239,25 @@ def make_training_set(n_matrices: int = 24, n_min: int = 100,
     return out
 
 
-def make_test_set(seed: int = 1):
+def make_test_set(seed: int = 1, source: str = "synthetic",
+                  mtx_dir=None, manifest=None):
     """Evaluation set mirroring the paper's problem categories at the
     largest sizes tractable in this container (the paper uses 1e4-1e6;
-    symbolic metrics are size-independent)."""
+    symbolic metrics are size-independent).
+
+    source="suitesparse" loads (category, A) cases from a local
+    Matrix Market collection instead (`mtx_dir` + optional
+    `manifest`): the category tags come from the manifest, matching
+    the paper's 2D3D/SP/CFD/TP/MRP/Other grouping."""
+    if source == "suitesparse":
+        if mtx_dir is None:
+            raise ValueError(
+                "make_test_set(source='suitesparse') needs mtx_dir")
+        from repro.data.suitesparse import suitesparse_cases
+        return suitesparse_cases(mtx_dir, manifest=manifest)
+    if source != "synthetic":
+        raise ValueError(f"unknown source {source!r} "
+                         "(expected 'synthetic' or 'suitesparse')")
     cases = [
         ("2D3D", grid_2d(45, seed=seed)),                 # 2025
         ("2D3D", grid_3d(13, seed=seed + 1)),             # 2197

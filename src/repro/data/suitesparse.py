@@ -1,0 +1,424 @@
+"""Real SuiteSparse ingestion: Matrix Market loader, manifest-driven
+dataset layer, and the on-disk prepared-hierarchy cache (DESIGN.md §13).
+
+Three pieces:
+
+  * `read_mtx` / `write_mtx` — a dependency-light Matrix Market
+    coordinate reader (real / integer / pattern / complex fields;
+    general / symmetric / skew-symmetric / hermitian storage; 1-based
+    indices; % comments and blank lines). Every loaded matrix passes
+    through ONE canonicalization choke point (`canonicalize_csr`):
+    real `.mtx` files carry duplicate COO entries and explicitly
+    stored zeros, and without `sum_duplicates()` +
+    `eliminate_zeros()` the fill-in denominators (`A.nnz` in
+    `lu_fillin_splu`, `symmetrize_pattern` inputs in
+    `symbolic_cholesky_nnz`) count phantom nonzeros and every ratio
+    is silently wrong.
+
+  * `SuiteSparseSet` — the paper's benchmark collection as a local
+    directory plus a `manifest.json` carrying the paper's category
+    tags (2D3D / SP / CFD / TP / MRP / Other). Strictly offline by
+    default: a missing local file raises an actionable
+    FileNotFoundError immediately (never a hang, never a silent
+    download); `allow_download=True` plus a manifest `url` opts a
+    run into fetching. CI drives everything from the committed small
+    fixtures under tests/fixtures/mtx/.
+
+  * `HierarchyCache` — content-hash keyed `.npz` cache of
+    `graph.build_hierarchy` outputs (the host-side packing hot path:
+    heavy-edge matching is pure-Python per level). Repeated
+    `PFM.fit` / `permutation_batch` / `eval_fillin` runs over the
+    same collection skip the rebuild entirely; the key covers the
+    canonical (indptr, indices, |data|) content, the hierarchy
+    hyperparameters, and a format version, so any input or algorithm
+    change misses cleanly instead of serving a stale hierarchy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import tempfile
+from typing import Dict, List, Sequence
+
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core.graph import (GraphData, GraphLevel, build_hierarchy,
+                              canonicalize_csr)
+
+# the paper's Table-2 problem categories
+CATEGORIES = ("2D3D", "SP", "CFD", "TP", "MRP", "Other")
+
+_FIELDS = ("real", "integer", "pattern", "complex")
+_SYMMETRIES = ("general", "symmetric", "skew-symmetric", "hermitian")
+
+
+# --------------------------------------------------------------- reader
+def read_mtx(path) -> sp.csr_matrix:
+    """Parse a Matrix Market coordinate file into a canonical CSR
+    matrix (duplicates summed, explicit zeros eliminated, sorted
+    indices).
+
+    Coverage: fields real/integer/pattern/complex; storage general/
+    symmetric/skew-symmetric/hermitian (off-diagonal entries mirrored,
+    negated, or conjugated respectively); 1-based indices; '%' comment
+    and blank lines anywhere after the banner. `array` (dense) format
+    raises NotImplementedError with the conversion hint rather than
+    mis-parsing."""
+    path = pathlib.Path(path)
+    with open(path, "r") as fh:
+        banner = fh.readline()
+        parts = banner.strip().split()
+        if len(parts) != 5 or parts[0] != "%%MatrixMarket" \
+                or parts[1].lower() != "matrix":
+            raise ValueError(
+                f"{path}: not a Matrix Market file (banner {banner!r}; "
+                "expected '%%MatrixMarket matrix <format> <field> "
+                "<symmetry>')")
+        fmt, field, symmetry = (p.lower() for p in parts[2:5])
+        if fmt == "array":
+            raise NotImplementedError(
+                f"{path}: 'array' (dense) Matrix Market format is not "
+                "supported — convert to coordinate format (e.g. "
+                "scipy.io.mmwrite(path, sp.coo_matrix(dense)))")
+        if fmt != "coordinate":
+            raise ValueError(f"{path}: unknown MatrixMarket format "
+                             f"{fmt!r} (expected 'coordinate')")
+        if field not in _FIELDS:
+            raise ValueError(f"{path}: unsupported field {field!r} "
+                             f"(supported: {_FIELDS})")
+        if symmetry not in _SYMMETRIES:
+            raise ValueError(f"{path}: unsupported symmetry "
+                             f"{symmetry!r} (supported: {_SYMMETRIES})")
+
+        size = None
+        rows: List[int] = []
+        cols: List[int] = []
+        vals: List[complex] = []
+        for lineno, line in enumerate(fh, start=2):
+            line = line.strip()
+            if not line or line.startswith("%"):
+                continue
+            toks = line.split()
+            if size is None:
+                if len(toks) != 3:
+                    raise ValueError(
+                        f"{path}:{lineno}: expected size line "
+                        f"'<rows> <cols> <nnz>', got {line!r}")
+                size = (int(toks[0]), int(toks[1]), int(toks[2]))
+                continue
+            i, j = int(toks[0]) - 1, int(toks[1]) - 1  # 1-based on disk
+            if not (0 <= i < size[0] and 0 <= j < size[1]):
+                raise ValueError(
+                    f"{path}:{lineno}: index ({toks[0]}, {toks[1]}) out "
+                    f"of range for {size[0]}x{size[1]} matrix "
+                    "(indices are 1-based)")
+            if field == "pattern":
+                v = 1.0
+            elif field == "complex":
+                if len(toks) < 4:
+                    raise ValueError(
+                        f"{path}:{lineno}: complex entry needs "
+                        f"'<i> <j> <re> <im>', got {line!r}")
+                v = complex(float(toks[2]), float(toks[3]))
+            else:
+                if len(toks) < 3:
+                    raise ValueError(
+                        f"{path}:{lineno}: {field} entry needs "
+                        f"'<i> <j> <value>', got {line!r}")
+                v = float(toks[2])
+            rows.append(i)
+            cols.append(j)
+            vals.append(v)
+    if size is None:
+        raise ValueError(f"{path}: missing size line")
+    n_rows, n_cols, nnz_decl = size
+    if len(rows) != nnz_decl:
+        raise ValueError(
+            f"{path}: header declares {nnz_decl} entries but file has "
+            f"{len(rows)}")
+
+    if symmetry != "general":
+        mr, mc, mv = [], [], []
+        for i, j, v in zip(rows, cols, vals):
+            if i == j:
+                if symmetry == "skew-symmetric" and v != 0:
+                    raise ValueError(
+                        f"{path}: skew-symmetric file stores a nonzero "
+                        f"diagonal entry at ({i + 1}, {i + 1})")
+                continue
+            if symmetry == "symmetric":
+                w = v
+            elif symmetry == "skew-symmetric":
+                w = -v
+            else:  # hermitian
+                w = np.conj(v)
+            mr.append(j)
+            mc.append(i)
+            mv.append(w)
+        rows += mr
+        cols += mc
+        vals += mv
+
+    dtype = np.complex128 if field == "complex" else np.float64
+    A = sp.coo_matrix(
+        (np.asarray(vals, dtype=dtype),
+         (np.asarray(rows, dtype=np.int64),
+          np.asarray(cols, dtype=np.int64))),
+        shape=(n_rows, n_cols))
+    return canonicalize_csr(A)
+
+
+def write_mtx(path, A: sp.spmatrix, *, field: str | None = None,
+              symmetry: str = "general", comment: str = ""):
+    """Write A as a Matrix Market coordinate file (fixture generation
+    and round-trip tests). symmetry='symmetric'/'skew-symmetric'/
+    'hermitian' stores only the lower triangle (plus the diagonal for
+    'symmetric'/'hermitian')."""
+    A = sp.coo_matrix(A)
+    if field is None:
+        field = "complex" if np.iscomplexobj(A.data) else "real"
+    lines = [f"%%MatrixMarket matrix coordinate {field} {symmetry}"]
+    for c in comment.splitlines():
+        lines.append(f"% {c}")
+    r, c, v = A.row, A.col, A.data
+    if symmetry != "general":
+        keep = r > c if symmetry == "skew-symmetric" else r >= c
+        r, c, v = r[keep], c[keep], v[keep]
+    lines.append(f"{A.shape[0]} {A.shape[1]} {len(r)}")
+    for i, j, x in zip(r, c, v):
+        if field == "pattern":
+            lines.append(f"{i + 1} {j + 1}")
+        elif field == "integer":
+            lines.append(f"{i + 1} {j + 1} {int(x)}")
+        elif field == "complex":
+            lines.append(
+                f"{i + 1} {j + 1} {float(x.real)!r} {float(x.imag)!r}")
+        else:
+            lines.append(f"{i + 1} {j + 1} {float(x.real)!r}")
+    pathlib.Path(path).write_text("\n".join(lines) + "\n")
+
+
+# -------------------------------------------------------- dataset layer
+@dataclasses.dataclass
+class ManifestEntry:
+    name: str
+    file: str
+    category: str = "Other"
+    url: str | None = None
+
+
+class SuiteSparseSet:
+    """A local SuiteSparse-style collection: a directory of `.mtx`
+    files plus an optional `manifest.json` of
+    ``[{"name", "file", "category", "url"?}, ...]`` entries carrying
+    the paper's category tags. Without a manifest the directory is
+    scanned for `*.mtx` (category 'Other').
+
+    Offline policy: `load` never touches the network unless BOTH the
+    constructor opted in (`allow_download=True`) AND the entry has a
+    `url`. A missing local file otherwise raises immediately with the
+    exact path and the remediation — CI runs entirely from committed
+    fixtures."""
+
+    def __init__(self, root, manifest=None, allow_download: bool = False):
+        self.root = pathlib.Path(root)
+        if not self.root.is_dir():
+            raise FileNotFoundError(
+                f"SuiteSparse directory {self.root} does not exist — "
+                "pass --mtx-dir pointing at a directory of .mtx files "
+                "(e.g. tests/fixtures/mtx for the committed fixtures)")
+        self.allow_download = allow_download
+        if manifest is None:
+            default = self.root / "manifest.json"
+            manifest = default if default.exists() else None
+        self.entries: List[ManifestEntry] = []
+        if manifest is not None:
+            raw = json.loads(pathlib.Path(manifest).read_text())
+            for e in raw:
+                entry = ManifestEntry(
+                    name=e["name"], file=e["file"],
+                    category=e.get("category", "Other"),
+                    url=e.get("url"))
+                if entry.category not in CATEGORIES:
+                    raise ValueError(
+                        f"manifest entry {entry.name!r}: category "
+                        f"{entry.category!r} is not one of {CATEGORIES}")
+                self.entries.append(entry)
+        else:
+            for p in sorted(self.root.glob("*.mtx")):
+                self.entries.append(ManifestEntry(name=p.stem,
+                                                  file=p.name))
+        if not self.entries:
+            raise FileNotFoundError(
+                f"no .mtx files (or manifest entries) under {self.root}")
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def names(self) -> List[str]:
+        return [e.name for e in self.entries]
+
+    def path(self, name: str) -> pathlib.Path:
+        return self.root / self._entry(name).file
+
+    def _entry(self, name: str) -> ManifestEntry:
+        for e in self.entries:
+            if e.name == name:
+                return e
+        raise KeyError(f"{name!r} is not in the manifest "
+                       f"(have: {self.names})")
+
+    def load(self, name: str) -> sp.csr_matrix:
+        entry = self._entry(name)
+        path = self.root / entry.file
+        if not path.exists():
+            if entry.url and self.allow_download:
+                self._download(entry.url, path)
+            else:
+                hint = (f"download it manually (e.g. from {entry.url})"
+                        if entry.url else
+                        "download it manually from "
+                        "https://sparse.tamu.edu")
+                raise FileNotFoundError(
+                    f"SuiteSparse matrix {name!r}: {path} is missing "
+                    f"and this run is offline "
+                    f"(allow_download={self.allow_download}). Either "
+                    f"place the file at that path — {hint} — or "
+                    "construct SuiteSparseSet(allow_download=True) "
+                    "with a manifest 'url' entry.")
+        return read_mtx(path)
+
+    @staticmethod
+    def _download(url: str, path: pathlib.Path, timeout: float = 60.0):
+        import urllib.request
+        tmp = path.with_suffix(".tmp")
+        with urllib.request.urlopen(url, timeout=timeout) as resp:
+            tmp.write_bytes(resp.read())
+        os.replace(tmp, path)
+
+    def cases(self) -> List[tuple]:
+        """Table-2 shaped: [(category, A), ...] in manifest order."""
+        return [(e.category, self.load(e.name)) for e in self.entries]
+
+    def items(self) -> List[tuple]:
+        """Training shaped: [(name, A), ...] in manifest order."""
+        return [(e.name, self.load(e.name)) for e in self.entries]
+
+
+# --------------------------------------------- prepared-hierarchy cache
+class HierarchyCache:
+    """Content-hash keyed on-disk cache of `graph.build_hierarchy`
+    outputs (one `.npz` per matrix). The coarsening hierarchy is pure
+    host-side pattern preprocessing — the hot path of every
+    `PFM.prepare` — so a warm cache turns repeated fit / inference /
+    eval sweeps over the same collection into `.npz` loads.
+
+    Key scheme: sha256 over (format version, shape, hierarchy
+    hyperparameters, seed, canonical indptr/indices bytes, |data|
+    bytes). Values participate because heavy-edge matching ranks
+    edges by |a_ij|; the format version bumps on any serialization or
+    algorithm change so stale entries miss instead of deserializing
+    wrongly."""
+
+    VERSION = 1
+
+    def __init__(self, cache_dir):
+        self.dir = pathlib.Path(cache_dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses}
+
+    def key(self, A: sp.spmatrix, *, seed: int = 0, max_levels: int = 12,
+            min_nodes: int = 2) -> str:
+        A = canonicalize_csr(A)
+        h = hashlib.sha256()
+        h.update(f"v{self.VERSION}|{A.shape[0]}x{A.shape[1]}|"
+                 f"seed={seed}|L={max_levels}|m={min_nodes}|".encode())
+        h.update(A.indptr.astype(np.int64).tobytes())
+        h.update(A.indices.astype(np.int64).tobytes())
+        h.update(np.abs(A.data).astype(np.float64).tobytes())
+        return h.hexdigest()
+
+    def get_or_build(self, A: sp.spmatrix, *, seed: int = 0,
+                     max_levels: int = 12,
+                     min_nodes: int = 2) -> GraphData:
+        key = self.key(A, seed=seed, max_levels=max_levels,
+                       min_nodes=min_nodes)
+        path = self.dir / f"{key}.npz"
+        if path.exists():
+            try:
+                gd = self._load(path)
+                self.hits += 1
+                return gd
+            except Exception:
+                path.unlink(missing_ok=True)  # corrupt entry: rebuild
+        gd = build_hierarchy(sp.csr_matrix(A), seed=seed,
+                             max_levels=max_levels, min_nodes=min_nodes)
+        self._save(path, gd)
+        self.misses += 1
+        return gd
+
+    @staticmethod
+    def _save(path: pathlib.Path, gd: GraphData):
+        arrays = {
+            "meta": np.asarray([gd.n, gd.n_pad, len(gd.levels)],
+                               np.int64),
+        }
+        for i, lv in enumerate(gd.levels):
+            arrays[f"l{i}_dims"] = np.asarray(
+                [lv.n, lv.n_pad, lv.n_coarse, lv.n_coarse_pad], np.int64)
+            arrays[f"l{i}_senders"] = lv.senders
+            arrays[f"l{i}_receivers"] = lv.receivers
+            arrays[f"l{i}_edge_mask"] = lv.edge_mask
+            arrays[f"l{i}_cluster"] = lv.cluster
+        # atomic publish: concurrent eval runs may share a cache dir
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp.npz")
+        os.close(fd)
+        try:
+            with open(tmp, "wb") as fh:
+                np.savez_compressed(fh, **arrays)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    @staticmethod
+    def _load(path: pathlib.Path) -> GraphData:
+        with np.load(path) as z:
+            n, n_pad, depth = (int(x) for x in z["meta"])
+            levels = []
+            for i in range(depth):
+                ln, lp, nc, ncp = (int(x) for x in z[f"l{i}_dims"])
+                levels.append(GraphLevel(
+                    n=ln, n_pad=lp,
+                    senders=z[f"l{i}_senders"],
+                    receivers=z[f"l{i}_receivers"],
+                    edge_mask=z[f"l{i}_edge_mask"],
+                    cluster=z[f"l{i}_cluster"],
+                    n_coarse=nc, n_coarse_pad=ncp))
+        return GraphData(n=n, n_pad=n_pad, levels=levels)
+
+
+# ----------------------------------------------------- set constructors
+def suitesparse_cases(mtx_dir, manifest=None,
+                      allow_download: bool = False) -> List[tuple]:
+    """(category, A) evaluation cases from a local collection — the
+    `make_test_set(source="suitesparse")` backend."""
+    return SuiteSparseSet(mtx_dir, manifest=manifest,
+                          allow_download=allow_download).cases()
+
+
+def suitesparse_items(mtx_dir, manifest=None,
+                      allow_download: bool = False) -> List[tuple]:
+    """(name, A) training items from a local collection — the
+    `make_training_set(source="suitesparse")` backend."""
+    return SuiteSparseSet(mtx_dir, manifest=manifest,
+                          allow_download=allow_download).items()

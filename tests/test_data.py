@@ -71,3 +71,62 @@ def test_test_set_categories():
     cases = make_test_set()
     cats = {c for c, _ in cases}
     assert {"2D3D", "SP", "CFD", "TP", "MRP", "Other"} <= cats
+
+
+# ------------------------- generator robustness (bounded loops, qhull)
+class _AdversarialRng:
+    """Worst-case stream for `_domain_points`: every uniform draw is
+    1.0, so all candidates land at (1,1) — removed by the GradeL mask —
+    and every density draw fails the `< p` keep test. The unbounded
+    rejection loop spun forever on exactly this kind of stream."""
+
+    def random(self, size=None):
+        return np.ones(size) if size is not None else 1.0
+
+    def normal(self, size=None):
+        return np.zeros(size)
+
+
+def test_domain_points_bounded_rejection_falls_back():
+    from repro.data.matrices import _domain_points, _geometry_mask
+    pts = _domain_points(50, "gradel", _AdversarialRng())
+    assert pts.shape == (50, 2)
+    # deterministic fallback still respects the hard geometry mask
+    assert _geometry_mask(pts, "gradel").all()
+    assert len(np.unique(pts, axis=0)) == 50  # de-tied, not stacked
+
+
+def test_domain_points_normal_path_unchanged():
+    from repro.data.matrices import _domain_points, _geometry_mask
+    rng = np.random.default_rng(0)
+    for geom in ("gradel", "hole3", "hole6"):
+        pts = _domain_points(120, geom, np.random.default_rng(3))
+        assert pts.shape == (120, 2)
+        assert _geometry_mask(pts, geom).all()
+    del rng
+
+
+def test_triangulate_jitter_recovers_degenerate_inputs():
+    from repro.data.matrices import _triangulate
+    rng = np.random.default_rng(0)
+    # all-identical points: flat initial simplex, QhullError until the
+    # jitter spreads them
+    tri = _triangulate(np.ones((12, 2)) * 0.5, rng)
+    assert len(tri.simplices) > 0
+    # exactly collinear points
+    line = np.stack([np.linspace(0.1, 0.9, 15),
+                     np.full(15, 0.5)], axis=1)
+    tri = _triangulate(line, rng)
+    assert len(tri.simplices) > 0
+
+
+def test_triangulate_raises_after_max_tries():
+    from repro.data.matrices import _triangulate
+    try:
+        from scipy.spatial import QhullError
+    except ImportError:
+        from scipy.spatial.qhull import QhullError
+    # the zero-jitter rng never perturbs, so every retry sees the same
+    # degenerate input and the final attempt's error must propagate
+    with pytest.raises((QhullError, ValueError)):
+        _triangulate(np.ones((8, 2)), _AdversarialRng(), max_tries=3)

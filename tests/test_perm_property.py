@@ -107,3 +107,121 @@ def test_pfm_permutation_bijection_and_parity_all_patterns(seed):
         p1 = _PFM.permutation(A)
         _assert_bijection(p1, n, f"permutation n={n} seed={seed}")
         np.testing.assert_array_equal(p1, pb)
+
+
+# --------------------- permutation-direction convention, end to end
+# The repo-wide convention: perm[i] is the ORIGINAL index eliminated
+# i-th, i.e. apply_perm(A, perm) = A[perm][:, perm] = P A P^T. Every
+# producer (BASELINES, permutation_from_scores, PFM) and every consumer
+# (apply_perm, lu_fillin_splu, symbolic_cholesky_nnz) must agree; a
+# silently inverted perm still passes every bijection test while making
+# every fill-in number wrong.
+from repro.core import fillin  # noqa: E402
+
+
+def _unsymmetric(n: int, seed: int) -> sp.csr_matrix:
+    rng = np.random.default_rng(seed)
+    M = (rng.random((n, n)) < 0.15) * (1.0 + rng.random((n, n)))
+    np.fill_diagonal(M, n)
+    return sp.csr_matrix(M)
+
+
+def test_apply_perm_elementwise_definition():
+    A = _unsymmetric(20, seed=0)
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(20)
+    B = fillin.apply_perm(A, perm).toarray()
+    np.testing.assert_array_equal(B, A.toarray()[np.ix_(perm, perm)])
+    # the inverse (argsort) undoes it — the two directions differ
+    inv = np.argsort(perm)
+    np.testing.assert_array_equal(
+        fillin.apply_perm(fillin.apply_perm(A, perm), inv).toarray(),
+        A.toarray())
+    assert not np.array_equal(B, A.toarray()[np.ix_(inv, inv)])
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 40))
+def test_metric_perm_arg_matches_apply_perm(seed):
+    """lu_fillin_splu(A, perm) and symbolic_cholesky_nnz(A, perm) must
+    mean exactly `metric(apply_perm(A, perm))` — on UNSYMMETRIC
+    patterns, where a row/column mix-up actually changes the answer."""
+    A = _unsymmetric(24, seed=seed)
+    for name, fn in baselines.BASELINES.items():
+        perm = np.asarray(fn(A))
+        _assert_bijection(perm, 24, f"{name} unsymmetric seed={seed}")
+        B = fillin.apply_perm(A, perm)
+        assert fillin.symbolic_cholesky_nnz(A, perm)[0] == \
+            fillin.symbolic_cholesky_nnz(B)[0], name
+        ra, rb = fillin.lu_fillin_splu(A, perm), fillin.lu_fillin_splu(B)
+        assert ra["fillin"] == rb["fillin"], name
+    perm = np.asarray(_PFM.permutation(A))
+    B = fillin.apply_perm(A, perm)
+    assert fillin.symbolic_cholesky_nnz(A, perm)[0] == \
+        fillin.symbolic_cholesky_nnz(B)[0], "pfm"
+
+
+def test_band_recovery_pins_direction():
+    """rcm / fiedler on a label-shuffled path graph: under the correct
+    convention apply_perm recovers a tridiagonal matrix (bandwidth 1);
+    under the inverted convention it does not."""
+    n = 31
+    rng = np.random.default_rng(7)
+    sigma = rng.permutation(n)
+    rows, cols = sigma[:-1], sigma[1:]
+    P = sp.csr_matrix((np.ones(n - 1), (rows, cols)), shape=(n, n))
+    A = ((P + P.T) > 0).astype(np.float64) + sp.eye(n)
+
+    def bandwidth(M):
+        coo = sp.coo_matrix(M)
+        return int(np.max(np.abs(coo.row - coo.col)))
+
+    for name in ("rcm", "fiedler"):
+        perm = np.asarray(baselines.BASELINES[name](A))
+        assert bandwidth(fillin.apply_perm(A, perm)) == 1, name
+        inv = np.argsort(perm)
+        if not (np.array_equal(inv, perm)
+                or np.array_equal(inv, perm[::-1])):
+            assert bandwidth(fillin.apply_perm(A, inv)) > 1, \
+                f"{name}: inverse also banded — test not discriminating"
+
+
+def test_star_elimination_pins_direction():
+    """min_degree / spectral_nd on a label-shuffled star: leaves must be
+    eliminated before the hub, which gives ZERO Cholesky fill-in under
+    the correct convention. An inverted perm eliminates the hub at an
+    arbitrary (usually early) position and creates a leaf clique."""
+    n = 25
+    rng = np.random.default_rng(3)
+    sigma = rng.permutation(n)
+    hub, leaves = sigma[0], sigma[1:]
+    S = sp.csr_matrix((np.ones(n - 1),
+                       (np.full(n - 1, hub), leaves)), shape=(n, n))
+    A = ((S + S.T) > 0).astype(np.float64) + sp.eye(n)
+    no_fill = 2 * n - 1  # n diagonal + (n-1) star edges, zero fill
+    for name in ("min_degree", "spectral_nd"):
+        perm = np.asarray(baselines.BASELINES[name](A))
+        # hub is eliminated once at most one leaf remains (ties with the
+        # final degree-1 leaf are allowed — fill stays zero either way)
+        assert np.where(perm == hub)[0][0] >= n - 2, \
+            f"{name}: hub eliminated too early"
+        assert fillin.symbolic_cholesky_nnz(A, perm)[0] == no_fill, name
+        inv = np.argsort(perm)
+        if not np.array_equal(inv, perm):
+            assert fillin.symbolic_cholesky_nnz(A, inv)[0] > no_fill, \
+                f"{name}: inverse also fill-free — not discriminating"
+
+
+def test_permutation_from_scores_direction():
+    """perm[0] = highest score (eliminated first); scores[perm] is
+    non-increasing; masked pad slots rank strictly after real nodes."""
+    import jax.numpy as jnp
+    from repro.core import reorder
+    scores = jnp.asarray([0.3, -1.0, 2.5, 0.0, 1.7])
+    perm = np.asarray(reorder.permutation_from_scores(scores))
+    assert perm[0] == 2  # argmax
+    assert (np.diff(np.asarray(scores)[perm]) <= 0).all()
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0])
+    pm = np.asarray(reorder.permutation_from_scores(scores, mask))
+    assert set(pm[:3].tolist()) == {0, 1, 2}  # real nodes first
+    assert pm[0] == 2 and pm[1] == 0 and pm[2] == 1

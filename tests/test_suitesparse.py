@@ -1,0 +1,409 @@
+"""Real SuiteSparse ingestion (data/suitesparse, DESIGN.md §13): the
+Matrix Market reader's format coverage and canonicalization choke
+point, the manifest-driven dataset layer's offline policy, the
+content-hash prepared-hierarchy cache, and the end-to-end
+`eval_fillin --mtx-dir` path with LU + Cholesky columns."""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import fillin
+from repro.core.graph import canonicalize_csr
+from repro.data.matrices import grid_2d, make_test_set, make_training_set
+from repro.data.suitesparse import (CATEGORIES, HierarchyCache,
+                                    SuiteSparseSet, read_mtx, write_mtx)
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "mtx"
+
+
+# ------------------------------------------------------------- reader
+def test_read_mtx_symmetric_round_trip():
+    A = grid_2d(6, seed=3)
+    B = read_mtx(FIXTURES / "mesh2d_s36.mtx")
+    assert (abs(A - B) > 1e-12).nnz == 0
+
+
+def test_read_mtx_general_round_trip(tmp_path):
+    rng = np.random.default_rng(0)
+    A = sp.random(12, 12, density=0.3,
+                  random_state=np.random.RandomState(0)).tocsr()
+    A.setdiag(5.0)
+    write_mtx(tmp_path / "g.mtx", A)
+    B = read_mtx(tmp_path / "g.mtx")
+    assert (abs(canonicalize_csr(A) - B) > 1e-14).nnz == 0
+    del rng
+
+
+def test_read_mtx_pattern_field():
+    P = read_mtx(FIXTURES / "path_pattern_s10.mtx")
+    assert P.shape == (10, 10)
+    assert P.nnz == 28  # tridiagonal + diagonal, mirrored
+    assert set(np.unique(P.data)) == {1.0}
+    assert (abs(P - P.T) > 0).nnz == 0  # symmetric storage mirrored
+
+
+def test_read_mtx_integer_field_unsymmetric():
+    A = read_mtx(FIXTURES / "trade_int_s30.mtx")
+    assert A.shape == (30, 30)
+    assert A.dtype == np.float64
+    assert (abs(A - A.T) > 0).nnz > 0  # genuinely unsymmetric pattern
+    assert np.all(A.data == np.round(A.data))
+
+
+def test_read_mtx_skew_symmetric():
+    K = read_mtx(FIXTURES / "skew_s8.mtx")
+    assert np.allclose((K + K.T).toarray(), 0)
+    assert np.all(K.diagonal() == 0)
+
+
+def test_read_mtx_hermitian_complex():
+    H = read_mtx(FIXTURES / "hermitian_s6.mtx")
+    assert H.dtype == np.complex128
+    assert np.allclose((H - H.conj().T).toarray(), 0)
+
+
+def test_read_mtx_comments_and_blank_lines(tmp_path):
+    (tmp_path / "c.mtx").write_text(
+        "%%MatrixMarket matrix coordinate real general\n"
+        "% comment line\n"
+        "\n"
+        "3 3 3\n"
+        "% mid-stream comment\n"
+        "1 1 2.0\n"
+        "\n"
+        "2 2 3.0\n"
+        "3 1 -1.0\n")
+    A = read_mtx(tmp_path / "c.mtx")
+    assert A.shape == (3, 3) and A.nnz == 3
+    assert A[2, 0] == -1.0  # 1-based on disk -> 0-based in memory
+
+
+def test_read_mtx_error_cases(tmp_path):
+    (tmp_path / "bad_banner.mtx").write_text("%%NotMM\n1 1 0\n")
+    with pytest.raises(ValueError, match="banner"):
+        read_mtx(tmp_path / "bad_banner.mtx")
+
+    (tmp_path / "dense.mtx").write_text(
+        "%%MatrixMarket matrix array real general\n2 2\n1\n2\n3\n4\n")
+    with pytest.raises(NotImplementedError, match="coordinate"):
+        read_mtx(tmp_path / "dense.mtx")
+
+    (tmp_path / "oob.mtx").write_text(
+        "%%MatrixMarket matrix coordinate real general\n"
+        "2 2 1\n3 1 1.0\n")
+    with pytest.raises(ValueError, match="out of range"):
+        read_mtx(tmp_path / "oob.mtx")
+
+    (tmp_path / "count.mtx").write_text(
+        "%%MatrixMarket matrix coordinate real general\n"
+        "2 2 3\n1 1 1.0\n2 2 1.0\n")
+    with pytest.raises(ValueError, match="declares 3"):
+        read_mtx(tmp_path / "count.mtx")
+
+    (tmp_path / "skewdiag.mtx").write_text(
+        "%%MatrixMarket matrix coordinate real skew-symmetric\n"
+        "2 2 2\n1 1 1.0\n2 1 1.0\n")
+    with pytest.raises(ValueError, match="skew"):
+        read_mtx(tmp_path / "skewdiag.mtx")
+
+
+# ------------------------------------- canonicalization (the bugfix)
+def test_dirty_mtx_canonicalized_on_ingest():
+    """The regression the satellite names: duplicate COO entries summed
+    and explicit zeros eliminated at the ingest choke point — nnz and
+    every downstream fill-in denominator count TRUE nonzeros."""
+    D = read_mtx(FIXTURES / "dirty_dup.mtx")
+    assert D.nnz == 9  # 15 stored entries -> 9 canonical nonzeros
+    assert D[0, 0] == 5.0  # 4.0 + 1.0 duplicate summed
+    assert D[1, 2] == 2.0 and D[2, 1] == 2.0  # split pairs summed
+    assert D[0, 2] == 0.0 and D[3, 4] == 0.0  # explicit zeros gone
+
+    # the clean equivalent, assembled directly
+    C = sp.csr_matrix(np.array(
+        [[5.0, -1.0, 0, 0, 0],
+         [-1.0, 5.0, 2.0, 0, 0],
+         [0, 2.0, 6.0, 0, 0],
+         [0, 0, 0, 7.0, 0],
+         [0, 0, 0, 0, 8.0]]))
+    assert (abs(D - C) > 1e-14).nnz == 0
+
+    # fill-in metrics agree exactly between dirty-ingested and clean
+    r_dirty = fillin.lu_fillin_splu(D, None)
+    r_clean = fillin.lu_fillin_splu(C, None)
+    assert r_dirty["fillin"] == r_clean["fillin"]
+    assert r_dirty["fillin_ratio"] == r_clean["fillin_ratio"]
+    assert fillin.symbolic_cholesky_nnz(D)[0] == \
+        fillin.symbolic_cholesky_nnz(C)[0]
+
+
+def test_lu_fillin_splu_canonicalizes_direct_input():
+    """A dirty matrix handed straight to the metric (bypassing the
+    loader) must not count phantom nonzeros in the ratio denominator."""
+    rows = np.array([0, 0, 1, 1, 2, 0, 1])
+    cols = np.array([0, 0, 1, 2, 2, 2, 0])
+    vals = np.array([2.0, 2.0, 5.0, 0.0, 6.0, 0.0, 0.0])
+    dirty = sp.coo_matrix((vals, (rows, cols)), shape=(3, 3))
+    clean = sp.csr_matrix(np.diag([4.0, 5.0, 6.0]))
+    r_dirty = fillin.lu_fillin_splu(dirty, None)
+    r_clean = fillin.lu_fillin_splu(clean, None)
+    assert r_dirty["fillin"] == r_clean["fillin"]
+    assert r_dirty["fillin_ratio"] == r_clean["fillin_ratio"]
+
+
+def test_canonicalize_csr_idempotent_on_clean_input():
+    A = grid_2d(5, seed=0)
+    B = canonicalize_csr(A)
+    assert B.nnz == A.nnz
+    assert (abs(A - B) > 0).nnz == 0
+
+
+# ------------------------------------------------------ dataset layer
+def test_suitesparse_set_manifest_and_categories():
+    sss = SuiteSparseSet(FIXTURES)
+    assert len(sss) == 8
+    cases = sss.cases()
+    cats = {c for c, _ in cases}
+    assert cats <= set(CATEGORIES)
+    assert {"2D3D", "SP", "CFD", "TP", "MRP", "Other"} <= cats
+    for _, A in cases:
+        assert sp.issparse(A) and A.nnz > 0
+
+
+def test_suitesparse_set_scan_without_manifest(tmp_path):
+    write_mtx(tmp_path / "a.mtx", grid_2d(4, seed=0))
+    write_mtx(tmp_path / "b.mtx", grid_2d(5, seed=1))
+    sss = SuiteSparseSet(tmp_path)
+    assert sss.names == ["a", "b"]
+    assert all(cat == "Other" for cat, _ in sss.cases())
+
+
+def test_suitesparse_missing_entry_raises_actionably(tmp_path):
+    """Offline policy: a manifest entry with no local file must raise a
+    clear FileNotFoundError naming the path and the remediation —
+    never hang or hit the network."""
+    write_mtx(tmp_path / "have.mtx", grid_2d(4, seed=0))
+    (tmp_path / "manifest.json").write_text(json.dumps([
+        {"name": "have", "file": "have.mtx", "category": "2D3D"},
+        {"name": "ghost", "file": "ghost.mtx", "category": "SP",
+         "url": "https://example.invalid/ghost.mtx"},
+    ]))
+    sss = SuiteSparseSet(tmp_path)  # construction is lazy, no error yet
+    sss.load("have")
+    with pytest.raises(FileNotFoundError) as exc:
+        sss.load("ghost")
+    msg = str(exc.value)
+    assert "ghost.mtx" in msg and "offline" in msg \
+        and "allow_download" in msg
+
+    with pytest.raises(ValueError, match="category"):
+        (tmp_path / "manifest.json").write_text(json.dumps(
+            [{"name": "x", "file": "have.mtx", "category": "BOGUS"}]))
+        SuiteSparseSet(tmp_path)
+
+
+def test_suitesparse_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no .mtx"):
+        SuiteSparseSet(tmp_path)
+    with pytest.raises(FileNotFoundError, match="does not exist"):
+        SuiteSparseSet(tmp_path / "nope")
+
+
+def test_make_sets_suitesparse_source():
+    cases = make_test_set(source="suitesparse", mtx_dir=FIXTURES)
+    assert len(cases) == 8
+    assert all(cat in CATEGORIES for cat, _ in cases)
+    items = make_training_set(source="suitesparse", mtx_dir=FIXTURES,
+                              n_matrices=4, n_min=1, n_max=10_000)
+    assert len(items) == 4
+    assert all(isinstance(name, str) for name, _ in items)
+    with pytest.raises(ValueError, match="mtx_dir"):
+        make_test_set(source="suitesparse")
+    with pytest.raises(ValueError, match="unknown source"):
+        make_test_set(source="bogus")
+
+
+# --------------------------------------------- prepared-hierarchy cache
+def test_hierarchy_cache_hit_miss_and_equality(tmp_path):
+    from repro.core.graph import build_hierarchy
+    cache = HierarchyCache(tmp_path / "cache")
+    A = read_mtx(FIXTURES / "fem_gradel_s48.mtx")
+
+    gd_cold = cache.get_or_build(A, seed=0)
+    assert cache.stats() == {"hits": 0, "misses": 1}
+    gd_warm = cache.get_or_build(A, seed=0)
+    assert cache.stats() == {"hits": 1, "misses": 1}
+
+    ref = build_hierarchy(sp.csr_matrix(A), seed=0)
+    for gd in (gd_cold, gd_warm):
+        assert gd.n == ref.n and gd.n_pad == ref.n_pad
+        assert len(gd.levels) == len(ref.levels)
+        for lv, lr in zip(gd.levels, ref.levels):
+            assert (lv.n, lv.n_pad, lv.n_coarse, lv.n_coarse_pad) == \
+                (lr.n, lr.n_pad, lr.n_coarse, lr.n_coarse_pad)
+            np.testing.assert_array_equal(lv.senders, lr.senders)
+            np.testing.assert_array_equal(lv.receivers, lr.receivers)
+            np.testing.assert_array_equal(lv.edge_mask, lr.edge_mask)
+            np.testing.assert_array_equal(lv.cluster, lr.cluster)
+
+
+def test_hierarchy_cache_key_discriminates(tmp_path):
+    cache = HierarchyCache(tmp_path)
+    A = grid_2d(5, seed=0)
+    B = A.copy()
+    B.data = B.data.copy()
+    B.data[0] *= 2.0  # heavy-edge matching ranks by |a_ij|
+    assert cache.key(A) != cache.key(B)
+    assert cache.key(A) != cache.key(A, seed=1)
+    assert cache.key(A) != cache.key(A, max_levels=3)
+    assert cache.key(A) == cache.key(A)
+    # key is content-addressed: a dirty assembly of the same matrix
+    # (duplicates + explicit zeros) maps to the SAME entry
+    coo = A.tocoo()
+    r = np.concatenate([coo.row, [0], [coo.row[0]]])
+    c = np.concatenate([coo.col, [A.shape[0] - 1], [coo.col[0]]])
+    v = np.concatenate([coo.data, [0.0], [0.0]])
+    dirty = sp.coo_matrix((v, (r, c)), shape=A.shape)
+    assert cache.key(dirty) == cache.key(A)
+
+
+def test_hierarchy_cache_corrupt_entry_rebuilds(tmp_path):
+    cache = HierarchyCache(tmp_path)
+    A = grid_2d(4, seed=0)
+    cache.get_or_build(A)
+    key = cache.key(A)
+    (tmp_path / f"{key}.npz").write_bytes(b"not an npz")
+    gd = cache.get_or_build(A)  # falls back to rebuild, re-publishes
+    assert gd.n == 16
+    assert cache.stats()["misses"] == 2
+    assert cache.get_or_build(A).n == 16
+    assert cache.stats()["hits"] == 1
+
+
+def test_pfm_prepare_uses_cache(tmp_path):
+    from repro.core.admm import PFMConfig
+    from repro.core.pfm import PFM
+    cache = HierarchyCache(tmp_path)
+    pfm = PFM(PFMConfig(n_admm=2, n_sinkhorn=6), seed=0,
+              x_mode="random", hierarchy_cache=cache)
+    A = grid_2d(5, seed=0)
+    pm1 = pfm.prepare(A, "a")
+    assert cache.stats() == {"hits": 0, "misses": 1}
+    pm2 = pfm.prepare(A, "a")
+    assert cache.stats() == {"hits": 1, "misses": 1}
+    np.testing.assert_array_equal(np.asarray(pm1.x_g),
+                                  np.asarray(pm2.x_g))
+    perm = pfm.permutation(pm1)
+    assert sorted(perm.tolist()) == list(range(25))
+
+
+# ---------------------------- golden fuzz on the committed fixtures
+def test_symbolic_cholesky_matches_dense_oracle_on_fixtures():
+    """Golden-fuzz `symbolic_cholesky_nnz` against the brute-force
+    dense elimination oracle on every committed real fixture, natural
+    AND under random permutations — real patterns (unsymmetric,
+    pattern-field, skew) stress cases the synthetic fuzz never draws."""
+    from test_fillin_property import _dense_symbolic_nnz
+    rng = np.random.default_rng(0)
+    sss = SuiteSparseSet(FIXTURES)
+    for name in sss.names:
+        A = sss.load(name)
+        if np.iscomplexobj(A.data):
+            A = abs(A)
+        assert fillin.symbolic_cholesky_nnz(A)[0] == \
+            _dense_symbolic_nnz(A), name
+        for _ in range(3):
+            perm = rng.permutation(A.shape[0])
+            assert fillin.symbolic_cholesky_nnz(A, perm)[0] == \
+                _dense_symbolic_nnz(A, perm), name
+
+
+# ------------------------------------------- eval_fillin end to end
+@pytest.mark.slow
+def test_eval_fillin_mtx_end_to_end_with_cache(tmp_path):
+    """Acceptance pin: `eval_fillin` over the committed fixtures
+    produces a table2_eval.json with LU *and* Cholesky columns for PFM
+    + every baseline, fully offline, and a second invocation against
+    the same cache dir is a pure hierarchy-cache hit."""
+    from repro.launch import eval_fillin
+
+    cache = HierarchyCache(tmp_path / "cache")
+    pfm = eval_fillin.train_eval_pfm(smoke=True, hierarchy_cache=cache)
+    cases = make_test_set(source="suitesparse", mtx_dir=FIXTURES)
+
+    out = tmp_path / "t2.json"
+    payload = eval_fillin.run(pfm, cases, out, smoke=True, gate=False,
+                              source=f"suitesparse:{FIXTURES}")
+    first = cache.stats()
+    assert first["misses"] > 0
+
+    payload2 = eval_fillin.run(pfm, cases, out, smoke=True, gate=False,
+                               source=f"suitesparse:{FIXTURES}")
+    second = cache.stats()
+    assert second["hits"] >= len(cases), \
+        "second run must hit the prepared-hierarchy cache"
+    assert second["misses"] == first["misses"], \
+        "second run must not rebuild any hierarchy"
+
+    data = json.loads(out.read_text())
+    methods = {r["method"] for r in data["rows"]}
+    from repro.core.baselines import BASELINES
+    assert methods == set(BASELINES) | {"pfm"}
+    for r in data["rows"]:
+        assert r["mean_chol_fillin_ratio"] is not None
+        assert "mean_fillin_ratio" in r and "n_compared" in r \
+            and "n_failed" in r
+        for c in r["cases"]:
+            assert "chol_fillin_ratio" in c
+    assert data["protocol"]["hierarchy_cache"]["hits"] >= len(cases)
+    del payload, payload2
+
+
+def test_evaluate_empty_survivor_guard():
+    """Satellite regression: when every case fails under some method
+    the survivor set is empty — aggregates must become None with
+    n_compared=0 (not crash on an empty mean) and the gate must be
+    skipped (None), not silently pass/fail."""
+    from repro.launch import eval_fillin
+
+    # structurally singular: a zero row/column — splu fails under
+    # every symmetric permutation
+    A = sp.csr_matrix(np.array([[1.0, 0, 0],
+                                [0, 0.0, 0],
+                                [0, 0, 1.0]]))
+    cases = [("Other", A)]
+    perms = {"natural": [np.arange(3)], "pfm": [np.array([2, 1, 0])]}
+    order_s = {"natural": 0.0, "pfm": 0.0}
+    rows = eval_fillin.evaluate(cases, perms, order_s)
+    for r in rows:
+        assert r["n_failed"] == 1 and r["n_compared"] == 0
+        assert r["mean_fillin_ratio"] is None
+        assert r["mean_fillin"] is None
+        # the Cholesky column still aggregates: symbolic, never fails
+        assert r["mean_chol_fillin_ratio"] is not None
+
+
+@pytest.mark.slow
+def test_run_gate_skipped_on_empty_survivors(tmp_path, capsys):
+    """run() with an all-failing case set records
+    pfm_beats_natural=None and warns loudly instead of raising."""
+    from repro.core.admm import PFMConfig
+    from repro.core.pfm import PFM
+    from repro.launch import eval_fillin
+
+    # zeroed row+column => structurally singular under EVERY symmetric
+    # permutation, so the survivor set is empty for all methods
+    A = grid_2d(4, seed=0).tolil()
+    A[5, :] = 0
+    A[:, 5] = 0
+    A = A.tocsr()
+    A.eliminate_zeros()
+    pfm = PFM(PFMConfig(n_admm=2, n_sinkhorn=6), seed=0,
+              x_mode="random")
+    payload = eval_fillin.run(pfm, [("Other", A)],
+                              tmp_path / "t2.json", smoke=True)
+    assert payload["pfm_beats_natural"] is None
+    assert payload["protocol"]["n_compared"] == 0
+    assert "SKIPPED" in capsys.readouterr().out
