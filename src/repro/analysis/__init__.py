@@ -1,0 +1,21 @@
+"""Static-analysis subsystem over lowered jaxprs and compiled HLO
+(DESIGN.md §14).
+
+Four analyzers share the program-walking core in `walk`:
+
+* `transients`  — max live result shape per loop body vs budget
+* `collectives` — psum/ppermute/all-gather census per ADMM iteration,
+                  reconciled against the analytic comm model
+* `dtypes`      — f32-upcast / f64-leakage lint over the jaxpr
+* `contracts`   — ast lint of the Pallas kernel contracts and the
+                  compile-cache registry (no import-time execution)
+
+`python -m repro.analysis --check` audits every registered program
+(launch/pfm_step.ANALYSIS_PROGRAMS) against the committed budget
+manifests under `analysis/budgets/` and exits nonzero on regression —
+this is the CI gate.
+
+Import note: submodules that need jax import it lazily or at their own
+import time; this package root stays import-light so the `contracts`
+ast lint can run without touching an accelerator backend.
+"""

@@ -1,0 +1,109 @@
+"""`python -m repro.analysis` — the program auditor CLI / CI gate.
+
+Default run audits every registered program (launch/pfm_step.
+PFM_ANALYSIS_PROGRAMS), writes experiments/analysis/<program>.json, and
+prints a one-line summary per program. `--check` additionally compares
+each report (and the ast lints) against the committed budget manifests
+and exits nonzero on any regression — this is the CI gate
+(DESIGN.md §14).
+
+The 2-D programs need >= 4 devices; run under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (set as a default
+below, before jax initializes, when no real backend is configured).
+"""
+from __future__ import annotations
+
+import os
+
+# Device-count defaults must land before jax initializes its backend.
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import sys       # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static auditor for registered PFM programs")
+    ap.add_argument("--check", action="store_true",
+                    help="gate against the committed budget manifests; "
+                         "exit nonzero on any regression")
+    ap.add_argument("--programs", default=None,
+                    help="comma-separated subset of registered "
+                         "programs (default: all)")
+    ap.add_argument("--out", default=os.path.join("experiments",
+                                                  "analysis"),
+                    help="report output directory")
+    ap.add_argument("--budgets", default=None,
+                    help="override the budget-manifest directory")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.analysis import audit, contracts, programs
+
+    names = list(programs.PROGRAMS)
+    if args.programs:
+        names = [s.strip() for s in args.programs.split(",") if
+                 s.strip()]
+        unknown = [s for s in names if s not in programs.PROGRAMS]
+        if unknown:
+            print(f"unknown programs: {unknown} "
+                  f"(registered: {list(programs.PROGRAMS)})")
+            return 2
+
+    os.makedirs(args.out, exist_ok=True)
+    ndev = len(jax.devices())
+    failures = []
+
+    # Program-independent ast lints first: cheap, and a contract
+    # violation should fail fast before any 20 s compile.
+    lint = contracts.run(".")
+    for f in lint["kernel_findings"] + lint["compile_cache_findings"]:
+        failures.append(f"[{f['check']}] {f['file']}:{f['name']}: "
+                        f"{f['message']}")
+    with open(os.path.join(args.out, "contracts.json"), "w") as fh:
+        json.dump(lint, fh, indent=1)
+    print(f"contracts: {lint['total_findings']} findings")
+
+    for name in names:
+        need = programs.devices_required(programs.PROGRAMS[name])
+        if ndev < need:
+            print(f"{name}: SKIPPED (needs {need} devices, "
+                  f"have {ndev})")
+            continue
+        report = audit.audit_program(name)
+        with open(os.path.join(args.out, f"{name}.json"), "w") as fh:
+            json.dump(report, fh, indent=1)
+        per_iter = report["collectives"]["per_iteration"]
+        cm = report["comm_model"]
+        rel = f" model-err={cm['rel_err']:.1%}" if cm else ""
+        print(f"{name}: max-loop-result="
+              f"{report['transients']['max_loop_result_bytes']} B  "
+              f"full-in-loop="
+              f"{report['transients'].get('full_shape_results_in_loop')}"
+              f"  comm/iter={per_iter['total_bytes']:.0f} B{rel}")
+        if args.check:
+            budget = audit.load_budget(name, args.budgets)
+            if budget is None:
+                failures.append(f"{name}: no budget manifest "
+                                f"(src/repro/analysis/budgets/"
+                                f"{name}.json)")
+            else:
+                failures.extend(audit.check_report(report, budget))
+
+    if args.check:
+        if failures:
+            print(f"\nFAIL: {len(failures)} budget regression(s)")
+            for line in failures:
+                print(f"  - {line}")
+            return 1
+        print("\nOK: all audited programs within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,132 @@
+"""Auditor orchestration: registered program -> findings report ->
+budget gate (DESIGN.md §14).
+
+`audit_program` runs the three compiled-program analyzers (transients,
+collective census, dtype flow) plus the analytic-model reconciliation
+over one registry row and returns a JSON-serializable report;
+`check_report` compares a report against its committed budget manifest
+(src/repro/analysis/budgets/<program>.json) and returns the list of
+regressions (empty = gate passes). The ast lints (kernel contracts,
+compile-cache registry) are program-independent and run once per
+invocation via `contracts.run`.
+
+Budget manifest keys (all optional — an absent key is not checked):
+
+  max_loop_result_bytes          ceiling on the largest single result
+                                 materialized inside any loop body
+  full_shape_results_in_loop_max ceiling on full dense-state (B, n, n)
+                                 results inside loop bodies (0 pins the
+                                 SUMMA tile-transient invariant; gather
+                                 documents its measured count)
+  collective_counts_per_iteration  exact per-kind count pins for the
+                                 main ADMM loop body (count drift means
+                                 a collective was added or fused away)
+  collective_bytes_per_iteration_max  ceiling on per-iteration received
+                                 bytes
+  f64_values_max                 ceiling on f64 values in the jaxpr
+  comm_model_rel_err_max         ceiling on |census - analytic| /
+                                 analytic for programs the model covers
+
+Intentional regressions are accepted by editing the manifest in the
+same PR that changes the program, with the rationale in the PR text.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+from repro.analysis import collectives, comm_model, dtypes, programs, \
+    transients
+
+BUDGET_DIR = os.path.join(os.path.dirname(__file__), "budgets")
+
+
+def audit_program(name: str) -> dict:
+    """Trace, compile, and analyze one registered program."""
+    traced = programs.build(name)
+    report = {"program": name,
+              "spec": dict(programs.PROGRAMS[name]),
+              "dtypes": dtypes.audit_jaxpr(traced.jaxpr)}
+    compiled = traced.lower().compile()
+    txt = compiled.as_text()
+    report["transients"] = transients.audit(
+        txt, full_shape=programs.full_shape_dims(name))
+    census = collectives.census_per_iteration(txt)
+    report["collectives"] = census
+    try:
+        report["temp_bytes"] = int(
+            compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:
+        report["temp_bytes"] = None
+    analytic = programs.analytic_bytes_per_iter(name)
+    if analytic is None:
+        report["comm_model"] = None
+    else:
+        measured = census["per_iteration"]["total_bytes"]
+        report["comm_model"] = {
+            "analytic_bytes_per_iter": analytic,
+            "census_bytes_per_iter": measured,
+            "rel_err": round(
+                comm_model.relative_error(measured, analytic), 4),
+        }
+    return report
+
+
+def load_budget(name: str,
+                budget_dir: Optional[str] = None) -> Optional[dict]:
+    path = os.path.join(budget_dir or BUDGET_DIR, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_report(report: dict, budget: dict) -> List[str]:
+    """Budget comparison; returns human-readable regression lines."""
+    bad: List[str] = []
+    name = report["program"]
+    tr = report["transients"]
+
+    cap = budget.get("max_loop_result_bytes")
+    if cap is not None and tr["max_loop_result_bytes"] > cap:
+        bad.append(
+            f"{name}: max loop-body result "
+            f"{tr['max_loop_result_bytes']} B exceeds budget {cap} B "
+            f"(top: {tr['top_loop_results'][:1]})")
+
+    cap = budget.get("full_shape_results_in_loop_max")
+    if cap is not None and \
+            tr.get("full_shape_results_in_loop", 0) > cap:
+        bad.append(
+            f"{name}: {tr['full_shape_results_in_loop']} full-shape "
+            f"results inside loop bodies exceeds budget {cap}")
+
+    per_iter = report["collectives"]["per_iteration"]
+    pins = budget.get("collective_counts_per_iteration")
+    if pins is not None:
+        got = {k: int(v) for k, v in per_iter["counts"].items()}
+        want = {k: int(v) for k, v in pins.items()}
+        if got != want:
+            bad.append(f"{name}: per-iteration collective counts "
+                       f"{got} != pinned {want}")
+
+    cap = budget.get("collective_bytes_per_iteration_max")
+    if cap is not None and per_iter["total_bytes"] > cap:
+        bad.append(
+            f"{name}: per-iteration collective bytes "
+            f"{per_iter['total_bytes']:.0f} exceed budget {cap}")
+
+    cap = budget.get("f64_values_max")
+    if cap is not None and report["dtypes"]["f64_values"] > cap:
+        bad.append(f"{name}: {report['dtypes']['f64_values']} f64 "
+                   f"values in the jaxpr exceed budget {cap}")
+
+    cap = budget.get("comm_model_rel_err_max")
+    cm = report.get("comm_model")
+    if cap is not None and cm is not None and cm["rel_err"] > cap:
+        bad.append(
+            f"{name}: census {cm['census_bytes_per_iter']:.0f} B/iter "
+            f"vs analytic {cm['analytic_bytes_per_iter']:.0f} B/iter "
+            f"(rel err {cm['rel_err']:.3f} > {cap})")
+    return bad

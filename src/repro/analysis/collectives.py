@@ -1,0 +1,198 @@
+"""Collective census: counts and bytes per ADMM iteration.
+
+The census is a **recursive weighted walk** of the compiled HLO's call
+graph: a collective inside a nested while body counts once per trip
+(XLA annotates `known_trip_count` on every counted loop — the Sinkhorn
+fori, the SUMMA ring loops, the encoder scatter scans), a collective
+inside a conditional counts as the byte-wise worst branch, and
+everything else (fusions, calls, reducers) counts once. Scoping the
+walk to the body of the **main training while** (the top-level while
+with the largest weighted collective traffic — the ADMM fori_loop)
+yields the per-iteration census that `comm_model` must reconcile with.
+
+Byte convention — **bytes received per device**, the same convention as
+the analytic model and `benchmarks/bench_scaling.py`:
+
+  all-gather         out * (G-1)/G      (ring; G = replica-group size)
+  all-reduce         out * 2*(G-1)/G    (ring reduce-scatter+all-gather)
+  reduce-scatter     out * (G-1)        (out is the post-scatter shard)
+  all-to-all         out * (G-1)/G
+  collective-permute out                (one neighbor's full message)
+
+Shapes in the optimized SPMD module are per-device, so these are
+per-device quantities; tuple-shaped (combined) collectives sum their
+element bytes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import walk
+
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+
+KINDS = walk.COLLECTIVE_OPCODES
+
+
+def _trip_count(line: str) -> Optional[int]:
+    m = _TRIP_RE.search(line)
+    return int(m.group(1)) if m else None
+
+
+def received_bytes(ins: walk.Instruction) -> float:
+    """Per-device received bytes for one collective instruction under
+    the ring convention documented in the module docstring."""
+    g = ins.replica_group_size
+    b = ins.bytes
+    op = ins.opcode
+    if op == "all-gather":
+        return b * (g - 1) / g
+    if op == "all-reduce":
+        return b * 2 * (g - 1) / g
+    if op == "reduce-scatter":
+        return b * (g - 1)
+    if op == "all-to-all":
+        return b * (g - 1) / g
+    if op == "collective-permute":
+        return float(b)
+    return 0.0
+
+
+class Census:
+    """Per-kind {count, bytes} accumulator (floats: conditional
+    branches are byte-wise maxed, while bodies trip-multiplied)."""
+
+    def __init__(self):
+        self.count: Dict[str, float] = {k: 0.0 for k in KINDS}
+        self.bytes: Dict[str, float] = {k: 0.0 for k in KINDS}
+
+    def add(self, other: "Census", weight: float = 1.0) -> "Census":
+        for k in KINDS:
+            self.count[k] += weight * other.count[k]
+            self.bytes[k] += weight * other.bytes[k]
+        return self
+
+    def max_(self, other: "Census") -> "Census":
+        if other.total_bytes() > self.total_bytes():
+            self.count, self.bytes = dict(other.count), dict(other.bytes)
+        return self
+
+    def total_bytes(self) -> float:
+        return sum(self.bytes.values())
+
+    def total_count(self) -> float:
+        return sum(self.count.values())
+
+    def to_dict(self) -> dict:
+        return {
+            "counts": {k: round(self.count[k], 3)
+                       for k in KINDS if self.count[k]},
+            "bytes": {k: round(self.bytes[k], 1)
+                      for k in KINDS if self.bytes[k]},
+            "total_count": round(self.total_count(), 3),
+            "total_bytes": round(self.total_bytes(), 1),
+        }
+
+
+def _census_of(name: str, comps: Dict[str, walk.Computation],
+               memo: Dict[str, Census]) -> Census:
+    if name in memo:
+        return memo[name]
+    memo[name] = Census()  # cycle guard (HLO call graphs are DAGs)
+    out = Census()
+    comp = comps.get(name)
+    if comp is None:
+        return out
+    for ins in comp.instructions:
+        if ins.opcode in KINDS:
+            out.count[ins.opcode] += 1
+            out.bytes[ins.opcode] += received_bytes(ins)
+            continue
+        if ins.opcode == "while":
+            trip = _trip_count(ins.line)
+            trip = 1 if trip is None else trip
+            for sub in ins.called:  # body and condition
+                out.add(_census_of(sub, comps, memo), weight=trip)
+            continue
+        if ins.opcode == "conditional":
+            branch = Census()
+            for sub in ins.called:
+                branch.max_(_census_of(sub, comps, memo))
+            out.add(branch)
+            continue
+        for sub in ins.called:  # fusion / call / reducer / sort / map
+            out.add(_census_of(sub, comps, memo))
+    memo[name] = out
+    return out
+
+
+def entry_name(txt: str) -> Optional[str]:
+    for line in txt.splitlines():
+        if line.startswith("ENTRY"):
+            return line.split()[1].lstrip("%")
+    return None
+
+
+def top_level_whiles(txt: str) -> List[Tuple[str, int, Census]]:
+    """(body name, trip count, per-trip census) for every while
+    reachable from ENTRY without crossing another while body."""
+    comps = walk.parse_module(txt)
+    memo: Dict[str, Census] = {}
+    root = entry_name(txt)
+    out: List[Tuple[str, int, Census]] = []
+    seen = set()
+    stack = [root] if root else []
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instructions:
+            if ins.opcode == "while":
+                trip = _trip_count(ins.line) or 1
+                body = ins.while_body
+                if body:
+                    out.append((body, trip,
+                                _census_of(body, comps, memo)))
+            else:
+                stack.extend(ins.called)
+    return out
+
+
+def main_loop(txt: str) -> Optional[Tuple[str, int, Census]]:
+    """The training loop: the top-level while with the largest per-trip
+    collective traffic (the ADMM fori_loop in every registered trainer;
+    the encoder scatter scans carry no collectives)."""
+    cands = top_level_whiles(txt)
+    if not cands:
+        return None
+    best = max(cands, key=lambda t: (t[2].total_bytes(),
+                                     t[2].total_count()))
+    if best[2].total_count() == 0:
+        return None
+    return best
+
+
+def census_per_iteration(txt: str) -> dict:
+    """Findings dict: the per-ADMM-iteration census (main-loop body,
+    nested trips weighted), the whole-program census, and the main
+    loop's identity/trip count for cross-checking against cfg.n_admm."""
+    comps = walk.parse_module(txt)
+    memo: Dict[str, Census] = {}
+    loop = main_loop(txt)
+    root = entry_name(txt)
+    whole = _census_of(root, comps, {}) if root else Census()
+    out = {
+        "whole_program": whole.to_dict(),
+        "main_loop": None,
+        "per_iteration": Census().to_dict(),
+    }
+    if loop is not None:
+        body, trip, cen = loop
+        out["main_loop"] = {"body": body, "trip_count": trip}
+        out["per_iteration"] = cen.to_dict()
+    return out

@@ -1,0 +1,62 @@
+"""Analytic per-device communication model for the 2-D ADMM trainers.
+
+One function, shared with the bench: `comm_bytes_per_iter` reproduces
+the formulas behind the `comm_bytes_per_iter` columns committed to
+experiments/bench_results.json (benchmarks/bench_scaling.py embeds the
+same model in its subprocess cells). The collective census
+(`collectives.census_per_iteration`) measures the compiled HLO; the
+auditor reconciles the two — they must agree within a small tolerance
+or either the model or the program drifted (DESIGN.md §14).
+
+Conventions (all bytes RECEIVED per device, f32):
+
+  gather — the six full-array all_gathers at the loop top plus the
+  exact-Sinkhorn gather and two P A P^T passes dominate, with the
+  one-axis panels of the stripe L-grad on top.
+
+  summa — one-axis panels (gather_cols / row_chunk assembly), (C-1)
+  ring tile hops per contraction, and the psum'd-lse Sinkhorn partials.
+
+  summa+bcsr — same shape, but each ring hop moves the left operand's
+  (nbr, S) slot arrays instead of a dense tile: the hop term scales by
+  block occupancy min(1, slots / nbc).
+
+The model intentionally counts only the O(n²)-and-up terms the bench
+columns were derived from; the census also sees O(n) θ-psums and lse
+partials the model folds into its ±5% tolerance.
+"""
+from __future__ import annotations
+
+F32 = 4.0
+
+
+def comm_bytes_per_iter(n: int, B: int, R: int, C: int, comm_mode: str,
+                        n_sinkhorn: int, slots: int | None = None,
+                        bs: int = 128) -> float:
+    """Analytic bytes received per device per ADMM iteration.
+
+    n: global matrix side; B: bucket size; (R, C): mesh grid;
+    comm_mode: "gather" | "summa"; slots: BCSR carry slots (None for
+    the dense carry); bs: BCSR block side."""
+    full = (1 - 1 / (R * C)) * B * n * n * F32
+    colp = (1 - 1 / R) * B * n * (n / C) * F32
+    rowp = (1 - 1 / C) * B * (n / R) * n * F32
+    t_hop = B * (n / R) * (n / C) * F32
+    if comm_mode == "gather":
+        return 11 * full + 2 * (colp + rowp)
+    if comm_mode != "summa":
+        raise ValueError(f"unknown comm_mode {comm_mode!r}")
+    if slots is not None:
+        nbc = (n / C) / bs
+        t_hop *= min(1.0, slots / nbc)
+    contraction = colp + 2 * rowp + (C - 1) * t_hop
+    lse = n_sinkhorn * 2 * B * n * F32
+    return 8 * contraction + lse
+
+
+def relative_error(measured: float, model: float) -> float:
+    """|measured - model| / model (inf when the model predicts zero
+    but the census saw traffic)."""
+    if model == 0:
+        return 0.0 if measured == 0 else float("inf")
+    return abs(measured - model) / model

@@ -1,0 +1,366 @@
+"""Kernel-contract and compile-cache-registry lints (pure `ast` — no
+import-time execution; this lint must be runnable in environments where
+jax itself cannot initialize).
+
+Kernel contract (DESIGN.md §14): every Pallas kernel in
+`src/repro/kernels/` —
+
+* appears in its module's `KERNEL_CONTRACTS` table (a module-level dict
+  literal; the lint verifies the table against the code, it never
+  trusts it);
+* declares a `custom_vjp` wrapper in kernels/ops.py whose registered
+  backward is the declared oracle — a `ref.py` function (the normal
+  case: backward = jax.vjp of the oracle at the saved inputs) or a
+  named ops.py recomputation (flash attention's chunked backward) —
+  unless the contract says `vjp=None` with a reason (spmm: forward-only,
+  never on a gradient path);
+* guards block divisibility: a `%`-divisibility test in the kernel
+  function itself (assert) or in an ops.py dispatcher that falls back
+  to the oracle on indivisible shapes;
+* passes `num_scalar_prefetch` as a literal int (scalar-prefetch
+  operands are static by construction — a traced value here would
+  silently retrace per step).
+
+Compile-cache registry (satellite of PR 8): every `lru_cache`-wrapped
+factory that builds jitted / shard_map'd programs must enroll with
+`admm._register_compile_cache` so `clear_compile_caches()` can drop it.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional
+
+KERNELS_DIR = os.path.join("src", "repro", "kernels")
+SRC_ROOT = os.path.join("src", "repro")
+
+
+def _parse(path: str) -> ast.Module:
+    with open(path, "r") as f:
+        return ast.parse(f.read(), filename=path)
+
+
+def _functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {node.name: node for node in ast.walk(tree)
+            if isinstance(node, ast.FunctionDef)}
+
+
+def _calls_name(fn: ast.AST, name: str) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id == name:
+                return True
+            if isinstance(f, ast.Attribute) and f.attr == name:
+                return True
+    return False
+
+
+def _references_attr(fn: ast.AST, value: str, attr: str) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr == attr and \
+                isinstance(node.value, ast.Name) and node.value.id == value:
+            return True
+    return False
+
+
+def _has_mod_guard(fn: ast.FunctionDef) -> bool:
+    """A `%`-divisibility test: x % b compared against 0 anywhere in an
+    assert / if / boolean condition."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Compare) and \
+                isinstance(node.left, ast.BinOp) and \
+                isinstance(node.left.op, ast.Mod):
+            return True
+    return False
+
+
+def _decorator_names(fn: ast.FunctionDef) -> List[str]:
+    out = []
+    for dec in fn.decorator_list:
+        node = dec
+        while isinstance(node, ast.Call):
+            node = node.func
+        if isinstance(node, ast.Attribute):
+            out.append(node.attr)
+        elif isinstance(node, ast.Name):
+            out.append(node.id)
+    return out
+
+
+def _decorated_with(fn: ast.FunctionDef, name: str) -> bool:
+    """True if `name` appears anywhere in a decorator expression —
+    covers both `@jax.custom_vjp` and the partial form
+    `@functools.partial(jax.custom_vjp, nondiff_argnums=...)`, where
+    the decorator head is `partial` and custom_vjp rides in its args."""
+    for dec in fn.decorator_list:
+        for node in ast.walk(dec):
+            if isinstance(node, ast.Attribute) and node.attr == name:
+                return True
+            if isinstance(node, ast.Name) and node.id == name:
+                return True
+    return False
+
+
+def _module_table(tree: ast.Module, name: str) -> Optional[dict]:
+    """A module-level dict-literal assignment `name = {...}`, parsed
+    with ast.literal_eval (annotations are data, not code)."""
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == name:
+                try:
+                    return ast.literal_eval(node.value)
+                except (ValueError, SyntaxError):
+                    return None
+    return None
+
+
+def _finding(check: str, path: str, name: str, message: str) -> dict:
+    return {"check": check, "file": path, "name": name,
+            "message": message}
+
+
+# --------------------------- kernel contracts ---------------------------
+
+def lint_kernels(repo_root: str = ".") -> List[dict]:
+    kdir = os.path.join(repo_root, KERNELS_DIR)
+    findings: List[dict] = []
+    ops_path = os.path.join(kdir, "ops.py")
+    ref_path = os.path.join(kdir, "ref.py")
+    ops_tree, ref_tree = _parse(ops_path), _parse(ref_path)
+    ops_fns, ref_fns = _functions(ops_tree), _functions(ref_tree)
+
+    # X.defvjp(fwd, bwd) registrations in ops.py
+    defvjp: Dict[str, tuple] = {}
+    for node in ast.walk(ops_tree):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "defvjp" and \
+                isinstance(node.func.value, ast.Name) and \
+                len(node.args) == 2:
+            names = tuple(a.id for a in node.args
+                          if isinstance(a, ast.Name))
+            if len(names) == 2:
+                defvjp[node.func.value.id] = names
+
+    for fname in sorted(os.listdir(kdir)):
+        if not fname.endswith(".py") or fname in ("ops.py", "ref.py",
+                                                  "__init__.py"):
+            continue
+        path = os.path.join(kdir, fname)
+        rel = os.path.join(KERNELS_DIR, fname)
+        tree = _parse(path)
+        fns = _functions(tree)
+        kernels = [n for n, fn in fns.items()
+                   if _calls_name(fn, "pallas_call")]
+        if not kernels:
+            continue
+        table = _module_table(tree, "KERNEL_CONTRACTS")
+        if table is None:
+            findings.append(_finding(
+                "kernel-contract", rel, fname,
+                "module defines Pallas kernels but no KERNEL_CONTRACTS "
+                "table"))
+            continue
+        for kname in sorted(kernels):
+            c = table.get(kname)
+            if c is None:
+                findings.append(_finding(
+                    "kernel-contract", rel, kname,
+                    "Pallas kernel missing from KERNEL_CONTRACTS"))
+                continue
+            vjp = c.get("vjp")
+            if vjp is None:
+                if not c.get("reason"):
+                    findings.append(_finding(
+                        "kernel-contract", rel, kname,
+                        "vjp=None requires a documented reason"))
+            else:
+                findings.extend(_check_vjp(rel, kname, c, vjp, ops_fns,
+                                           ref_fns, defvjp))
+            # block divisibility: guard in the kernel itself or in any
+            # ops.py function that dispatches to it (directly or via
+            # its custom_vjp wrapper)
+            guarded = _has_mod_guard(fns[kname]) or any(
+                _has_mod_guard(f) for f in ops_fns.values()
+                if _calls_name(f, kname) or
+                (vjp and _calls_name(f, vjp)))
+            if not guarded:
+                findings.append(_finding(
+                    "block-divisibility", rel, kname,
+                    "no %-divisibility guard in the kernel or its "
+                    "ops.py dispatcher"))
+        # scalar prefetch must be a literal int everywhere in the module
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                f = node.func
+                is_psgs = (isinstance(f, ast.Attribute) and
+                           f.attr == "PrefetchScalarGridSpec") or \
+                          (isinstance(f, ast.Name) and
+                           f.id == "PrefetchScalarGridSpec")
+                if not is_psgs:
+                    continue
+                for kw in node.keywords:
+                    if kw.arg == "num_scalar_prefetch" and not (
+                            isinstance(kw.value, ast.Constant) and
+                            isinstance(kw.value.value, int)):
+                        findings.append(_finding(
+                            "scalar-prefetch-static", rel,
+                            f"line {node.lineno}",
+                            "num_scalar_prefetch must be a literal "
+                            "int"))
+    return findings
+
+
+def _check_vjp(rel: str, kname: str, contract: dict, vjp: str,
+               ops_fns: Dict[str, ast.FunctionDef],
+               ref_fns: Dict[str, ast.FunctionDef],
+               defvjp: Dict[str, tuple]) -> List[dict]:
+    findings: List[dict] = []
+    wrapper = ops_fns.get(vjp)
+    if wrapper is None:
+        return [_finding("kernel-contract", rel, kname,
+                         f"declared vjp {vjp!r} not found in ops.py")]
+    if not _decorated_with(wrapper, "custom_vjp"):
+        findings.append(_finding(
+            "kernel-contract", rel, kname,
+            f"{vjp} is not decorated with jax.custom_vjp"))
+    if not _calls_name(wrapper, kname):
+        findings.append(_finding(
+            "kernel-contract", rel, kname,
+            f"{vjp} does not call the kernel {kname}"))
+    if vjp not in defvjp:
+        findings.append(_finding(
+            "kernel-contract", rel, kname,
+            f"{vjp}.defvjp(fwd, bwd) registration not found"))
+        return findings
+    bwd = ops_fns.get(defvjp[vjp][1])
+    oracle = contract.get("oracle")
+    if not oracle:
+        findings.append(_finding(
+            "kernel-contract", rel, kname,
+            "contract declares a vjp but no oracle"))
+        return findings
+    if oracle.startswith("ref."):
+        short = oracle.split(".", 1)[1]
+        if short not in ref_fns:
+            findings.append(_finding(
+                "kernel-contract", rel, kname,
+                f"declared oracle {oracle!r} not found in ref.py"))
+        if bwd is None or not _references_attr(bwd, "ref", short):
+            findings.append(_finding(
+                "kernel-contract", rel, kname,
+                f"backward of {vjp} does not reference {oracle}"))
+    else:
+        if oracle not in ops_fns:
+            findings.append(_finding(
+                "kernel-contract", rel, kname,
+                f"declared oracle {oracle!r} not found in ops.py"))
+        if bwd is None or not (bwd.name == oracle or
+                               _calls_name(bwd, oracle)):
+            findings.append(_finding(
+                "kernel-contract", rel, kname,
+                f"backward of {vjp} does not use {oracle!r}"))
+        if not contract.get("reason"):
+            findings.append(_finding(
+                "kernel-contract", rel, kname,
+                "a non-ref oracle requires a documented reason"))
+    return findings
+
+
+# ----------------------- compile-cache registry -------------------------
+
+def _builds_jitted_programs(fn: ast.FunctionDef) -> bool:
+    """The factory produces compiled-program handles: it references
+    jax.jit or the shard_map constructor."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr == "jit" and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id == "jax":
+            return True
+        if isinstance(node, ast.Name) and node.id == "get_shard_map":
+            return True
+        if isinstance(node, ast.Attribute) and \
+                node.attr == "get_shard_map":
+            return True
+    return False
+
+
+def _call_chain_has(node: ast.AST, name: str) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            f = sub.func
+            if isinstance(f, ast.Name) and f.id == name:
+                return True
+            if isinstance(f, ast.Attribute) and f.attr == name:
+                return True
+    return False
+
+
+def lint_compile_caches(repo_root: str = ".",
+                        src_root: Optional[str] = None) -> List[dict]:
+    """Every lru_cache-wrapped jitted factory must enroll with
+    admm._register_compile_cache (decorator above the lru_cache, or a
+    wrapping call for assignment-style caches)."""
+    root = src_root or os.path.join(repo_root, SRC_ROOT)
+    findings: List[dict] = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        if "__pycache__" in dirpath:
+            continue
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, repo_root)
+            tree = _parse(path)
+            fns = _functions(tree)
+            # decorator style: @lru_cache on a def
+            for name, fn in fns.items():
+                decs = _decorator_names(fn)
+                if "lru_cache" not in decs and "cache" not in decs:
+                    continue
+                if not _builds_jitted_programs(fn):
+                    continue
+                if "_register_compile_cache" not in decs and \
+                        "register_compile_cache" not in decs:
+                    findings.append(_finding(
+                        "compile-cache-registry", rel, name,
+                        "lru_cache-wrapped jitted factory is not "
+                        "enrolled with admm._register_compile_cache "
+                        "(clear_compile_caches() would miss it)"))
+            # assignment style: name = lru_cache(...)(factory)
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Assign) or \
+                        not isinstance(node.value, ast.Call):
+                    continue
+                val = node.value
+                if not _call_chain_has(val, "lru_cache"):
+                    continue
+                inner = [a.id for a in ast.walk(val)
+                         if isinstance(a, ast.Name) and a.id in fns]
+                if not any(_builds_jitted_programs(fns[i])
+                           for i in inner):
+                    continue
+                if not _call_chain_has(val, "_register_compile_cache"):
+                    tname = node.targets[0]
+                    tname = getattr(tname, "id", "<assign>")
+                    findings.append(_finding(
+                        "compile-cache-registry", rel, tname,
+                        "lru_cache-wrapped jitted factory is not "
+                        "enrolled with admm._register_compile_cache"))
+    return findings
+
+
+def run(repo_root: str = ".") -> dict:
+    """Both lints; zero findings is the (implicit) budget — contract
+    violations are always regressions, there is no manifest knob."""
+    kernels = lint_kernels(repo_root)
+    caches = lint_compile_caches(repo_root)
+    return {"kernel_findings": kernels,
+            "compile_cache_findings": caches,
+            "total_findings": len(kernels) + len(caches)}

@@ -1,0 +1,72 @@
+"""Dtype-flow lint over traced jaxprs.
+
+Walks every equation of a program's jaxpr — including while/cond/scan/
+pjit/shard_map sub-jaxprs via `walk.jaxpr_eqns` — and reports:
+
+* `f64_values`    — count of float64 results anywhere (any nonzero
+                    value is leakage: nothing in this codebase is
+                    meant to compute in double precision, and one
+                    stray Python float in a jnp op doubles a buffer);
+* `converts`      — convert_element_type histogram by "src->dst" pair
+                    (bf16->f32 inside a bf16 program is the silent
+                    upcast the budget pins; f32->bf16 is the expected
+                    matmul_dtype cast);
+* `dots`          — dot_general histogram by "lhs x rhs -> out" dtype
+                    signature: a bf16 program regressing to f32xf32
+                    dots shows up here even when outputs stay f32
+                    (accumulation is deliberately f32 — DESIGN.md §4).
+
+The jaxpr (not the optimized HLO) is the right artifact: XLA's own
+fusion rewrites element types freely downstream, but what the *traced
+program* asks for is what the source controls.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.analysis import walk
+
+_SHORT = {
+    "float64": "f64", "float32": "f32", "float16": "f16",
+    "bfloat16": "bf16", "int64": "s64", "int32": "s32",
+    "int16": "s16", "int8": "s8", "uint64": "u64", "uint32": "u32",
+    "uint16": "u16", "uint8": "u8", "bool": "pred",
+    "complex64": "c64", "complex128": "c128", "float0": "f0",
+}
+
+
+def _short(dtype) -> str:
+    return _SHORT.get(str(dtype), str(dtype))
+
+
+def _aval_dtype(var):
+    aval = getattr(var, "aval", None)
+    return getattr(aval, "dtype", None)
+
+
+def audit_jaxpr(closed_jaxpr) -> dict:
+    f64 = 0
+    converts: Dict[str, int] = {}
+    dots: Dict[str, int] = {}
+    for eqn in walk.jaxpr_eqns(closed_jaxpr):
+        for v in eqn.outvars:
+            dt = _aval_dtype(v)
+            if dt is not None and str(dt) == "float64":
+                f64 += 1
+        name = eqn.primitive.name
+        if name == "convert_element_type":
+            src = _short(_aval_dtype(eqn.invars[0]))
+            dst = _short(_aval_dtype(eqn.outvars[0]))
+            key = f"{src}->{dst}"
+            converts[key] = converts.get(key, 0) + 1
+        elif name == "dot_general":
+            lhs = _short(_aval_dtype(eqn.invars[0]))
+            rhs = _short(_aval_dtype(eqn.invars[1]))
+            out = _short(_aval_dtype(eqn.outvars[0]))
+            key = f"{lhs}x{rhs}->{out}"
+            dots[key] = dots.get(key, 0) + 1
+    return {
+        "f64_values": f64,
+        "converts": dict(sorted(converts.items())),
+        "dots": dict(sorted(dots.items())),
+    }

@@ -1,0 +1,180 @@
+"""Registered-program lowering builders for the auditor.
+
+The registry rows live in `launch/pfm_step.PFM_ANALYSIS_PROGRAMS`
+(next to the dry-run spec tables — one vocabulary of program kinds);
+this module turns a row into a traced jit program the analyzers walk:
+
+    traced = build("train2d_summa")      # jax.stages.Traced
+    traced.jaxpr                         # -> dtypes.audit_jaxpr
+    traced.lower().compile().as_text()   # -> transients / collectives
+
+Every builder traces on ShapeDtypeStructs only (no device arrays), so
+building is cheap; compiling the 2-D trainers takes ~20-30 s each on
+8 simulated host devices. The per-kind builders are also the single
+implementation the HLO-pinning tests lower through
+(tests/test_admm_2d.py's `_lower_2d_cell` is a thin wrapper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import admm as admm_mod
+from repro.core.admm import PFMConfig
+from repro.core.pfm import PFM
+from repro.kernels import ops as kops
+from repro.launch import pfm_step
+from repro.launch.mesh import make_data_mesh, make_mesh2d
+from repro.optim import adam
+
+from repro.analysis import comm_model
+
+# One config for every registered program: two ADMM iterations (so the
+# main loop is a real while, not unrolled) and the bench's n_sinkhorn=8.
+ANALYSIS_CFG = PFMConfig(n_admm=2, n_sinkhorn=8, lr=1e-3)
+
+PROGRAMS = pfm_step.PFM_ANALYSIS_PROGRAMS
+
+
+def _params_opt_structs(cfg: PFMConfig, repl=None):
+    pfm = PFM(cfg, seed=0, x_mode="random")
+
+    def st(x):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=repl)
+
+    p_sh = jax.tree_util.tree_map(st, pfm.state_dict()["params"])
+    o_sh = jax.tree_util.tree_map(st, pfm.opt_state)
+    return p_sh, o_sh
+
+
+def trace_train_2d(cfg: PFMConfig, n: int, mesh, comm_mode: str,
+                   carry: str = "dense", B: int = 1):
+    """Trace one admm_train_2d bucket (synthetic hierarchy) for
+    compile-time memory / HLO / jaxpr inspection."""
+    repl = NamedSharding(mesh, P())
+    tile = NamedSharding(mesh, P(None, "row", "col"))
+
+    def b_struct(s, sharding=repl):
+        return jax.ShapeDtypeStruct((B,) + s.shape, s.dtype,
+                                    sharding=sharding)
+
+    p_sh, o_sh = _params_opt_structs(cfg, repl)
+    levels = jax.tree_util.tree_map(
+        b_struct, pfm_step._synthetic_levels(n))
+    fn = jax.jit(admm_mod.train_2d_fn(cfg, adam(cfg.lr), mesh,
+                                      ("row", "col"), None, comm_mode,
+                                      carry))
+    with kops.mesh_scope(mesh):
+        return fn.trace(
+            p_sh, o_sh,
+            b_struct(jax.ShapeDtypeStruct((n, n), jnp.float32), tile),
+            levels,
+            b_struct(jax.ShapeDtypeStruct((n, 1), jnp.float32)),
+            b_struct(jax.ShapeDtypeStruct((n,), jnp.float32)),
+            jax.ShapeDtypeStruct((B, 2), jnp.uint32, sharding=repl),
+            jax.ShapeDtypeStruct((B,), jnp.float32, sharding=repl))
+
+
+def trace_train_batch(cfg: PFMConfig, n: int, B: int, mesh,
+                      axis: str = "data"):
+    """Trace the data-parallel bucketed trainer (DESIGN.md §8): every
+    per-matrix tensor leads with B split over the data axis, θ and opt
+    state replicated, batch_weight a (B,) data-sharded 0/1 vector."""
+    lead = NamedSharding(mesh, P(axis))
+    repl = NamedSharding(mesh, P())
+
+    def b_struct(s, sharding=lead):
+        return jax.ShapeDtypeStruct((B,) + s.shape, s.dtype,
+                                    sharding=sharding)
+
+    p_sh, o_sh = _params_opt_structs(cfg, repl)
+    levels = jax.tree_util.tree_map(
+        b_struct, pfm_step._synthetic_levels(n))
+    fn = jax.jit(admm_mod.sharded_train_fn(cfg, adam(cfg.lr), mesh,
+                                           axis))
+    with kops.mesh_scope(mesh):
+        return fn.trace(
+            p_sh, o_sh,
+            b_struct(jax.ShapeDtypeStruct((n, n), jnp.float32)),
+            levels,
+            b_struct(jax.ShapeDtypeStruct((n, 1), jnp.float32)),
+            b_struct(jax.ShapeDtypeStruct((n,), jnp.float32)),
+            b_struct(jax.ShapeDtypeStruct((2,), jnp.uint32)),
+            jax.ShapeDtypeStruct((B,), jnp.float32, sharding=lead))
+
+
+def trace_infer_bucket(cfg: PFMConfig, n: int, B: int):
+    """Trace a B-bucket of the inference path (GNN scores + argsort;
+    the dense ADMM state never materializes — Table 1's O(GNN)
+    complexity claim is what the transient audit pins here)."""
+    infer = pfm_step.make_pfm_infer_step(cfg)
+    binfer = jax.vmap(infer, in_axes=(None, 0, 0, 0))
+    p_sh, _ = _params_opt_structs(cfg)
+
+    def b_struct(s):
+        return jax.ShapeDtypeStruct((B,) + s.shape, s.dtype)
+
+    levels = jax.tree_util.tree_map(
+        b_struct, pfm_step._synthetic_levels(n))
+    return jax.jit(binfer).trace(
+        p_sh, levels,
+        b_struct(jax.ShapeDtypeStruct((n, 1), jnp.float32)),
+        b_struct(jax.ShapeDtypeStruct((n,), jnp.float32)))
+
+
+def program_cfg(spec: dict) -> PFMConfig:
+    cfg = ANALYSIS_CFG
+    if spec.get("bcsr_slots"):
+        cfg = cfg._replace(bcsr_slots=spec["bcsr_slots"])
+    return cfg
+
+
+def devices_required(spec: dict) -> int:
+    if "mesh" in spec:
+        r, c = spec["mesh"]
+        return r * c
+    return spec.get("devices", 1)
+
+
+def build(name: str):
+    """Registry row -> jax.stages.Traced."""
+    spec = PROGRAMS[name]
+    cfg = program_cfg(spec)
+    kind = spec["kind"]
+    if kind == "train_2d":
+        r, c = spec["mesh"]
+        return trace_train_2d(cfg, spec["n"], make_mesh2d(r, c),
+                              spec["comm_mode"], spec.get("carry",
+                                                          "dense"),
+                              spec.get("B", 1))
+    if kind == "train_batch":
+        return trace_train_batch(cfg, spec["n"], spec["B"],
+                                 make_data_mesh(spec["devices"]))
+    if kind == "infer":
+        return trace_infer_bucket(cfg, spec["n"], spec["B"])
+    raise ValueError(f"unknown program kind {kind!r}")
+
+
+def analytic_bytes_per_iter(name: str) -> float | None:
+    """The analytic comm-model prediction for a registered program, or
+    None for programs the model does not cover (the batched trainer's
+    traffic is pure θ-psums; inference has no collectives)."""
+    spec = PROGRAMS[name]
+    if spec["kind"] != "train_2d":
+        return None
+    cfg = program_cfg(spec)
+    r, c = spec["mesh"]
+    return comm_model.comm_bytes_per_iter(
+        spec["n"], spec.get("B", 1), r, c, spec["comm_mode"],
+        cfg.n_sinkhorn, slots=spec.get("bcsr_slots"))
+
+
+def full_shape_dims(name: str) -> tuple | None:
+    """The full (B, n, n) dense-state shape whose presence inside loop
+    bodies the transient audit counts — None for inference (no dense
+    state exists to leak)."""
+    spec = PROGRAMS[name]
+    if spec["kind"] == "infer":
+        return None
+    return (spec.get("B", 1), spec["n"], spec["n"])

@@ -1,0 +1,72 @@
+"""Transient auditor: max live result shape per loop body vs budget.
+
+Generalizes the PR 5 inline HLO walk (`test_summa_no_full_transient_in_
+loop`): over every computation reachable from ANY while body — the
+program's steady state — it records the largest single-instruction
+result and counts instructions whose result materializes the full
+(B, n, n) dense shape. The comm_mode="summa" / carry="bcsr" invariant
+is `full_shape_results_in_loop == 0`; the gather program is *expected*
+to report hundreds (its budget pins the count from above so it cannot
+silently grow further).
+
+Straight-line init/final code (the warm-start noise draw, final metric
+assembly) is deliberately excluded — one full-shape value there is the
+documented exception, not a regression.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from repro.analysis import walk
+
+# opcodes whose "result" is not a materialized buffer of its own
+_NON_MATERIAL = {"parameter", "tuple", "get-tuple-element", "while",
+                 "conditional", "call", "constant", "iota",
+                 "bitcast", "copy-done", "copy-start"}
+
+
+def audit(hlo_text: str, full_shape: Optional[Sequence[int]] = None,
+          top_k: int = 5) -> dict:
+    """Findings over the loop-reachable slice of a compiled module.
+
+    full_shape: the full dense result dims (e.g. (B, n, n)); any
+    instruction in a loop-reachable computation whose result contains
+    an array of exactly these dims counts as a full-shape transient.
+    """
+    reach = walk.loop_reachable(hlo_text)
+    full = tuple(full_shape) if full_shape is not None else None
+    max_bytes, max_ins, max_comp = 0, None, None
+    full_count = 0
+    tops: list = []
+    for comp_name, ins in walk.iter_instructions(reach):
+        if ins.opcode in _NON_MATERIAL:
+            continue
+        if ins.bytes > max_bytes:
+            max_bytes, max_ins, max_comp = ins.bytes, ins, comp_name
+        tops.append((ins.bytes, ins.opcode, ins.shape))
+        if full is not None:
+            for _, dims in walk.shape_dims(ins.shape):
+                if dims == full:
+                    full_count += 1
+    tops.sort(key=lambda t: -t[0])
+    out = {
+        "while_bodies": len(walk.while_bodies(hlo_text)),
+        "loop_reachable_computations": len(reach),
+        "max_loop_result_bytes": int(max_bytes),
+        "top_loop_results": [
+            {"bytes": int(b), "opcode": op, "shape": sh}
+            for b, op, sh in tops[:top_k]],
+    }
+    if max_ins is not None:
+        out["max_loop_result"] = {"opcode": max_ins.opcode,
+                                  "shape": max_ins.shape,
+                                  "computation": max_comp[:80]}
+    if full is not None:
+        out["full_shape"] = list(full)
+        out["full_shape_results_in_loop"] = int(full_count)
+    return out
+
+
+def full_shape_count(hlo_text: str, full_shape: Sequence[int]) -> int:
+    """Just the full-shape transient count (the PR 5 test's number)."""
+    return audit(hlo_text, full_shape)["full_shape_results_in_loop"]

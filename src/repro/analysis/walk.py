@@ -1,0 +1,234 @@
+"""Program-walking core shared by every analyzer (DESIGN.md §14).
+
+Two walkable artifact kinds:
+
+* **Compiled HLO text** (`compiled.as_text()`): `parse_module` splits the
+  module into computations, `Computation.instructions` parses each body
+  line into `(name, opcode, result shape, result bytes, called
+  computations)`, and `loop_reachable` returns every computation
+  reachable from ANY while-loop body — the ADMM fori_loop, the ring
+  SUMMA steps, the encoder's scatter scans, and all fusions / calls /
+  conditionals they invoke. This is the program's steady state; only
+  straight-line init/final code is excluded. (Ported from the PR 5
+  inline walk in tests/test_admm_2d.py — that test now calls this.)
+
+* **jaxprs** (`jax.jit(f).trace(*avals).jaxpr`): `jaxpr_eqns` yields
+  every equation including those of sub-jaxprs carried in eqn.params
+  (while/cond/scan/pjit/shard_map bodies), so dtype-flow lints see the
+  whole traced program, not just the top level.
+
+Shapes in the optimized SPMD module are **per-device**; bytes computed
+here are therefore per-device quantities.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterator, List, NamedTuple, Tuple
+
+# ----------------------------- HLO side -----------------------------
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g. "bf16[16,512,1024]{2,1,0}" — capture dtype and dims
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPCODES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|true_computation|"
+    r"false_computation)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_NAME_RE = re.compile(r"%?([\w.\-]+)")
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_HEAD_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of every array shape in `shape_str` (tuples sum)."""
+    total = 0
+    for dtype, dims in SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dims(shape_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """[(dtype, dims), ...] for every array shape in the string."""
+    out = []
+    for dtype, dims in SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        out.append((dtype,
+                    tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+class Instruction(NamedTuple):
+    name: str
+    opcode: str
+    shape: str          # result-shape text ("f32[1,256,256]{2,1,0}" or
+                        # "(f32[...], u32[...])" for tuples)
+    bytes: int          # total result bytes (tuple elements summed)
+    line: str           # the raw (stripped) instruction line
+    called: Tuple[str, ...]  # computations this instruction invokes
+
+    @property
+    def while_body(self) -> str | None:
+        m = re.search(r"body=%?([\w.\-]+)", self.line)
+        return m.group(1) if m else None
+
+    @property
+    def while_condition(self) -> str | None:
+        m = re.search(r"condition=%?([\w.\-]+)", self.line)
+        return m.group(1) if m else None
+
+    @property
+    def replica_group_size(self) -> int:
+        """Participant count per replica group (1 if unannotated)."""
+        m = _REPLICA_GROUPS_RE.search(self.line)
+        if not m:
+            return 1
+        first = m.group(1).split("}")[0].lstrip("{")
+        ids = [t for t in first.split(",") if t.strip() != ""]
+        return max(1, len(ids))
+
+
+class Computation(NamedTuple):
+    name: str
+    body: str           # raw text incl. header/footer lines
+    instructions: Tuple[Instruction, ...]
+
+    def called(self) -> Tuple[str, ...]:
+        out: List[str] = []
+        for ins in self.instructions:
+            out.extend(ins.called)
+        return tuple(out)
+
+
+def _scan_result_shape(rest: str) -> str:
+    """The result-shape token starting at rest[0]; balanced-paren scan
+    for tuple shapes (nested tuples included)."""
+    if not rest.startswith("("):
+        return rest.split(None, 1)[0]
+    depth = 0
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[: i + 1]
+    return rest  # unbalanced — return everything (caller degrades)
+
+
+def _parse_instruction(line: str) -> Instruction | None:
+    s = line.strip()
+    m = _HEAD_RE.match(s)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = s[m.end():]
+    shape = _scan_result_shape(rest)
+    tail = rest[len(shape):].lstrip()
+    op = tail.split("(", 1)[0].strip()
+    if not op or any(c in op for c in " ={"):
+        return None
+    called = list(_CALLED_RE.findall(s))
+    for grp in _BRANCHES_RE.findall(s):
+        called.extend(_NAME_RE.findall(grp))
+    return Instruction(name=name, opcode=op, shape=shape,
+                       bytes=shape_bytes(shape), line=s,
+                       called=tuple(called))
+
+
+def parse_module(txt: str) -> Dict[str, Computation]:
+    """Split a compiled HLO module's text into named computations with
+    parsed instructions (ENTRY included, under its own name)."""
+    comps: Dict[str, Computation] = {}
+    name, buf = None, []
+    for line in txt.splitlines():
+        if name is None:
+            if (line.startswith("%") or line.startswith("ENTRY")) \
+                    and line.rstrip().endswith("{"):
+                toks = line.split()
+                name = (toks[1] if toks[0] == "ENTRY" else
+                        toks[0]).lstrip("%")
+                buf = [line]
+        else:
+            buf.append(line)
+            if line.startswith("}"):
+                body = "\n".join(buf)
+                instrs = tuple(
+                    ins for ins in
+                    (_parse_instruction(ln) for ln in buf[1:-1])
+                    if ins is not None)
+                comps[name] = Computation(name=name, body=body,
+                                          instructions=instrs)
+                name = None
+    return comps
+
+
+def while_bodies(txt: str) -> List[str]:
+    """Names of every while-loop body computation in the module."""
+    return sorted(set(re.findall(r"body=%?([\w.\-]+)", txt)))
+
+
+def loop_reachable(txt: str) -> Dict[str, Computation]:
+    """Every computation reachable from ANY while-loop body."""
+    comps = parse_module(txt)
+    seen: Dict[str, Computation] = {}
+    stack = while_bodies(txt)
+    while stack:
+        c = stack.pop()
+        if c in seen or c not in comps:
+            continue
+        seen[c] = comps[c]
+        stack.extend(comps[c].called())
+    return seen
+
+
+def iter_instructions(comps: Dict[str, Computation]
+                      ) -> Iterator[Tuple[str, Instruction]]:
+    for name, comp in comps.items():
+        for ins in comp.instructions:
+            yield name, ins
+
+
+# ---------------------------- jaxpr side ----------------------------
+
+def _sub_jaxprs(params: dict):
+    import jax
+
+    def is_jaxpr(v):
+        return isinstance(v, (jax.core.Jaxpr, jax.core.ClosedJaxpr))
+
+    for v in params.values():
+        if is_jaxpr(v):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for x in v:
+                if is_jaxpr(x):
+                    yield x
+
+
+def jaxpr_eqns(jaxpr) -> Iterator:
+    """Every equation of `jaxpr` and (recursively) of every sub-jaxpr
+    carried in eqn.params — while/cond/scan/pjit/shard_map/custom_vjp
+    bodies included. Accepts Jaxpr or ClosedJaxpr."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from jaxpr_eqns(sub)

@@ -36,6 +36,28 @@ from repro.kernels import ref as kref
 from repro.optim import apply_updates
 
 
+# ------------------------- compile-cache registry -----------------------
+# Every lru_cache-wrapped jitted factory in this module enrolls itself
+# here via the decorator below, and clear_compile_caches() iterates the
+# registry — adding a factory without enrolling it is a lint failure
+# (repro.analysis.contracts walks the tree by ast and flags any
+# lru_cache-wrapped function that builds jitted/shard_map'd programs
+# but is missing the decorator).
+_COMPILE_CACHE_FACTORIES: list = []
+
+
+def _register_compile_cache(factory):
+    """Enroll an lru_cache-wrapped jitted factory with
+    clear_compile_caches(). Apply ABOVE functools.lru_cache so the
+    enrolled object is the cache wrapper itself."""
+    if not hasattr(factory, "cache_clear"):
+        raise TypeError(
+            f"_register_compile_cache expects an lru_cache wrapper "
+            f"(apply it above @functools.lru_cache): {factory!r}")
+    _COMPILE_CACHE_FACTORIES.append(factory)
+    return factory
+
+
 class PFMConfig(NamedTuple):
     encoder: str = "mggnn"
     sigma: float = 1e-3        # SoftRank noise std (paper: 0.001)
@@ -245,6 +267,7 @@ def _predict_scores_batch(params, cfg: PFMConfig, levels, x_g):
 
 
 # --------------------------- batched inference (DESIGN.md §9) -----------
+@_register_compile_cache
 @functools.lru_cache(maxsize=64)
 def _single_scorer(cfg: PFMConfig):
     """One jitted per-matrix scorer per cfg (jax.jit caches one XLA
@@ -255,6 +278,7 @@ def _single_scorer(cfg: PFMConfig):
     return jax.jit(fwd)
 
 
+@_register_compile_cache
 @functools.lru_cache(maxsize=64)
 def _batch_scorer(cfg: PFMConfig):
     """Compile cache for batched inference, mirroring _batch_trainer:
@@ -266,6 +290,7 @@ def _batch_scorer(cfg: PFMConfig):
     return jax.jit(fwd)
 
 
+@_register_compile_cache
 @functools.lru_cache(maxsize=64)
 def _flat_batch_scorer(cfg: PFMConfig):
     """Flat-buffer variant of _batch_scorer: the stacked hierarchy
@@ -417,6 +442,7 @@ def _admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
     return params, opt_state, _batch_metrics(L, Gamma, M, cfg)
 
 
+@_register_compile_cache
 @functools.lru_cache(maxsize=64)
 def _batch_trainer(cfg: PFMConfig, opt):
     """Compile cache: one jitted trainer per (cfg, opt); jax.jit then
@@ -433,6 +459,7 @@ def admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
 
 
 # ------------------ data-parallel sharded training (DESIGN.md §8) ------
+@_register_compile_cache
 @functools.lru_cache(maxsize=32)
 def sharded_train_fn(cfg: PFMConfig, opt, mesh, axis: str = "data"):
     """The shard_map'd (unjitted) batched trainer — the jit / .lower()
@@ -451,6 +478,7 @@ def sharded_train_fn(cfg: PFMConfig, opt, mesh, axis: str = "data"):
                            out_specs=out_specs, check_rep=False)
 
 
+@_register_compile_cache
 @functools.lru_cache(maxsize=32)
 def _sharded_trainer(cfg: PFMConfig, opt, mesh, axis: str):
     """One jitted sharded trainer per (cfg, opt, mesh, axis); kernel
@@ -1106,6 +1134,7 @@ def _resolve_2d_modes(comm_mode: str, sinkhorn_mode: str | None,
     return comm_mode, sinkhorn_mode, carry
 
 
+@_register_compile_cache
 @functools.lru_cache(maxsize=16)
 def train_2d_fn(cfg: PFMConfig, opt, mesh, axes=("row", "col"),
                 sinkhorn_mode: str | None = None,
@@ -1130,6 +1159,7 @@ def train_2d_fn(cfg: PFMConfig, opt, mesh, axes=("row", "col"),
                            out_specs=out_specs, check_rep=False)
 
 
+@_register_compile_cache
 @functools.lru_cache(maxsize=16)
 def _trainer_2d(cfg: PFMConfig, opt, mesh, axes, sinkhorn_mode,
                 comm_mode, carry):
@@ -1199,10 +1229,12 @@ def clear_compile_caches():
     programs for every bucket signature it has seen — a long-lived
     serve process cycling through many (cfg, mesh, shape) combinations
     grows compiled-program memory without limit unless it calls this
-    periodically (e.g. between corpus generations)."""
-    for fac in (_single_scorer, _batch_scorer, _flat_batch_scorer,
-                _batch_trainer, sharded_train_fn, _sharded_trainer,
-                train_2d_fn, _trainer_2d):
+    periodically (e.g. between corpus generations).
+
+    Iterates the `_COMPILE_CACHE_FACTORIES` registry (factories enroll
+    with @_register_compile_cache; repro.analysis.contracts lints that
+    none is missing)."""
+    for fac in _COMPILE_CACHE_FACTORIES:
         fac.cache_clear()
     jax.clear_caches()
 

@@ -37,8 +37,10 @@ def rank_distribution(scores: jnp.ndarray, sigma: float,
     """
     n = scores.shape[0]
     if node_mask is not None:
-        scores = jnp.where(node_mask > 0, scores,
-                           jnp.min(scores) - 10.0 - jnp.arange(n) * 1e-3)
+        scores = jnp.where(
+            node_mask > 0, scores,
+            jnp.min(scores) - 10.0 -
+            jnp.arange(n, dtype=scores.dtype) * 1e-3)
     diff = scores[:, None] - scores[None, :]           # Y_u - Y_v
     # p[v, u] = Pr(Y_v > Y_u); here p_win[u, v] = Pr(v beats u)
     p_win = _ndtr(-diff / (jnp.sqrt(2.0) * sigma))      # (u, v)
@@ -137,8 +139,10 @@ def rank_distribution_tile(scores: jnp.ndarray, sigma: float,
     vectors; r0/c0 may be traced (mesh-derived) scalars."""
     n = scores.shape[0]
     if node_mask is not None:
-        scores = jnp.where(node_mask > 0, scores,
-                           jnp.min(scores) - 10.0 - jnp.arange(n) * 1e-3)
+        scores = jnp.where(
+            node_mask > 0, scores,
+            jnp.min(scores) - 10.0 -
+            jnp.arange(n, dtype=scores.dtype) * 1e-3)
     s_loc = jax.lax.dynamic_slice_in_dim(scores, r0, tn)
     diff = s_loc[:, None] - scores[None, :]             # (tn, n) row panel
     p_win = _ndtr(-diff / (jnp.sqrt(2.0) * sigma))

@@ -30,6 +30,18 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# Verified by repro.analysis.contracts (DESIGN.md §14).
+KERNEL_CONTRACTS = {
+    "flash_attention_pallas": {
+        "vjp": "_flash_cvjp",
+        "oracle": "_attn_bwd_chunked",
+        "reason": "flash-style backward: lse and P are recomputed per "
+                  "q-chunk in ops.py (nothing O(Sq*Sk) materializes); "
+                  "parity vs autodiff of ref.attention_ref is pinned "
+                  "by tests/test_kernel_grads.py",
+    },
+}
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                   sm_scale: float, causal: bool, window: int | None,

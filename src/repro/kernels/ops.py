@@ -297,7 +297,9 @@ def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
 
 # ----------------------------------------------------------------- spmm
 def spmm(values, col_ids, x):
-    if _force_ref():
+    bs = values.shape[-1]
+    ncols = x.shape[-1]
+    if _force_ref() or bs % 128 != 0 or ncols % 128 != 0:
         return ref.spmm_ref(values, col_ids, x)
     if dist_mode():
         # block-row-scanned form: same per-block-row einsum as the

@@ -33,6 +33,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Verified by repro.analysis.contracts (DESIGN.md §14).
+KERNEL_CONTRACTS = {
+    "prox_tril_pallas": {"vjp": "_prox_tril_cvjp",
+                         "oracle": "ref.prox_tril_ref"},
+    "prox_tril_blocks_pallas": {"vjp": "_prox_tril_blocks_cvjp",
+                                "oracle": "ref.prox_tril_blocks_ref"},
+}
+
 
 def _prox_tril_kernel(scal_ref, l_ref, g_ref, o_ref, *, block: int):
     b = pl.program_id(0)

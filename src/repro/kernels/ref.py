@@ -77,9 +77,12 @@ def prox_tril_ref(L: jnp.ndarray, G: jnp.ndarray, eta,
     if isinstance(row_offset, int) and isinstance(col_offset, int) \
             and row_offset == 0 and col_offset == 0:
         return jnp.tril(S)
-    rows = row_offset + jax.lax.broadcasted_iota(
+    # offsets are integer-valued positions but may arrive as traced
+    # float32 scalars (the kernel path's SMEM convention); cast so the
+    # iota comparison stays int32-pure under strict dtype promotion
+    rows = jnp.asarray(row_offset, jnp.int32) + jax.lax.broadcasted_iota(
         jnp.int32, S.shape, S.ndim - 2)
-    cols = col_offset + jax.lax.broadcasted_iota(
+    cols = jnp.asarray(col_offset, jnp.int32) + jax.lax.broadcasted_iota(
         jnp.int32, S.shape, S.ndim - 1)
     return jnp.where(rows >= cols, S, 0.0).astype(S.dtype)
 
@@ -166,9 +169,13 @@ def prox_tril_blocks_ref(Lv: jnp.ndarray, Gv: jnp.ndarray,
     S = jnp.sign(X) * jnp.maximum(jnp.abs(X) - _bcast_scalar(
         thresh, Lv.ndim), 0.0)
     rblock = jax.lax.broadcasted_iota(jnp.int32, S.shape, 1)
-    rows = row_offset + rblock * bs + jax.lax.broadcasted_iota(
-        jnp.int32, S.shape, S.ndim - 2)
-    cols = col_offset + col_ids[..., None, None] * bs + \
+    # offsets may arrive as traced float32 scalars (kernel SMEM
+    # convention); cast so the comparison stays int32-pure under strict
+    # dtype promotion
+    rows = jnp.asarray(row_offset, jnp.int32) + rblock * bs + \
+        jax.lax.broadcasted_iota(jnp.int32, S.shape, S.ndim - 2)
+    cols = jnp.asarray(col_offset, jnp.int32) + \
+        col_ids[..., None, None] * bs + \
         jax.lax.broadcasted_iota(jnp.int32, S.shape, S.ndim - 1)
     return jnp.where(rows >= cols, S, 0.0).astype(S.dtype)
 

@@ -35,6 +35,12 @@ from jax.experimental import pallas as pl
 # Largest n for which the fused kernel is used ((n,n) f32 <= 4 MiB).
 SINKHORN_VMEM_LIMIT = 1024
 
+# Verified by repro.analysis.contracts (DESIGN.md §14).
+KERNEL_CONTRACTS = {
+    "sinkhorn_pallas": {"vjp": "_sinkhorn_cvjp",
+                        "oracle": "ref.sinkhorn_ref"},
+}
+
 
 def _logsumexp(x, axis):
     m = jnp.max(x, axis=axis, keepdims=True)

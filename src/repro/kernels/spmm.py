@@ -30,6 +30,20 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Contract table verified by repro.analysis.contracts (DESIGN.md §14):
+# every Pallas kernel here names its custom_vjp wrapper in ops.py and
+# its ref.py oracle, or documents why it carries no VJP.
+KERNEL_CONTRACTS = {
+    "spmm_pallas": {
+        "vjp": None,
+        "reason": "forward-only: spmm sits on no gradient path (the "
+                  "trainers contract through _mm / bsmm); the ref.py "
+                  "oracle spmm_ref covers parity, and any future grad "
+                  "use must add a custom_vjp before this lint passes",
+    },
+    "bsmm_pallas": {"vjp": "_bsmm_cvjp", "oracle": "ref.bsmm_ref"},
+}
+
 
 def _spmm_kernel(col_ids_ref, v_ref, x_ref, o_ref):
     j = pl.program_id(1)

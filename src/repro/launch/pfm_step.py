@@ -49,6 +49,29 @@ PFM_SHAPES = {
     "infer_512k": dict(n=524288, kind="infer"),
 }
 
+# Auditor registry (DESIGN.md §14): the named programs
+# `python -m repro.analysis` lowers, compiles, and walks. Same `kind`
+# vocabulary as PFM_SHAPES — each row maps to one make_pfm_*_step
+# builder below; repro.analysis.programs turns a row into a traced
+# program and pairs it with the budget manifest of the same name in
+# src/repro/analysis/budgets/. Sizes are chosen to compile in seconds
+# on 8 simulated host devices while still exercising every comm mode;
+# train2d_summa is pinned at n=1024 on the 2x2 mesh because that cell
+# has a committed comm_bytes_per_iter column in
+# experiments/bench_results.json the census reconciles against.
+PFM_ANALYSIS_PROGRAMS = {
+    "train2d_gather": dict(kind="train_2d", n=256, B=1, mesh=(2, 2),
+                           comm_mode="gather", carry="dense"),
+    "train2d_summa": dict(kind="train_2d", n=1024, B=1, mesh=(2, 2),
+                          comm_mode="summa", carry="dense"),
+    "train2d_summa_bcsr": dict(kind="train_2d", n=1024, B=1,
+                               mesh=(2, 2), comm_mode="summa",
+                               carry="bcsr", bcsr_slots=2),
+    "train_batch_sharded": dict(kind="train_batch", n=256, B=8,
+                                devices=8),
+    "infer_bucket": dict(kind="infer", n=256, B=4),
+}
+
 
 def _synthetic_levels(n: int, avg_degree: int = 8):
     """ShapeDtypeStruct hierarchy mirroring build_hierarchy's output

@@ -5,3 +5,11 @@ import sys
 # the 512-device flag); also keep compile caches warm across tests
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Strict dtype promotion for the whole tier-1 session: any implicit
+# cross-kind promotion (f32 + int array, f32 + f64 literal, ...) is a
+# TypeError at trace time instead of a silent upcast — the runtime
+# counterpart of the dtype-flow lint (repro.analysis.dtypes,
+# DESIGN.md §14). Set via env so pytest-forked/subprocess tests
+# inherit it too.
+os.environ.setdefault("JAX_NUMPY_DTYPE_PROMOTION", "strict")

@@ -275,104 +275,39 @@ def test_fit2d_summa_small_lr_close():
 
 def _lower_2d_cell(cfg, n, mesh, comm_mode):
     """Lower one admm_train_2d bucket (B=1, synthetic hierarchy) for
-    compile-time memory/HLO inspection."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core import admm as admm_mod
-    from repro.kernels import ops as kops
-    from repro.launch.pfm_step import _synthetic_levels
-    from repro.optim import adam
-
-    repl = NamedSharding(mesh, P())
-    tile = NamedSharding(mesh, P(None, "row", "col"))
-
-    def b_struct(s, sharding=repl):
-        return jax.ShapeDtypeStruct((1,) + s.shape, s.dtype,
-                                    sharding=sharding)
-
-    pfm = PFM(cfg, seed=0, x_mode="random")
-    p_sh = jax.tree_util.tree_map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=repl),
-        pfm.state_dict()["params"])
-    o_sh = jax.tree_util.tree_map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=repl),
-        pfm.opt_state)
-    levels = jax.tree_util.tree_map(b_struct, _synthetic_levels(n))
-    fn = jax.jit(admm_mod.train_2d_fn(cfg, adam(cfg.lr), mesh,
-                                      ("row", "col"), None, comm_mode))
-    with kops.mesh_scope(mesh):
-        return fn.lower(
-            p_sh, o_sh,
-            b_struct(jax.ShapeDtypeStruct((n, n), jnp.float32), tile),
-            levels,
-            b_struct(jax.ShapeDtypeStruct((n, 1), jnp.float32)),
-            b_struct(jax.ShapeDtypeStruct((n,), jnp.float32)),
-            jax.ShapeDtypeStruct((1, 2), jnp.uint32, sharding=repl),
-            jax.ShapeDtypeStruct((1,), jnp.float32, sharding=repl))
-
-
-def _hlo_computations(txt):
-    """Parse a compiled HLO module's text into {name: body_text}."""
-    comps, name, buf = {}, None, []
-    for line in txt.splitlines():
-        if name is None:
-            if (line.startswith("%") or line.startswith("ENTRY")) \
-                    and line.rstrip().endswith("{"):
-                toks = line.split()
-                name = (toks[1] if toks[0] == "ENTRY" else
-                        toks[0]).lstrip("%")
-                buf = [line]
-        else:
-            buf.append(line)
-            if line.startswith("}"):
-                comps[name] = "\n".join(buf)
-                name = None
-    return comps
-
-
-def _loop_reachable_computations(txt):
-    """Every computation reachable from ANY while-loop body (the ADMM
-    fori_loop, the ring SUMMA steps, the encoder's scatter scans, and
-    all fusions/calls they invoke) — i.e. the program's entire
-    steady state; only straight-line init/final code is excluded."""
-    import re
-    comps = _hlo_computations(txt)
-    seen = set()
-    stack = list(set(re.findall(r"body=%?([\w.\-]+)", txt)))
-    while stack:
-        c = stack.pop()
-        if c in seen or c not in comps:
-            continue
-        seen.add(c)
-        stack.extend(re.findall(
-            r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)", comps[c]))
-    return {c: comps[c] for c in seen}
+    compile-time memory/HLO inspection. The builder is the auditor's
+    (repro.analysis.programs) — one implementation for tests, the CLI
+    gate, and the dry-run-adjacent probes."""
+    from repro.analysis import programs
+    return programs.trace_train_2d(cfg, n, mesh, comm_mode).lower()
 
 
 @_NEEDS(4)
 def test_summa_no_full_transient_in_loop():
     """The acceptance pin of comm_mode="summa": the compiled program
     produces no full (B, n, n) value inside ANY loop body. Asserted on
-    the compiled HLO two ways: (1) walking every computation reachable
-    from a while body — zero instructions with a full-shape result
-    under summa (the one full-shape value left, the warm-start noise
-    draw, is straight-line init code), vs hundreds under gather;
-    (2) memory analysis — the summa program's per-device temp drops by
-    multiples of the full-buffer size (the θ-machinery floor is shared
-    by both modes, so the small-n ratio understates the large-n win:
-    14.1 GB -> 0.82 GB on the 16x16 train_8k cell)."""
-    import re
+    the compiled HLO two ways: (1) the analysis.transients audit over
+    every computation reachable from a while body — zero instructions
+    with a full-shape result under summa (the one full-shape value
+    left, the warm-start noise draw, is straight-line init code), vs
+    dozens under gather; (2) memory analysis — the summa program's
+    per-device temp drops by multiples of the full-buffer size (the
+    θ-machinery floor is shared by both modes, so the small-n ratio
+    understates the large-n win: 14.1 GB -> 0.82 GB on the 16x16
+    train_8k cell)."""
+    from repro.analysis import transients, walk
     cfg = PFMConfig(n_admm=2, n_sinkhorn=2, lr=1e-3, use_kernels=False)
     n = 512
     mesh = _mesh2d(2, 2)
     comp = {m: _lower_2d_cell(cfg, n, mesh, m).compile()
             for m in ("gather", "summa")}
-    full_pat = re.compile(rf"= f32\[1,{n},{n}\]")
     in_loops = {}
     for m, c in comp.items():
-        reach = _loop_reachable_computations(c.as_text())
-        assert reach, f"{m}: found no while bodies — parser broke?"
-        in_loops[m] = sum(len(full_pat.findall(t))
-                          for t in reach.values())
+        txt = c.as_text()
+        assert walk.loop_reachable(txt), \
+            f"{m}: found no while bodies — parser broke?"
+        in_loops[m] = transients.audit(
+            txt, full_shape=(1, n, n))["full_shape_results_in_loop"]
     assert in_loops["summa"] == 0, in_loops
     assert in_loops["gather"] > 0, in_loops
     temp = {m: c.memory_analysis().temp_size_in_bytes

@@ -1,0 +1,380 @@
+"""Program-auditor suite (repro.analysis, DESIGN.md §14).
+
+Three layers:
+
+* pure-unit — the HLO walking core, census weighting, transient audit,
+  and received-bytes conventions on a synthetic module; the ast lints
+  against the real tree and against deliberately-broken fixtures; the
+  analytic comm model against the committed bench column.
+* gate consistency — committed budget manifests cover every registered
+  program, the committed reports pass their budgets, and doctored
+  reports trip every check.
+* compiled golden pins (multidevice) — census counts for gather vs
+  summa vs bcsr on freshly compiled programs, and the
+  injected-regression test: a gather_full monkeypatched into the summa
+  loop body must fail `python -m repro.analysis --check` nonzero.
+"""
+import copy
+import json
+import pathlib
+import textwrap
+
+import jax
+import pytest
+
+from repro.analysis import (audit, collectives, comm_model, contracts,
+                            programs, transients, walk)
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+_NDEV = len(jax.devices())
+
+
+def _NEEDS(n):
+    def deco(fn):
+        fn = pytest.mark.multidevice(fn)
+        return pytest.mark.skipif(
+            _NDEV < n,
+            reason=f"needs >= {n} simulated devices (XLA_FLAGS="
+                   f"--xla_force_host_platform_device_count=8 before "
+                   f"jax initializes)")(fn)
+    return deco
+
+
+# A synthetic module with a nested while (trip 3) inside the main loop
+# (trip 5), one collective at each level, and one oversized loop-body
+# result — every census/transient mechanism in one small fixture.
+SYNTH_HLO = textwrap.dedent("""\
+    HloModule synth
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    %inner_cond (p0: (s32[], f32[8,128])) -> pred[] {
+      %p0 = (s32[], f32[8,128]) parameter(0)
+      %i0 = s32[] get-tuple-element(%p0), index=0
+      ROOT %lt = pred[] compare(%i0, %i0), direction=LT
+    }
+
+    %inner_body (p1: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+      %p1 = (s32[], f32[8,128]) parameter(0)
+      %x1 = f32[8,128]{1,0} get-tuple-element(%p1), index=1
+      %ag = f32[16,128]{1,0} all-gather(%x1), replica_groups={{0,1},{2,3}}, dimensions={0}
+      %sl = f32[8,128]{1,0} slice(%ag), slice={[0:8], [0:128]}
+      %i1 = s32[] get-tuple-element(%p1), index=0
+      ROOT %t1 = (s32[], f32[8,128]) tuple(%i1, %sl)
+    }
+
+    %outer_cond (p2: (s32[], f32[8,128])) -> pred[] {
+      %p2 = (s32[], f32[8,128]) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      ROOT %lt2 = pred[] compare(%i2, %i2), direction=LT
+    }
+
+    %outer_body (p3: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+      %p3 = (s32[], f32[8,128]) parameter(0)
+      %x3 = f32[8,128]{1,0} get-tuple-element(%p3), index=1
+      %w1 = (s32[], f32[8,128]) while(%p3), condition=%inner_cond, body=%inner_body, backend_config={"known_trip_count":{"n":"3"}}
+      %xw = f32[8,128]{1,0} get-tuple-element(%w1), index=1
+      %ar = f32[8,128]{1,0} all-reduce(%xw), replica_groups={{0,1,2,3}}, to_apply=%add
+      %big = f32[4,64,64]{2,1,0} broadcast(%ar), dimensions={}
+      %i3 = s32[] get-tuple-element(%p3), index=0
+      ROOT %t3 = (s32[], f32[8,128]) tuple(%i3, %ar)
+    }
+
+    ENTRY %main (a0: f32[8,128]) -> f32[8,128] {
+      %a0 = f32[8,128]{1,0} parameter(0)
+      %c0 = s32[] constant(0)
+      %in = (s32[], f32[8,128]) tuple(%c0, %a0)
+      %w2 = (s32[], f32[8,128]) while(%in), condition=%outer_cond, body=%outer_body, backend_config={"known_trip_count":{"n":"5"}}
+      ROOT %out = f32[8,128]{1,0} get-tuple-element(%w2), index=1
+    }
+    """)
+
+
+# --------------------------- walking core -------------------------------
+
+def test_walk_parses_computations_and_whiles():
+    comps = walk.parse_module(SYNTH_HLO)
+    assert set(comps) >= {"add", "inner_cond", "inner_body",
+                          "outer_cond", "outer_body", "main"}
+    assert set(walk.while_bodies(SYNTH_HLO)) == {"inner_body",
+                                                 "outer_body"}
+    # loop-reachable excludes straight-line ENTRY code but includes
+    # everything a while body calls (the nested while and the
+    # all-reduce's to_apply)
+    reach = set(walk.loop_reachable(SYNTH_HLO))
+    assert {"inner_body", "outer_body", "add"} <= reach
+    assert "main" not in reach
+
+
+def test_received_bytes_conventions():
+    comps = walk.parse_module(SYNTH_HLO)
+    by_op = {i.opcode: i for c in comps.values()
+             for i in c.instructions}
+    ag, ar = by_op["all-gather"], by_op["all-reduce"]
+    # ring all-gather: out * (G-1)/G with G from the replica groups
+    assert ag.replica_group_size == 2
+    assert collectives.received_bytes(ag) == 16 * 128 * 4 // 2
+    # ring all-reduce: reduce-scatter + all-gather = out * 2(G-1)/G
+    assert ar.replica_group_size == 4
+    assert collectives.received_bytes(ar) == \
+        int(8 * 128 * 4 * 2 * 3 / 4)
+
+
+def test_census_weights_nested_trip_counts():
+    res = collectives.census_per_iteration(SYNTH_HLO)
+    # main loop = the top-level while (trip 5); per-iteration census
+    # multiplies the nested while's all-gather by ITS trip count (3)
+    assert res["main_loop"]["trip_count"] == 5
+    per = res["per_iteration"]
+    assert per["counts"] == {"all-gather": 3.0, "all-reduce": 1.0}
+    ag_bytes = 3 * (16 * 128 * 4 // 2)
+    ar_bytes = int(8 * 128 * 4 * 2 * 3 / 4)
+    assert per["total_bytes"] == ag_bytes + ar_bytes
+    whole = res["whole_program"]
+    assert whole["total_bytes"] == 5 * per["total_bytes"]
+
+
+def test_transient_audit_synthetic():
+    res = transients.audit(SYNTH_HLO, full_shape=(4, 64, 64))
+    # largest loop-body result is the (4, 64, 64) broadcast
+    assert res["max_loop_result_bytes"] == 4 * 64 * 64 * 4
+    assert res["full_shape_results_in_loop"] == 1
+    # the tuple plumbing is non-material and must not win
+    assert res["max_loop_result"]["opcode"] == "broadcast"
+
+
+# ----------------------------- ast lints --------------------------------
+
+def test_contract_lints_clean_on_real_tree():
+    """The committed tree carries zero findings — the gate's implicit
+    budget. A failure here IS the regression the lint exists for."""
+    res = contracts.run(str(REPO))
+    assert res["total_findings"] == 0, res
+
+
+_FACTORY = textwrap.dedent("""\
+    import functools
+    import jax
+
+    {deco}
+    @functools.lru_cache(maxsize=4)
+    def scorer_factory(n):
+        return jax.jit(lambda x: x * n)
+    """)
+
+
+def test_compile_cache_lint_catches_unregistered(tmp_path):
+    """A new lru_cache'd jitted factory that skips
+    admm._register_compile_cache must be flagged — nothing else
+    enforces enrollment (clear_compile_caches() would silently miss
+    it)."""
+    bad = tmp_path / "bad" / "src" / "repro"
+    bad.mkdir(parents=True)
+    (bad / "feature.py").write_text(_FACTORY.format(deco=""))
+    findings = contracts.lint_compile_caches(str(tmp_path / "bad"))
+    assert len(findings) == 1, findings
+    assert findings[0]["name"] == "scorer_factory"
+    assert findings[0]["check"] == "compile-cache-registry"
+
+    good = tmp_path / "good" / "src" / "repro"
+    good.mkdir(parents=True)
+    (good / "feature.py").write_text(
+        _FACTORY.format(deco="@_register_compile_cache"))
+    assert contracts.lint_compile_caches(str(tmp_path / "good")) == []
+
+
+def test_register_compile_cache_requires_cache_clear():
+    from repro.core import admm
+    with pytest.raises(TypeError):
+        admm._register_compile_cache(lambda x: x)
+
+
+# --------------------------- analytic model -----------------------------
+
+def test_comm_model_matches_committed_bench_column():
+    """The acceptance reconciliation row: the auditor's analytic model
+    reproduces the comm_bytes_per_iter column committed to
+    experiments/bench_results.json for the summa n=1024 2x2 cell
+    exactly (same formula), and the registered program's census must
+    in turn sit within 5% of it (asserted compiled in
+    test_injected_regression_gate, and by the CI gate itself)."""
+    rows = json.load(open(REPO / "experiments" / "bench_results.json"))
+    rows = rows["results"]["bench_scaling"]["result"]["admm_2d"]
+    cell = [r for r in rows if r["n"] == 1024 and
+            r["comm_mode"] == "summa" and r["mesh"] == "2x2"]
+    assert cell, "bench column for the reconciliation cell is gone"
+    analytic = programs.analytic_bytes_per_iter("train2d_summa")
+    assert analytic == pytest.approx(cell[0]["comm_bytes_per_iter"])
+
+
+# --------------------------- gate consistency ---------------------------
+
+_ALL = list(programs.PROGRAMS)
+
+
+def test_budgets_cover_every_registered_program():
+    for name in _ALL:
+        assert audit.load_budget(name) is not None, \
+            f"no budget manifest for {name}"
+
+
+@pytest.mark.parametrize("name", _ALL)
+def test_committed_reports_pass_their_budgets(name):
+    """The committed experiments/analysis reports are the last audited
+    state; they must be within budget (regenerate with
+    `python -m repro.analysis` after intentional changes)."""
+    path = REPO / "experiments" / "analysis" / f"{name}.json"
+    report = json.load(open(path))
+    bad = audit.check_report(report, audit.load_budget(name))
+    assert not bad, bad
+
+
+def test_check_report_flags_every_budget_axis():
+    name = "train2d_summa"
+    report = json.load(open(
+        REPO / "experiments" / "analysis" / f"{name}.json"))
+    budget = audit.load_budget(name)
+
+    r = copy.deepcopy(report)
+    r["transients"]["full_shape_results_in_loop"] = 3
+    assert any("full-shape" in m for m in
+               audit.check_report(r, budget))
+
+    r = copy.deepcopy(report)
+    r["transients"]["max_loop_result_bytes"] = 10 ** 9
+    assert any("max loop-body result" in m for m in
+               audit.check_report(r, budget))
+
+    r = copy.deepcopy(report)
+    r["collectives"]["per_iteration"]["counts"]["all-gather"] += 1
+    assert any("collective counts" in m for m in
+               audit.check_report(r, budget))
+
+    r = copy.deepcopy(report)
+    r["collectives"]["per_iteration"]["total_bytes"] *= 10
+    assert any("collective bytes" in m for m in
+               audit.check_report(r, budget))
+
+    r = copy.deepcopy(report)
+    r["dtypes"]["f64_values"] = 2
+    assert any("f64" in m for m in audit.check_report(r, budget))
+
+    r = copy.deepcopy(report)
+    r["comm_model"]["rel_err"] = 0.5
+    assert any("analytic" in m for m in audit.check_report(r, budget))
+
+
+def test_cli_rejects_unknown_program(tmp_path):
+    from repro.analysis.__main__ import main
+    assert main(["--programs", "nope",
+                 "--out", str(tmp_path)]) == 2
+
+
+# --------------------- compiled golden pins (census) --------------------
+
+# Census counts are invariant to n (verified at n=512 and n=1024) and
+# to bcsr_slots — the loop STRUCTURE is what they pin, so the golden
+# compiles run at the cheapest sizes that exercise each mode.
+GOLDEN_COUNTS = {
+    "gather": {"all-gather": 10, "all-reduce": 58,
+               "reduce-scatter": 3},
+    "summa": {"all-gather": 6, "all-reduce": 146,
+              "reduce-scatter": 1, "collective-permute": 12},
+    "bcsr": {"all-gather": 5, "all-reduce": 147,
+             "reduce-scatter": 1, "collective-permute": 22},
+}
+
+
+def _census_counts(cfg, n, comm_mode, carry="dense"):
+    from repro.launch.mesh import make_mesh2d
+    t = programs.trace_train_2d(cfg, n, make_mesh2d(2, 2), comm_mode,
+                                carry)
+    txt = t.lower().compile().as_text()
+    res = collectives.census_per_iteration(txt)
+    counts = {k: int(v) for k, v in
+              res["per_iteration"]["counts"].items()}
+    full = transients.audit(
+        txt, full_shape=(1, n, n))["full_shape_results_in_loop"]
+    return counts, res["per_iteration"], full
+
+
+@_NEEDS(4)
+def test_census_golden_gather_vs_summa():
+    cfg = programs.ANALYSIS_CFG
+    g_counts, _, g_full = _census_counts(cfg, 256, "gather")
+    s_counts, s_iter, s_full = _census_counts(cfg, 512, "summa")
+    assert g_counts == GOLDEN_COUNTS["gather"]
+    assert s_counts == GOLDEN_COUNTS["summa"]
+    # the transient story the census rides next to: gather's loop is
+    # full of (B, n, n) values, summa's has none
+    assert g_full > 0
+    assert s_full == 0
+    # census bytes vs the analytic model at this size too (the CI gate
+    # pins the registered n=1024 cell; this is the cheap cross-check)
+    model = comm_model.comm_bytes_per_iter(512, 1, 2, 2, "summa",
+                                           cfg.n_sinkhorn)
+    assert comm_model.relative_error(s_iter["total_bytes"],
+                                     model) < 0.05
+
+
+@_NEEDS(4)
+def test_census_golden_bcsr_ppermute_vs_dense_ring():
+    """The slot carry keeps the dense ring STRUCTURE but rotates a
+    (vals, cids) pair per A-carry hop — more ppermute messages than
+    the dense ring (22 vs 12 per iteration) yet fewer ppermute BYTES
+    (slot arrays are occupancy-scaled vs a dense tile)."""
+    cfg = programs.ANALYSIS_CFG._replace(bcsr_slots=1)
+    d_counts, d_iter, _ = _census_counts(cfg, 512, "summa")
+    b_counts, b_iter, b_full = _census_counts(cfg, 512, "summa",
+                                              "bcsr")
+    assert d_counts == GOLDEN_COUNTS["summa"]
+    assert b_counts == GOLDEN_COUNTS["bcsr"]
+    assert b_full == 0
+    assert b_counts["collective-permute"] > \
+        d_counts["collective-permute"]
+    assert b_iter["bytes"]["collective-permute"] < \
+        d_iter["bytes"]["collective-permute"]
+
+
+# ------------------------ injected regression ---------------------------
+
+@pytest.mark.slow
+@_NEEDS(4)
+def test_injected_regression_gate_fails(tmp_path, monkeypatch):
+    """Prove the gate gates: monkeypatch a gather_full into the summa
+    loop body (every ring contraction also materializes the full
+    (B, n, n) left operand) and `--check` on the summa program must
+    exit nonzero; with the patch removed it must pass again."""
+    from repro.analysis.__main__ import main
+    from repro.core import admm as admm_mod
+    from repro.distributed import constrain as tc
+
+    orig = tc.summa_matmul
+
+    def leaky(a_tile, b_colpanel, grid, axes, mm=None):
+        full = tc.gather_full(a_tile, axes[0], axes[1])
+        out = orig(a_tile, b_colpanel, grid, axes, mm)
+        # 1e-30-scaled so XLA cannot fold the gather away, invisible
+        # in the arithmetic
+        return out + 1e-30 * tc.slice_tile(full, grid, axes[0],
+                                           axes[1])
+
+    admm_mod.clear_compile_caches()
+    monkeypatch.setattr(tc, "summa_matmul", leaky)
+    try:
+        rc = main(["--check", "--programs", "train2d_summa",
+                   "--out", str(tmp_path / "leaky")])
+        assert rc == 1
+        report = json.load(open(
+            tmp_path / "leaky" / "train2d_summa.json"))
+        assert report["transients"]["full_shape_results_in_loop"] > 0
+    finally:
+        monkeypatch.setattr(tc, "summa_matmul", orig)
+        admm_mod.clear_compile_caches()
+    rc = main(["--check", "--programs", "train2d_summa",
+               "--out", str(tmp_path / "clean")])
+    assert rc == 0
