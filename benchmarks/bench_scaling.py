@@ -59,6 +59,14 @@ ADMM_2D_REF_1DEV = (1024, 2048)
 ADMM_2D_BCSR_EXEC = {16384: 4}
 ADMM_2D_BCSR_COMPILE = {32768: 4}
 
+# 3-axis (data, row, col) sweep (DESIGN.md §15) on the simulated
+# (2, 2, 2) mesh: B=4 buckets batch-sharded over data AND tiled over
+# (row, col) through the one MeshPlan-driven trainer. n=1k executes
+# under summa on 8 simulated devices; larger n are compile+memory rows.
+ADMM_3D_B = 4
+ADMM_3D_EXEC = {1024: ("summa",)}
+ADMM_3D_COMPILE = {2048: ("summa",), 4096: ("summa",)}
+
 
 def _run_rows(script, timeout=5400, tag="admm_2d"):
     """Run a bench subprocess and parse its incremental ROW= protocol.
@@ -461,6 +469,162 @@ def admm_2d(quick: bool = False):
     return rows
 
 
+def admm_3d(quick: bool = False):
+    """bench_scaling.admm_3d rows: the mesh-shape-polymorphic trainer
+    (DESIGN.md §15) on a simulated (2, 2, 2) ("data", "row", "col")
+    mesh — B=4 buckets batch-sharded over data, every (n, n) tiled
+    over (row, col), comm_mode="summa". Same subprocess/ROW= harness
+    and payload as admm_2d (per-device memory analysis, the analytic
+    comm-volume column evaluated at the LOCAL batch B/D, wall clock
+    for executed rows)."""
+    ns_exec = ADMM_3D_EXEC if not quick else {}
+    ns_compile = ({1024: ("summa",)} if quick else ADMM_3D_COMPILE)
+    script = textwrap.dedent(f"""
+        import os, json, time
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, {str(pathlib.Path(__file__).resolve()
+                              .parents[1] / "src")!r})
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.analysis import comm_model
+        from repro.core import admm as admm_mod
+        from repro.core.admm import PFMConfig
+        from repro.core.pfm import PFM, pack_buckets
+        from repro.data import delaunay_like
+        from repro.kernels import ops as kops
+        from repro.launch import analysis
+        from repro.launch.mesh import make_mesh3d
+        from repro.launch.pfm_step import _synthetic_levels
+        from repro.optim import adam
+
+        D, R, C = 2, 2, 2
+        B = {ADMM_3D_B}
+        mesh = make_mesh3d(D, R, C)
+        plan = admm_mod.make_mesh_plan(mesh, comm_mode="summa")
+        cfg = PFMConfig(n_admm=1, n_sinkhorn=8, lr=1e-3)
+        rows = []
+        repl = NamedSharding(mesh, P())
+        lead = NamedSharding(mesh, P("data"))
+        tile = NamedSharding(mesh, P("data", "row", "col"))
+
+        def train_fn():
+            return jax.jit(admm_mod.train_plan_fn(
+                cfg, adam(cfg.lr), mesh, plan))
+
+        def b_struct(s, sharding):
+            return jax.ShapeDtypeStruct((B,) + s.shape, s.dtype,
+                                        sharding=sharding)
+
+        def lower_structs(n):
+            pfm = PFM(cfg, seed=0, x_mode="random")
+            p_sh = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                               sharding=repl),
+                pfm.state_dict()["params"])
+            o_sh = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                               sharding=repl),
+                pfm.opt_state)
+            levels = jax.tree_util.tree_map(
+                lambda s: b_struct(s, lead), _synthetic_levels(n))
+            with kops.mesh_scope(mesh):
+                return train_fn().lower(
+                    p_sh, o_sh,
+                    b_struct(jax.ShapeDtypeStruct((n, n), jnp.float32),
+                             tile),
+                    levels,
+                    b_struct(jax.ShapeDtypeStruct((n, 1), jnp.float32),
+                             lead),
+                    b_struct(jax.ShapeDtypeStruct((n,), jnp.float32),
+                             lead),
+                    b_struct(jax.ShapeDtypeStruct((2,), jnp.uint32),
+                             lead),
+                    jax.ShapeDtypeStruct((B,), jnp.float32,
+                                         sharding=lead))
+
+        for n, modes in {dict(ns_compile)!r}.items():
+            for comm_mode in modes:
+                t0 = time.perf_counter()
+                lowered = lower_structs(n)
+                t1 = time.perf_counter()
+                compiled = lowered.compile()
+                rows.append(dict(
+                    bench="admm_3d", mode="compile", n=n, B=B,
+                    mesh="2x2x2", comm_mode=comm_mode,
+                    lower_s=t1 - t0,
+                    compile_s=time.perf_counter() - t1,
+                    memory=analysis.memory_analysis_dict(compiled),
+                    comm_bytes_per_iter=comm_model.comm_bytes_per_iter(
+                        n, B // D, R, C, comm_mode, cfg.n_sinkhorn)))
+                print("ROW=" + json.dumps(rows[-1]), flush=True)
+                del compiled, lowered
+
+        for n, modes in {dict(ns_exec)!r}.items():
+            pfm = PFM(cfg, seed=0, x_mode="random")
+            # one size, distinct seeds/contents: the B matrices must
+            # share (n_pad, hierarchy depth) to land in ONE bucket
+            prepped = [pfm.prepare(
+                delaunay_like(n - 24, "gradel", seed=3 + i),
+                f"bench{{i}}") for i in range(B)]
+            (bucket,) = pack_buckets(prepped, max_batch=B)
+            keys = jax.random.split(jax.random.PRNGKey(0), B)
+            args = (
+                jax.device_put(pfm.params, jax.tree_util.tree_map(
+                    lambda _: repl, pfm.params)),
+                jax.device_put(pfm.opt_state, jax.tree_util.tree_map(
+                    lambda _: repl, pfm.opt_state)),
+                jax.device_put(bucket.A, tile),
+                jax.device_put(bucket.levels, jax.tree_util.tree_map(
+                    lambda _: lead, bucket.levels)),
+                jax.device_put(bucket.x_g, lead),
+                jax.device_put(bucket.node_mask, lead),
+                jax.device_put(keys, lead),
+                jax.device_put(jnp.ones((B,), jnp.float32), lead))
+            for comm_mode in modes:
+                t0 = time.perf_counter()
+                with kops.mesh_scope(mesh):
+                    lowered = train_fn().lower(*args)
+                compiled = lowered.compile()
+                compile_s = time.perf_counter() - t0
+                out = compiled(*args)           # warm (first exec)
+                jax.block_until_ready(out[0])
+                t0 = time.perf_counter()
+                out = compiled(*args)
+                jax.block_until_ready(out[0])
+                wall = time.perf_counter() - t0
+                for k in ("l1", "residual", "loss"):
+                    assert np.isfinite(np.asarray(out[2][k])).all(), k
+                rows.append(dict(
+                    bench="admm_3d", mode="exec",
+                    n=int(bucket.A.shape[-1]), B=B, mesh="2x2x2",
+                    comm_mode=comm_mode, wall_s_3d=wall,
+                    compile_s=compile_s,
+                    memory=analysis.memory_analysis_dict(compiled),
+                    comm_bytes_per_iter=comm_model.comm_bytes_per_iter(
+                        int(bucket.A.shape[-1]), B // D, R, C,
+                        comm_mode, cfg.n_sinkhorn),
+                    note="8 simulated devices share 1 host's cores: "
+                         "wall_s shows overhead, not speedup"))
+                print("ROW=" + json.dumps(rows[-1]), flush=True)
+                del out, compiled, lowered
+        print("DONE=" + json.dumps(rows))
+    """)
+    rows = _run_rows(script, tag="admm_3d")
+    for r in rows:
+        wall = (f"wall={r['wall_s_3d']:.1f}s " if r["mode"] == "exec"
+                else f"compile={r['compile_s']:.1f}s ")
+        print(f"admm_3d n={r['n']} B={r['B']} [{r['comm_mode']}]: "
+              f"{wall}"
+              f"temp={r['memory']['temp_size_in_bytes'] / 1e9:.2f}GB"
+              f" comm/iter={r['comm_bytes_per_iter'] / 1e6:.0f}MB")
+    OUT.mkdir(exist_ok=True)
+    (OUT / "admm_3d_scaling.json").write_text(json.dumps(rows, indent=2))
+    return rows
+
+
 def run(quick: bool = False):
     from benchmarks.bench_fillin import load_trained_pfm
     sizes = SIZES[:3] if quick else SIZES
@@ -505,7 +669,8 @@ def main(quick=False):
         print(f"{r['n']},{r['method']},{r['fillin_ratio']:.2f},"
               f"{r['lu_ms']:.1f},{r['order_ms']:.1f}")
     rows_2d = admm_2d(quick=quick)
-    return {"fig4": rows, "admm_2d": rows_2d}
+    rows_3d = admm_3d(quick=quick)
+    return {"fig4": rows, "admm_2d": rows_2d, "admm_3d": rows_3d}
 
 
 if __name__ == "__main__":

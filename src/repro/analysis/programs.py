@@ -25,7 +25,7 @@ from repro.core.admm import PFMConfig
 from repro.core.pfm import PFM
 from repro.kernels import ops as kops
 from repro.launch import pfm_step
-from repro.launch.mesh import make_data_mesh, make_mesh2d
+from repro.launch.mesh import make_data_mesh, make_mesh2d, make_mesh3d
 from repro.optim import adam
 
 from repro.analysis import comm_model
@@ -74,6 +74,38 @@ def trace_train_2d(cfg: PFMConfig, n: int, mesh, comm_mode: str,
             b_struct(jax.ShapeDtypeStruct((n,), jnp.float32)),
             jax.ShapeDtypeStruct((B, 2), jnp.uint32, sharding=repl),
             jax.ShapeDtypeStruct((B,), jnp.float32, sharding=repl))
+
+
+def trace_train_3d(cfg: PFMConfig, n: int, B: int, mesh,
+                   comm_mode: str = "summa", carry: str = "dense"):
+    """Trace the mesh-shape-polymorphic trainer on a 3-axis
+    ("data", "row", "col") mesh (DESIGN.md §15): every per-matrix
+    tensor leads with B split over the data axis, A additionally
+    (n, n)-tiled over (row, col), θ and opt state replicated, one
+    θ-grad psum over all three axes per ADMM iteration."""
+    lead = NamedSharding(mesh, P("data"))
+    repl = NamedSharding(mesh, P())
+    tile = NamedSharding(mesh, P("data", "row", "col"))
+
+    def b_struct(s, sharding=lead):
+        return jax.ShapeDtypeStruct((B,) + s.shape, s.dtype,
+                                    sharding=sharding)
+
+    p_sh, o_sh = _params_opt_structs(cfg, repl)
+    levels = jax.tree_util.tree_map(
+        b_struct, pfm_step._synthetic_levels(n))
+    plan = admm_mod.make_mesh_plan(mesh, comm_mode=comm_mode,
+                                   carry=carry)
+    fn = jax.jit(admm_mod.train_plan_fn(cfg, adam(cfg.lr), mesh, plan))
+    with kops.mesh_scope(mesh):
+        return fn.trace(
+            p_sh, o_sh,
+            b_struct(jax.ShapeDtypeStruct((n, n), jnp.float32), tile),
+            levels,
+            b_struct(jax.ShapeDtypeStruct((n, 1), jnp.float32)),
+            b_struct(jax.ShapeDtypeStruct((n,), jnp.float32)),
+            b_struct(jax.ShapeDtypeStruct((2,), jnp.uint32)),
+            jax.ShapeDtypeStruct((B,), jnp.float32, sharding=lead))
 
 
 def trace_train_batch(cfg: PFMConfig, n: int, B: int, mesh,
@@ -132,8 +164,10 @@ def program_cfg(spec: dict) -> PFMConfig:
 
 def devices_required(spec: dict) -> int:
     if "mesh" in spec:
-        r, c = spec["mesh"]
-        return r * c
+        out = 1
+        for extent in spec["mesh"]:
+            out *= extent
+        return out
     return spec.get("devices", 1)
 
 
@@ -148,6 +182,12 @@ def build(name: str):
                               spec["comm_mode"], spec.get("carry",
                                                           "dense"),
                               spec.get("B", 1))
+    if kind == "train_3d":
+        d, r, c = spec["mesh"]
+        return trace_train_3d(cfg, spec["n"], spec["B"],
+                              make_mesh3d(d, r, c),
+                              spec["comm_mode"],
+                              spec.get("carry", "dense"))
     if kind == "train_batch":
         return trace_train_batch(cfg, spec["n"], spec["B"],
                                  make_data_mesh(spec["devices"]))
@@ -161,13 +201,21 @@ def analytic_bytes_per_iter(name: str) -> float | None:
     None for programs the model does not cover (the batched trainer's
     traffic is pure θ-psums; inference has no collectives)."""
     spec = PROGRAMS[name]
-    if spec["kind"] != "train_2d":
-        return None
     cfg = program_cfg(spec)
-    r, c = spec["mesh"]
-    return comm_model.comm_bytes_per_iter(
-        spec["n"], spec.get("B", 1), r, c, spec["comm_mode"],
-        cfg.n_sinkhorn, slots=spec.get("bcsr_slots"))
+    if spec["kind"] == "train_2d":
+        r, c = spec["mesh"]
+        return comm_model.comm_bytes_per_iter(
+            spec["n"], spec.get("B", 1), r, c, spec["comm_mode"],
+            cfg.n_sinkhorn, slots=spec.get("bcsr_slots"))
+    if spec["kind"] == "train_3d":
+        # Per (row, col)-submesh traffic is the 2-D model at the local
+        # batch B/D; the data-axis leg of the single θ-grad psum is
+        # O(|θ|) and sits inside the model's tolerance.
+        d, r, c = spec["mesh"]
+        return comm_model.comm_bytes_per_iter(
+            spec["n"], spec.get("B", 1) // d, r, c, spec["comm_mode"],
+            cfg.n_sinkhorn, slots=spec.get("bcsr_slots"))
+    return None
 
 
 def full_shape_dims(name: str) -> tuple | None:
@@ -177,4 +225,9 @@ def full_shape_dims(name: str) -> tuple | None:
     spec = PROGRAMS[name]
     if spec["kind"] == "infer":
         return None
+    if spec["kind"] == "train_3d":
+        # inside the shard_map body the batch dim is the per-data-shard
+        # extent, so "full shape" means the local (B/D, n, n) stack
+        d, _, _ = spec["mesh"]
+        return (spec.get("B", 1) // d, spec["n"], spec["n"])
     return (spec.get("B", 1), spec["n"], spec["n"])

@@ -21,6 +21,7 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import re
 import shutil
 import time
 import zlib
@@ -71,6 +72,18 @@ def leaf_paths(tree):
     return list(_flatten(tree)[0].keys())
 
 
+# Only exactly-conforming committed directories count as checkpoints:
+# retention and latest_step must not trip over (or delete) foreign
+# entries a user drops next to them (step_backup/, step_12.tmp/, ...).
+_STEP_RE = re.compile(r"^step_(\d{10})$")
+_TMP_RE = re.compile(r"^step_(\d{10})\.tmp$")
+
+
+def _committed_steps(ckpt_dir: pathlib.Path) -> list[int]:
+    return sorted(int(m.group(1)) for p in ckpt_dir.iterdir()
+                  if p.is_dir() and (m := _STEP_RE.match(p.name)))
+
+
 def save_checkpoint(ckpt_dir, step: int, tree, metadata: dict | None = None,
                     keep: int = 3):
     ckpt_dir = pathlib.Path(ckpt_dir)
@@ -108,10 +121,13 @@ def save_checkpoint(ckpt_dir, step: int, tree, metadata: dict | None = None,
         shutil.rmtree(final)
     tmp.rename(final)  # atomic commit
 
-    # retention
-    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
-                   if p.is_dir() and p.name.startswith("step_")
-                   and not p.name.endswith(".tmp"))
+    # retention + orphan GC: any step_*.tmp still on disk after the
+    # rename above is debris from a crashed earlier save — the commit
+    # never happened, so the partial write can never be restored from
+    for p in ckpt_dir.iterdir():
+        if p.is_dir() and _TMP_RE.match(p.name):
+            shutil.rmtree(p, ignore_errors=True)
+    steps = _committed_steps(ckpt_dir)
     for s in steps[:-keep]:
         shutil.rmtree(ckpt_dir / f"step_{s:010d}", ignore_errors=True)
     return final
@@ -121,9 +137,7 @@ def latest_step(ckpt_dir) -> int | None:
     ckpt_dir = pathlib.Path(ckpt_dir)
     if not ckpt_dir.exists():
         return None
-    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
-             if p.is_dir() and p.name.startswith("step_")
-             and not p.name.endswith(".tmp")]
+    steps = _committed_steps(ckpt_dir)
     return max(steps) if steps else None
 
 

@@ -138,12 +138,15 @@ def _warm_start_L(M0, k_L, n):
     return L0 + 1e-3 * jnp.tril(jax.random.normal(k_L, (n, n)), -1)
 
 
-def _prox_step(L, gL, t, cfg: "PFMConfig"):
+def _prox_step(L, gL, t, cfg: "PFMConfig", row_offset=0, col_offset=0):
     """One L-update: fused Pallas prox/tril kernel, or its oracle when
-    kernels are disabled. Batch-generic (t may be a (B,) vector)."""
+    kernels are disabled. Batch-generic (t may be a (B,) vector); the
+    offsets place a (tn, tm) tile at its GLOBAL coordinates so the tril
+    mask is exact on 2-D-sharded state (zero offsets = whole matrix)."""
     if cfg.use_kernels:
-        return kops.prox_tril(L, gL, t, t)
-    return kref.prox_tril_ref(L, gL, t, t)
+        return kops.prox_tril(L, gL, t, t, row_offset=row_offset,
+                              col_offset=col_offset)
+    return kref.prox_tril_ref(L, gL, t, t, row_offset, col_offset)
 
 
 def predict_scores(params, cfg: PFMConfig, levels, x_g):
@@ -157,81 +160,25 @@ def predict_scores(params, cfg: PFMConfig, levels, x_g):
     return y
 
 
-def _theta_loss(params, cfg: PFMConfig, levels, x_g, node_mask, A, L,
-                Gamma, key):
-    y = predict_scores(params, cfg, levels, x_g)
-    P = reorder.soft_permutation(
-        y, key, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
-        node_mask=node_mask, noise_scale=cfg.noise_scale,
-        use_kernel=cfg.use_kernels)
-    M = reordered(P, A, cfg)
-    loss = smooth_terms(L, P, A, Gamma, cfg.rho, cfg, M=M)
-    return loss, (P, M)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "opt"))
 def admm_train_matrix(params, opt_state, A, levels_tuple, x_g, node_mask,
                       key, *, cfg: PFMConfig, opt):
     """Run the full inner ADMM loop (Algorithm 1 lines 3-20) on one
-    matrix. levels_tuple: tuple of level dicts (hashable-static shapes).
-    Returns (params, opt_state, metrics)."""
-    levels = list(levels_tuple)
-    n = A.shape[0]
-
-    k_init, k_L, k_loop = jax.random.split(key, 3)
-    y0 = predict_scores(params, cfg, levels, x_g)
-    P0 = reorder.soft_permutation(
-        y0, k_init, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
-        node_mask=node_mask, noise_scale=cfg.noise_scale,
-        use_kernel=cfg.use_kernels)
-    M0 = reordered(P0, A, cfg)
-    L0 = _warm_start_L(M0, k_L, n)   # Gamma0 = 0 (DESIGN.md §6)
-    G0 = jnp.zeros((n, n))
-
-    grad_L = jax.grad(smooth_terms, argnums=0)
-    grad_theta = jax.grad(_theta_loss, argnums=0, has_aux=True)
-
-    def body(k, carry):
-        L, Gamma, P, M, params, opt_state = carry
-        kk = jax.random.fold_in(k_loop, k)
-
-        # ---- L-update: gradient step + fused prox/tril (lines 9-13)
-        # reuse_m: M = P A P^T was already computed when P was (line 17
-        # of the previous iteration / init) — P is not differentiated
-        # here, so reusing the value is exact (§Perf lever 6).
-        gL = grad_L(L, P, A, Gamma, cfg.rho, cfg,
-                    M if cfg.reuse_m else None)
-        L = _prox_step(L, gL, _lipschitz_step(L, A, n, cfg), cfg)
-
-        # ---- theta-update: one Adam step (lines 14-15)
-        gT, _ = grad_theta(params, cfg, levels, x_g, node_mask, A, L,
-                           Gamma, kk)
-        updates, opt_state = opt.update(gT, opt_state, params)
-        params = apply_updates(params, updates)
-
-        # ---- recompute scores / permutation (lines 16-17)
-        y = predict_scores(params, cfg, levels, x_g)
-        P = reorder.soft_permutation(
-            y, jax.random.fold_in(kk, 1), sigma=cfg.sigma, tau=cfg.tau,
-            n_iters=cfg.n_sinkhorn, node_mask=node_mask,
-            noise_scale=cfg.noise_scale, use_kernel=cfg.use_kernels)
-        M = reordered(P, A, cfg)
-
-        # ---- dual update (lines 18-19) — shares M with the carry
-        Gamma = Gamma + cfg.rho * (M - _mm(L, L.T, cfg))
-        return (L, Gamma, P, M, params, opt_state)
-
-    L, Gamma, P, M, params, opt_state = jax.lax.fori_loop(
-        0, cfg.n_admm, body, (L0, G0, P0, M0, params, opt_state))
-
-    R = M - L @ L.T
-    metrics = {
-        "l1": jnp.sum(jnp.abs(L)),
-        "residual": jnp.sqrt(jnp.sum(R * R)),
-        "loss": jnp.sum(jnp.abs(L)) + jnp.sum(Gamma * R)
-                + 0.5 * cfg.rho * jnp.sum(R * R),
-    }
-    return params, opt_state, metrics
+    matrix — the B=1 bucket of the mesh-polymorphic trainer (there is
+    exactly ONE ADMM loop body in this module, `_admm_train_plan`; this
+    entry lifts its arguments to a singleton batch and strips the batch
+    dim from the metrics). Semantics match the paper-literal sequential
+    path exactly: with B=1 the "one shared Adam step per iteration from
+    the bucket-summed grads" IS one Adam step from this matrix's grads,
+    and the per-matrix key derivation (vmapped split/fold_in of the
+    stacked key) produces the identical threefry bits as the unbatched
+    split/fold_in. Returns (params, opt_state, metrics) with scalar
+    metrics."""
+    lift = functools.partial(jax.tree_util.tree_map, lambda x: x[None])
+    params, opt_state, metrics = admm_train_batch(
+        params, opt_state, A[None], lift(tuple(levels_tuple)),
+        x_g[None], None if node_mask is None else node_mask[None],
+        key[None], cfg=cfg, opt=opt)
+    return params, opt_state, {k: v[0] for k, v in metrics.items()}
 
 
 def _batch_metrics(L, Gamma, M, cfg: PFMConfig):
@@ -338,7 +285,14 @@ def _theta_loss_batch(params, cfg: PFMConfig, levels, x_g, node_mask, A,
     (DESIGN.md §8 B-padding rule). NOTE: the zero cotangent still
     backprops through a pad row's forward, and 0 * non-finite = NaN —
     masking alone does NOT protect against non-finite pad rows; the
-    finiteness guarantee comes from pad_bucket duplicating real rows."""
+    finiteness guarantee comes from pad_bucket duplicating real rows.
+
+    This is the REFERENCE formulation of the trainer's θ-loss: untiled
+    plans of `_admm_train_plan` differentiate THIS function verbatim
+    (the bitwise batch<->sharded contract pins its exact dataflow),
+    while tiled plans compute the identical masked per-matrix sums from
+    their plan-shaped R = M - L L^T; the padding grad-mask contract is
+    pinned against this function by tests/test_sharded_pfm.py."""
     y = _predict_scores_batch(params, cfg, levels, x_g)
     P = reorder.soft_permutation_batch(
         y, keys, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
@@ -353,102 +307,14 @@ def _theta_loss_batch(params, cfg: PFMConfig, levels, x_g, node_mask, A,
     return jnp.sum(losses), (P, M)
 
 
-def _admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
-                      keys, batch_weight=None, *, cfg: PFMConfig, opt,
-                      axis_name: str | None = None):
-    """Batched Algorithm 1 inner loop over a shape bucket.
-
-    A: (B, n, n) stacked padded matrices; levels_tuple: stacked hierarchy
-    (graph.stack_hierarchies); x_g: (B, n, in_dim); node_mask: (B, n);
-    keys: (B, 2) stacked PRNG keys (one per matrix, matching the keys the
-    sequential path would use); batch_weight: optional (B,) 0/1 vector —
-    rows with weight 0 (B-padding under a mesh) still run their
-    independent per-matrix ADMM updates but contribute nothing to the
-    shared θ-grads.
-
-    The whole (L, Gamma, P, M) state carries a leading batch dim through
-    one lax.fori_loop; per-matrix L/Gamma/dual updates are independent
-    (vmapped / batched kernels), while the theta-update accumulates
-    gradients across the bucket into ONE shared Adam step per ADMM
-    iteration. Relative to the sequential path this changes only the
-    gradient-accumulation order of the theta steps (B Adam steps with
-    per-matrix grads -> 1 Adam step with summed grads); with a frozen
-    encoder (lr=0) the two paths are numerically identical per matrix.
-
-    axis_name, when set, marks this as the per-device body of the
-    shard_map'd data-parallel trainer (DESIGN.md §8): the local θ-grad
-    sum is psum'd over that mesh axis before the (replicated) Adam step,
-    so every device applies the identical global update — the only
-    cross-device communication in the whole loop.
-
-    Returns (params, opt_state, metrics) with per-matrix (B,) metric
-    vectors."""
-    levels = list(levels_tuple)
-    n = A.shape[-1]
-
-    ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
-    k_init, k_L, k_loop = ks[:, 0], ks[:, 1], ks[:, 2]
-
-    y0 = _predict_scores_batch(params, cfg, levels, x_g)
-    P0 = reorder.soft_permutation_batch(
-        y0, k_init, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
-        node_mask=node_mask, noise_scale=cfg.noise_scale,
-        use_kernel=cfg.use_kernels)
-    M0 = reordered(P0, A, cfg)
-    L0 = jax.vmap(lambda m0, kl: _warm_start_L(m0, kl, n))(M0, k_L)
-    G0 = jnp.zeros_like(M0)
-
-    grad_L = jax.grad(smooth_terms, argnums=0)
-    grad_theta = jax.grad(_theta_loss_batch, argnums=0, has_aux=True)
-
-    def body(k, carry):
-        L, Gamma, P, M, params, opt_state = carry
-        kk = jax.vmap(lambda c: jax.random.fold_in(c, k))(k_loop)
-
-        # ---- L-update: per-matrix grad, ONE batched prox/tril launch
-        gL = jax.vmap(
-            lambda l, p, a, g, m: grad_L(l, p, a, g, cfg.rho, cfg,
-                                         m if cfg.reuse_m else None)
-        )(L, P, A, Gamma, M)
-        t = jax.vmap(lambda l, a: _lipschitz_step(l, a, n, cfg))(L, A)
-        L = _prox_step(L, gL, t, cfg)                        # t: (B,)
-
-        # ---- theta-update: grads summed over the bucket (psum'd over
-        # the mesh when sharded), one shared Adam step
-        gT, _ = grad_theta(params, cfg, levels, x_g, node_mask, A, L,
-                           Gamma, kk, batch_weight)
-        if axis_name is not None:
-            gT = jax.lax.psum(gT, axis_name)
-        updates, opt_state = opt.update(gT, opt_state, params)
-        params = apply_updates(params, updates)
-
-        # ---- recompute scores / permutations with the stepped params
-        y = _predict_scores_batch(params, cfg, levels, x_g)
-        kk1 = jax.vmap(lambda c: jax.random.fold_in(c, 1))(kk)
-        P = reorder.soft_permutation_batch(
-            y, kk1, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
-            node_mask=node_mask, noise_scale=cfg.noise_scale,
-            use_kernel=cfg.use_kernels)
-        M = reordered(P, A, cfg)
-
-        # ---- dual update — shares M with the carry
-        Gamma = Gamma + cfg.rho * (M - _mm(L, jnp.swapaxes(L, -1, -2),
-                                           cfg))
-        return (L, Gamma, P, M, params, opt_state)
-
-    L, Gamma, P, M, params, opt_state = jax.lax.fori_loop(
-        0, cfg.n_admm, body, (L0, G0, P0, M0, params, opt_state))
-
-    return params, opt_state, _batch_metrics(L, Gamma, M, cfg)
-
-
 @_register_compile_cache
 @functools.lru_cache(maxsize=64)
 def _batch_trainer(cfg: PFMConfig, opt):
-    """Compile cache: one jitted trainer per (cfg, opt); jax.jit then
+    """Compile cache: one jitted trainer per (cfg, opt) — the unsharded
+    degenerate plan (no mesh axes) of `_admm_train_plan`; jax.jit then
     caches one XLA program per bucket signature (B, n, hierarchy shapes)
     underneath it, so revisiting a bucket never retraces."""
-    return jax.jit(functools.partial(_admm_train_batch, cfg=cfg, opt=opt))
+    return jax.jit(train_plan_fn(cfg, opt, None, MeshPlan()))
 
 
 def admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
@@ -463,36 +329,20 @@ def admm_train_batch(params, opt_state, A, levels_tuple, x_g, node_mask,
 @functools.lru_cache(maxsize=32)
 def sharded_train_fn(cfg: PFMConfig, opt, mesh, axis: str = "data"):
     """The shard_map'd (unjitted) batched trainer — the jit / .lower()
-    target for both live training and the dry-run. Trace it under
-    `kops.mesh_scope(mesh)` so kernel wrappers lower to the chunked-XLA
-    equivalents (pallas_call has no partitioning rule, DESIGN.md §4)."""
-    from repro.distributed.sharding import get_shard_map, pfm_train_specs
-    in_specs, out_specs = pfm_train_specs(axis)
-    fn = functools.partial(_admm_train_batch, cfg=cfg, opt=opt,
-                           axis_name=axis)
-    # check_rep=False: replication of the P() outputs (params/opt_state)
-    # is guaranteed by construction — every device applies the same Adam
-    # update to the same replicated state from the same psum'd grads —
-    # but the checker cannot see through fori_loop carries.
-    return get_shard_map()(fn, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_rep=False)
+    target for both live training and the dry-run. A thin compatibility
+    wrapper: resolves to `train_plan_fn` on the data-only degenerate
+    MeshPlan (DESIGN.md §15)."""
+    return train_plan_fn(cfg, opt, mesh, make_mesh_plan(
+        mesh, data_axis=axis))
 
 
 @_register_compile_cache
 @functools.lru_cache(maxsize=32)
 def _sharded_trainer(cfg: PFMConfig, opt, mesh, axis: str):
-    """One jitted sharded trainer per (cfg, opt, mesh, axis); kernel
-    dispatch happens at trace time, so only the first call per bucket
-    signature pays for the mesh scope."""
-    from repro.kernels import ops as kops
-    jitted = jax.jit(sharded_train_fn(cfg, opt, mesh, axis))
-
-    def call(params, opt_state, A, levels_tuple, x_g, node_mask, keys,
-             batch_weight):
-        with kops.mesh_scope(mesh):
-            return jitted(params, opt_state, A, levels_tuple, x_g,
-                          node_mask, keys, batch_weight)
-    return call
+    """One jitted sharded trainer per (cfg, opt, mesh, axis) — the
+    data-only degenerate plan of `_trainer_plan`."""
+    return _trainer_plan(cfg, opt, mesh, make_mesh_plan(
+        mesh, data_axis=axis))
 
 
 def admm_train_batch_sharded(params, opt_state, A, levels_tuple, x_g,
@@ -830,283 +680,403 @@ def _soft_perm_tiles_2d(y, keys, cfg: PFMConfig, node_mask, grid, axes,
         use_kernel=cfg.use_kernels, mode=sinkhorn_mode)
 
 
-def _admm_train_2d(params, opt_state, A_tile, levels_tuple, x_g,
-                   node_mask, keys, batch_weight, *, cfg: PFMConfig, opt,
-                   grid, axes, sinkhorn_mode: str = "exact",
-                   comm_mode: str = "gather", carry: str = "dense"):
-    """shard_map body of the 2-D model-parallel bucketed trainer.
+# ----------------- MeshPlan: mesh-shape polymorphism (DESIGN.md §15) ----
+class MeshPlan(NamedTuple):
+    """Which mesh axes exist -> which state axes are sharded. The single
+    trainer body `_admm_train_plan` is driven entirely by this (static,
+    hashable) plan:
 
-    A_tile: (B, tn, tm) — this device's tile of the (B, n, n) bucket
-    (batch dim NOT sharded; tn = n/R, tm = n/C for grid = (R, C)).
-    Everything else (hierarchy, x_g, node_mask, keys, θ, Adam state) is
-    replicated; scores and all (B,)/(n,)-shaped quantities are computed
-    identically on every device. batch_weight masks θ-grad rows exactly
-    as in the 1-D trainer. Returns replicated (params, opt_state,
-    metrics).
+      * data_axis set: the bucket's leading B dim is sharded over it
+        (per-matrix ADMM state batch-sharded, DESIGN.md §8);
+      * row/col axes set: every (n, n) of L/Γ/P/M is carried as
+        (n/R, n/C) tiles over them (DESIGN.md §10-§12), with comm_mode
+        / sinkhorn_mode / carry selecting the tile data movement;
+      * both set (3-axis "data" x "row" x "col" mesh): buckets shard
+        over data AND tiles over (row, col) simultaneously — the
+        full-collection training regime.
 
-    comm_mode="gather" (default) is the cross-backend bitwise-parity
-    path (full-shape transients, DESIGN.md §10); comm_mode="summa"
-    keeps every loop-body transient at panel size or below via the
-    SUMMA tile algebra above (per-backend atol contract, DESIGN.md
-    §11).
+    Exactly ONE θ-grad psum runs per ADMM iteration, over `all_axes`
+    (every axis present, as one tuple-axis collective) — the psum/axis-
+    name contract every collective in distributed/constrain.py follows
+    (collectives name the axis subset they reduce over; none assumes a
+    2-axis mesh). The degenerate plans reproduce the historical
+    trainers: no axes = `admm_train_batch`, data-only =
+    `admm_train_batch_sharded`, row+col-only = `admm_train_2d`."""
+    data_axis: str | None = None
+    row_axis: str | None = None
+    col_axis: str | None = None
+    grid: tuple = (1, 1)       # (R, C) tile grid; (1, 1) when untiled
+    data_size: int = 1         # extent of data_axis (1 when absent)
+    comm_mode: str = "gather"
+    sinkhorn_mode: str = "exact"
+    carry: str = "dense"
 
-    carry="bcsr" (summa only) stores the L/Γ/M loop state as
-    census-packed BCSR-ELL slot arrays and runs the left-sparse SUMMA
-    ring for the loop's contractions (DESIGN.md §12); P drops out of
-    the carry. When the resolved slot budget covers every block
-    (BcsrSpec.full — small tiles, or bcsr_slots >= nbc) the loop runs
-    the DENSE summa body verbatim (pack→scatter is the identity there),
-    so full-occupancy bcsr output is bitwise the dense-carry output;
-    either way the metrics gain a "bcsr_occupancy" (n_admm, 3)
-    trajectory [occupied_frac, captured_mass_frac, budget_frac]."""
-    from repro.distributed import constrain as tc
+    @property
+    def tiled(self) -> bool:
+        return self.row_axis is not None
+
+    @property
+    def axes(self):
+        """(row_axis, col_axis) — the tile axes."""
+        return (self.row_axis, self.col_axis)
+
+    @property
+    def all_axes(self):
+        """Every present mesh axis, in (data, row, col) order — the
+        tuple the per-iteration θ-grad psum reduces over."""
+        return tuple(a for a in (self.data_axis, self.row_axis,
+                                 self.col_axis) if a is not None)
+
+
+def make_mesh_plan(mesh, *, data_axis: str | None = None,
+                   row_axis: str | None = None,
+                   col_axis: str | None = None,
+                   comm_mode: str = "gather",
+                   sinkhorn_mode: str | None = None,
+                   carry: str = "dense") -> MeshPlan:
+    """Build a MeshPlan for `mesh`. With no axis arguments, infers the
+    canonical axes by name ("data"/"row"/"col" — make_mesh3d,
+    make_data_mesh, make_mesh2d all use those names). Mode knobs apply
+    to the tiled part only and are normalized on untiled plans so
+    equivalent plans share one compile-cache entry."""
+    if data_axis is None and row_axis is None and col_axis is None:
+        names = set(mesh.axis_names)
+        data_axis = "data" if "data" in names else None
+        row_axis = "row" if "row" in names else None
+        col_axis = "col" if "col" in names else None
+        if data_axis is None and row_axis is None:
+            raise ValueError(
+                f"cannot infer a MeshPlan from mesh axes "
+                f"{mesh.axis_names!r} — pass data_axis/row_axis/"
+                f"col_axis explicitly")
+    if (row_axis is None) != (col_axis is None):
+        raise ValueError("row_axis and col_axis must be given together")
+    for ax in (data_axis, row_axis, col_axis):
+        if ax is not None and ax not in mesh.axis_names:
+            raise ValueError(f"axis {ax!r} not in mesh axes "
+                             f"{mesh.axis_names!r}")
+    if row_axis is not None:
+        comm_mode, sinkhorn_mode, carry = _resolve_2d_modes(
+            comm_mode, sinkhorn_mode, carry)
+        grid = (mesh.shape[row_axis], mesh.shape[col_axis])
+    else:
+        comm_mode, sinkhorn_mode, carry = "gather", "exact", "dense"
+        grid = (1, 1)
+    data_size = mesh.shape[data_axis] if data_axis is not None else 1
+    return MeshPlan(data_axis, row_axis, col_axis, grid, data_size,
+                    comm_mode, sinkhorn_mode, carry)
+
+
+def _admm_train_plan(params, opt_state, A, levels_tuple, x_g, node_mask,
+                     keys, batch_weight=None, *, cfg: PFMConfig, opt,
+                     plan: MeshPlan):
+    """THE ADMM loop body (Algorithm 1 lines 3-20) — one mesh-shape-
+    polymorphic trainer for every parallelism layout, driven by `plan`
+    (DESIGN.md §15). Shapes are per-device:
+
+    A: (B_loc, n, n) when untiled (B_loc = B / data extent), or
+    (B_loc, tn, tm) tiles when row/col axes are present; the stacked
+    hierarchy / x_g / node_mask / keys / batch_weight carry the same
+    B_loc leading dim (data-sharded or replicated per the plan's spec
+    table, distributed/sharding.pfm_train_specs_plan); θ and the Adam
+    state are always replicated.
+
+    Per ADMM iteration: per-matrix L prox step (tile-offset-aware
+    kernels), ONE θ-grad psum over plan.all_axes into one shared
+    replicated Adam step, score/permutation recompute, dual ascent.
+    comm_mode="gather"|"summa" and carry="dense"|"bcsr" are orthogonal
+    options of this single body (the plan-selected closures below),
+    preserving the historical numerics contracts: untiled and
+    gather-tiled plans are bitwise-equal per matrix at lr=0; summa/bcsr
+    plans carry the per-backend atol contract (DESIGN.md §10-§12).
+
+    Returns (params, opt_state, metrics) with per-matrix (B_loc,)
+    metric vectors (+ the replicated "bcsr_occupancy" (n_admm, 3)
+    trajectory when carry="bcsr")."""
     levels = list(levels_tuple)
-    row_axis, col_axis = axes
-    B, tn, tm = A_tile.shape
-    n = tn * grid[0]
-    summa = comm_mode == "summa"
-    track_occ = carry == "bcsr"
-    spec = None
+    tiled = plan.tiled
+    summa = plan.comm_mode == "summa"
+    track_occ = plan.carry == "bcsr"
+    grid = plan.grid
+    axes = plan.axes
+    tc = bx = spec = None
+    if tiled:
+        from repro.distributed import constrain as tc
+        row_axis, col_axis = axes
+        B, tn, tm = A.shape
+        n = tn * grid[0]
+        r0 = jax.lax.axis_index(row_axis) * tn
+        c0 = jax.lax.axis_index(col_axis) * tm
+    else:
+        n = A.shape[-1]
+        r0 = c0 = 0
     if track_occ:
         from repro.core import bcsr as bx
         spec = bx.resolve_spec(tn, tm, cfg.bcsr_block, cfg.bcsr_slots)
     use_bcsr = track_occ and not spec.full
-    nmesh = grid[0] * grid[1]
+    # occupancy stats are psum-averaged over EVERY present axis (the
+    # fleet mean): row/col shards hold different tiles and data shards
+    # different matrices, so only the all-axis mean is replicated
+    # (matching the P() out-spec). Reduces to the historical /(R*C) on
+    # 2-D-only plans.
+    n_shards = plan.data_size * grid[0] * grid[1]
 
     ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
     k_init, k_L, k_loop = ks[:, 0], ks[:, 1], ks[:, 2]
-    r0 = jax.lax.axis_index(row_axis) * tn
-    c0 = jax.lax.axis_index(col_axis) * tm
 
-    def reordered_tiles(P_t):
-        if summa:
-            return _reordered_2d_summa(P_t, A_tile, cfg, grid, axes)
-        return _reordered_2d(P_t, A_tile, cfg, grid, axes)
-
-    y0 = _predict_scores_batch(params, cfg, levels, x_g)
-    P0_tile = _soft_perm_tiles_2d(y0, k_init, cfg, node_mask, grid,
-                                  axes, sinkhorn_mode)
-    M0_tile = reordered_tiles(P0_tile)
-    if summa:
-        L0_tile = jax.vmap(
-            lambda m0, kl: _warm_start_L_tile(m0, kl, n, r0, c0, tn,
-                                              tm))(M0_tile, k_L)
-    else:
-        M0_full = tc.gather_full(M0_tile, row_axis, col_axis)
-        L0_full = jax.vmap(lambda m0, kl: _warm_start_L(m0, kl, n))(
-            M0_full, k_L)
-        L0_tile = tc.slice_tile(L0_full, grid, row_axis, col_axis)
-    G0_tile = jnp.zeros_like(M0_tile)
-
+    # ---- plan-selected ops: chosen ONCE at trace time; each closure is
+    # the exact op sequence of the historical trainer for that layout,
+    # which is what keeps the bitwise contracts intact.
     grad_L = jax.grad(smooth_terms, argnums=0)
-    smooth_tile = _make_smooth_tile(cfg, grid, axes) if summa else None
+    # Untiled plans take their θ-grad through the reference formulation
+    # verbatim (LL^T recomputed inside smooth_terms, no reuse): the
+    # bitwise batch<->data-sharded contract is sensitive to the exact
+    # dataflow — hoisting LL^T out of the loss closure reassociates a
+    # rounding boundary between the B and B/D compiles. Tiled plans use
+    # the R-based tile loss below (stripe VJP needs R explicitly).
+    grad_theta = (None if tiled else
+                  jax.grad(_theta_loss_batch, argnums=0, has_aux=True))
+    smooth_tile = (_make_smooth_tile(cfg, grid, axes)
+                   if (tiled and summa and not use_bcsr) else None)
     smooth_tile_b = (_make_smooth_tile_bcsr(cfg, grid, axes, spec)
                      if use_bcsr else None)
 
-    if use_bcsr:
-        # ---------------- BCSR slot-carry loop (DESIGN.md §12) --------
-        # L/Γ/M live in the fori_loop carry as (values, col_ids) slot
-        # pairs; P is dead in the summa body (recomputed from θ each
-        # iteration before its only read) and drops out entirely. Every
-        # contraction whose LEFT operand is one of the carried tiles
-        # runs the block-sparse SUMMA ring, skipping unoccupied blocks.
-        K = max(1, cfg.bcsr_repack_every)
+    def soft_perm(y, kv):
+        if tiled:
+            return _soft_perm_tiles_2d(y, kv, cfg, node_mask, grid,
+                                       axes, plan.sinkhorn_mode)
+        return reorder.soft_permutation_batch(
+            y, kv, sigma=cfg.sigma, tau=cfg.tau, n_iters=cfg.n_sinkhorn,
+            node_mask=node_mask, noise_scale=cfg.noise_scale,
+            use_kernel=cfg.use_kernels)
 
-        def _prox_dense(op):
-            # repack iteration: dense prox (support may move), then a
-            # fresh census re-ranks the budget. Collective-free — the
-            # psum of the stats happens outside the cond.
-            L_t_, gL_t_, Lv_, Lc_, t_ = op
-            if cfg.use_kernels:
-                Ld = kops.prox_tril(L_t_, gL_t_, t_, t_, row_offset=r0,
-                                    col_offset=c0)
-            else:
-                Ld = kref.prox_tril_ref(L_t_, gL_t_, t_, t_, r0, c0)
-            v, c = bx.pack_tile(Ld, spec)
-            return v, c, bx.census_stats(Ld, spec, cfg.bcsr_thresh)
+    def reordered_dense(P_t):
+        """P A P^T tile with the plan's dense data movement (init, and
+        every dense-carry loop)."""
+        if not tiled:
+            return reordered(P_t, A, cfg)
+        if summa:
+            return _reordered_2d_summa(P_t, A, cfg, grid, axes)
+        return _reordered_2d(P_t, A, cfg, grid, axes)
 
-        def _prox_frozen(op):
-            # frozen-schedule iteration: prox touches ONLY the occupied
-            # slots (support held fixed at the last census).
-            L_t_, gL_t_, Lv_, Lc_, t_ = op
-            gv_ = bx.gather_tile(gL_t_, Lc_, spec)
-            if cfg.use_kernels:
-                v = kops.prox_tril_blocks(Lv_, gv_, Lc_, t_, t_,
-                                          row_offset=r0, col_offset=c0)
-            else:
-                v = kref.prox_tril_blocks_ref(Lv_, gv_, Lc_, t_, t_,
-                                              r0, c0)
-            return v, Lc_, bx.census_stats_slots(v, spec,
-                                                 cfg.bcsr_thresh)
+    def reordered_loop(P_t):
+        """P A P^T inside the loop: the bcsr carry budget-packs both
+        contractions' left operands (DESIGN.md §12)."""
+        if use_bcsr:
+            return _reordered_2d_summa_bcsr(P_t, A, cfg, grid, axes,
+                                            spec)
+        return reordered_dense(P_t)
 
-        def body_bcsr(k, carry_b):
-            Lv, Lc, Gv, Gc, Mv, Mc, occ, params, opt_state = carry_b
-            kk = jax.vmap(lambda c: jax.random.fold_in(c, k))(k_loop)
-            L_t = bx.scatter_tile(Lv, Lc, spec)
-            G_t = bx.scatter_tile(Gv, Gc, spec)
-            M_t = bx.scatter_tile(Mv, Mc, spec)
+    def llt_of(L, packed=None):
+        """This iteration's L L^T (shared by the θ-loss R and the dual
+        ascent — P is not differentiated through it, so reuse is
+        exact)."""
+        if use_bcsr:
+            Lv, Lc = packed
+            return _llt_tile_summa_bcsr(L, Lv, Lc, grid, axes)
+        if not tiled:
+            return _mm(L, jnp.swapaxes(L, -1, -2), cfg)
+        if summa:
+            return _llt_tile_summa(L, cfg, grid, axes)
+        L_full = tc.gather_full(L, row_axis, col_axis)
+        return _llt_tile(L_full, cfg, grid, axes)
 
-            # ---- L-update: stripe-VJP grad with left-sparse rings
-            gL_t = jax.grad(
-                lambda l: smooth_tile_b(l, G_t, M_t))(L_t)
-            t = _lipschitz_step_tile(L_t, A_tile, n, cfg, axes)
-            op = (L_t, gL_t, Lv, Lc, t)
+    def l_grad_and_step(L, G, P, M):
+        """(∂smooth/∂L, Lipschitz-scaled prox step) for the plan's
+        layout: stripe-VJP from tiles (summa/bcsr), reference-shape
+        autodiff on gathered operands (gather-tiled), or plain vmapped
+        autodiff (untiled)."""
+        if use_bcsr:
+            gL = jax.grad(lambda l: smooth_tile_b(l, G, M))(L)
+            t = _lipschitz_step_tile(L, A, n, cfg, axes)
+        elif tiled and summa:
+            gL = jax.grad(lambda l: smooth_tile(l, G, M))(L)
+            t = _lipschitz_step_tile(L, A, n, cfg, axes)
+        elif tiled:
+            A_full = tc.gather_full(A, row_axis, col_axis)
+            L_full = tc.gather_full(L, row_axis, col_axis)
+            G_full = tc.gather_full(G, row_axis, col_axis)
+            P_full = tc.gather_full(P, row_axis, col_axis)
+            M_full = tc.gather_full(M, row_axis, col_axis)
+            gL_full = jax.vmap(
+                lambda l, p, a, g, m: grad_L(l, p, a, g, cfg.rho, cfg,
+                                             m if cfg.reuse_m else None)
+            )(L_full, P_full, A_full, G_full, M_full)
+            gL = tc.slice_tile(gL_full, grid, row_axis, col_axis)
+            t = jax.vmap(lambda l, a: _lipschitz_step(l, a, n, cfg))(
+                L_full, A_full)
+        else:
+            gL = jax.vmap(
+                lambda l, p, a, g, m: grad_L(l, p, a, g, cfg.rho, cfg,
+                                             m if cfg.reuse_m else None)
+            )(L, P, A, G, M)
+            t = jax.vmap(lambda l, a: _lipschitz_step(l, a, n, cfg))(
+                L, A)
+        return gL, t
+
+    # ---- bcsr prox pair (DESIGN.md §12): dense-prox-and-recensus on
+    # repack iterations, slots-only prox on frozen-schedule iterations
+    K = max(1, cfg.bcsr_repack_every)
+
+    def _prox_dense(op):
+        L_t_, gL_t_, Lv_, Lc_, t_ = op
+        Ld = _prox_step(L_t_, gL_t_, t_, cfg, r0, c0)
+        v, c = bx.pack_tile(Ld, spec)
+        return v, c, bx.census_stats(Ld, spec, cfg.bcsr_thresh)
+
+    def _prox_frozen(op):
+        L_t_, gL_t_, Lv_, Lc_, t_ = op
+        gv_ = bx.gather_tile(gL_t_, Lc_, spec)
+        if cfg.use_kernels:
+            v = kops.prox_tril_blocks(Lv_, gv_, Lc_, t_, t_,
+                                      row_offset=r0, col_offset=c0)
+        else:
+            v = kref.prox_tril_blocks_ref(Lv_, gv_, Lc_, t_, t_, r0, c0)
+        return v, Lc_, bx.census_stats_slots(v, spec, cfg.bcsr_thresh)
+
+    # ---- init (outside the loop; the only place a full (B, n, n) may
+    # transiently exist under gather — summa inits from tiles)
+    y0 = _predict_scores_batch(params, cfg, levels, x_g)
+    P0 = soft_perm(y0, k_init)
+    M0 = reordered_dense(P0)
+    if not tiled:
+        L0 = jax.vmap(lambda m0, kl: _warm_start_L(m0, kl, n))(M0, k_L)
+    elif summa:
+        L0 = jax.vmap(lambda m0, kl: _warm_start_L_tile(
+            m0, kl, n, r0, c0, tn, tm))(M0, k_L)
+    else:
+        M0_full = tc.gather_full(M0, row_axis, col_axis)
+        L0_full = jax.vmap(lambda m0, kl: _warm_start_L(m0, kl, n))(
+            M0_full, k_L)
+        L0 = tc.slice_tile(L0_full, grid, row_axis, col_axis)
+    G0 = jnp.zeros_like(M0)
+
+    def body(k, carry):
+        if track_occ:
+            state, occ, params, opt_state = carry
+        else:
+            state, params, opt_state = carry
+            occ = None
+        if use_bcsr:
+            Lv, Lc, Gv, Gc, Mv, Mc = state
+            L = bx.scatter_tile(Lv, Lc, spec)
+            G = bx.scatter_tile(Gv, Gc, spec)
+            M = bx.scatter_tile(Mv, Mc, spec)
+            P = None           # dead in the summa body; never carried
+        else:
+            L, G, P, M = state
+        kk = jax.vmap(lambda c: jax.random.fold_in(c, k))(k_loop)
+
+        # ---- L-update: gradient step + fused prox/tril (lines 9-13)
+        gL, t = l_grad_and_step(L, G, P, M)
+        if use_bcsr:
+            op = (L, gL, Lv, Lc, t)
             if K == 1:
                 Lv, Lc, stats = _prox_dense(op)
             else:
                 Lv, Lc, stats = jax.lax.cond(
                     jnp.equal(jnp.mod(k, K), 0), _prox_dense,
                     _prox_frozen, op)
-            stats = tc.psum_scope(stats, row_axis, col_axis) / nmesh
+            L = bx.scatter_tile(Lv, Lc, spec)
+            packed = (Lv, Lc)
+        else:
+            L = _prox_step(L, gL, t, cfg, r0, c0)
+            packed = None
+            stats = (bx.census_stats(L, spec, cfg.bcsr_thresh)
+                     if track_occ else None)
+        if track_occ:
+            stats = tc.psum_scope(stats, *plan.all_axes) / n_shards
             occ = jax.lax.dynamic_update_slice(occ, stats[None], (k, 0))
-            L_t = bx.scatter_tile(Lv, Lc, spec)
-            llt_t = _llt_tile_summa_bcsr(L_t, Lv, Lc, grid, axes)
+        llt = llt_of(L, packed) if tiled else None
 
-            # ---- theta-update (identical structure to the dense body)
-            def theta_loss_2d(p_):
+        # ---- theta-update (lines 14-15): masked per-matrix smooth
+        # terms, grads summed over the local bucket then psum'd ONCE
+        # over every present mesh axis into one shared replicated Adam
+        # step — the only θ-communication in the whole loop. Untiled:
+        # the reference `_theta_loss_batch` graph verbatim; tiled: the
+        # R-based tile loss reusing this iteration's LL^T.
+        if tiled:
+            def theta_loss(p_):
                 y = _predict_scores_batch(p_, cfg, levels, x_g)
-                Pt = _soft_perm_tiles_2d(y, kk, cfg, node_mask, grid,
-                                         axes, sinkhorn_mode)
-                Mt = _reordered_2d_summa_bcsr(Pt, A_tile, cfg, grid,
-                                              axes, spec)
-                R = Mt - llt_t
-                per_b = jnp.sum(G_t * R, axis=(-2, -1)) \
+                Pt = soft_perm(y, kk)
+                Mt = reordered_loop(Pt)
+                R = Mt - llt
+                per_b = jnp.sum(G * R, axis=(-2, -1)) \
                     + 0.5 * cfg.rho * jnp.sum(R * R, axis=(-2, -1))
                 if batch_weight is not None:
                     per_b = jnp.where(batch_weight > 0, per_b, 0.0)
                 return jnp.sum(per_b)
 
-            gT = jax.grad(theta_loss_2d)(params)
-            gT = jax.lax.psum(jax.lax.psum(gT, row_axis), col_axis)
-            updates, opt_state = opt.update(gT, opt_state, params)
-            params = apply_updates(params, updates)
-
-            # ---- recompute M and the dual with the stepped params; P
-            # is a transient here, never carried
-            y = _predict_scores_batch(params, cfg, levels, x_g)
-            kk1 = jax.vmap(lambda c: jax.random.fold_in(c, 1))(kk)
-            P_t = _soft_perm_tiles_2d(y, kk1, cfg, node_mask, grid,
-                                      axes, sinkhorn_mode)
-            M_new = _reordered_2d_summa_bcsr(P_t, A_tile, cfg, grid,
-                                             axes, spec)
-            G_new = G_t + cfg.rho * (M_new - llt_t)
-            Gv, Gc = bx.pack_tile(G_new, spec)
-            Mv, Mc = bx.pack_tile(M_new, spec)
-            return (Lv, Lc, Gv, Gc, Mv, Mc, occ, params, opt_state)
-
-        Lv0, Lc0 = bx.pack_tile(L0_tile, spec)
-        Gv0, Gc0 = bx.pack_tile(G0_tile, spec)
-        Mv0, Mc0 = bx.pack_tile(M0_tile, spec)
-        occ0 = jnp.zeros((cfg.n_admm, 3), jnp.float32)
-        Lv, Lc, Gv, Gc, Mv, Mc, occ, params, opt_state = \
-            jax.lax.fori_loop(0, cfg.n_admm, body_bcsr,
-                              (Lv0, Lc0, Gv0, Gc0, Mv0, Mc0, occ0,
-                               params, opt_state))
-        L_t = bx.scatter_tile(Lv, Lc, spec)
-        G_t = bx.scatter_tile(Gv, Gc, spec)
-        M_t = bx.scatter_tile(Mv, Mc, spec)
-        metrics = _batch_metrics_tile(L_t, G_t, M_t, cfg, grid, axes)
-        metrics["bcsr_occupancy"] = occ
-        return params, opt_state, metrics
-
-    def body(k, carry):
-        L_t, G_t, P_t, M_t, params, opt_state = carry
-        kk = jax.vmap(lambda c: jax.random.fold_in(c, k))(k_loop)
-
-        # ---- L-update: stripe-VJP grad from tiles (summa) or
-        # reference-shape grad on gathered operands (gather); fused
-        # prox/tril is tile-local from global coordinates either way
-        if summa:
-            gL_t = jax.grad(
-                lambda l: smooth_tile(l, G_t, M_t))(L_t)
-            t = _lipschitz_step_tile(L_t, A_tile, n, cfg, axes)
+            gT = jax.grad(theta_loss)(params)
         else:
-            A_full = tc.gather_full(A_tile, row_axis, col_axis)
-            L_full = tc.gather_full(L_t, row_axis, col_axis)
-            G_full = tc.gather_full(G_t, row_axis, col_axis)
-            P_full = tc.gather_full(P_t, row_axis, col_axis)
-            M_full = tc.gather_full(M_t, row_axis, col_axis)
-            gL_full = jax.vmap(
-                lambda l, p, a, g, m: grad_L(l, p, a, g, cfg.rho, cfg,
-                                             m if cfg.reuse_m else None)
-            )(L_full, P_full, A_full, G_full, M_full)
-            gL_t = tc.slice_tile(gL_full, grid, row_axis, col_axis)
-            t = jax.vmap(lambda l, a: _lipschitz_step(l, a, n, cfg))(
-                L_full, A_full)
-        if cfg.use_kernels:
-            L_t = kops.prox_tril(L_t, gL_t, t, t, row_offset=r0,
-                                 col_offset=c0)
-        else:
-            L_t = kref.prox_tril_ref(L_t, gL_t, t, t, r0, c0)
-        if summa:
-            llt_t = _llt_tile_summa(L_t, cfg, grid, axes)
-        else:
-            L_full = tc.gather_full(L_t, row_axis, col_axis)
-            llt_t = _llt_tile(L_full, cfg, grid, axes)
-
-        # ---- theta-update: tile-local loss, grads psum'd over BOTH
-        # mesh axes into one shared replicated Adam step
-        def theta_loss_2d(p_):
-            y = _predict_scores_batch(p_, cfg, levels, x_g)
-            Pt = _soft_perm_tiles_2d(y, kk, cfg, node_mask, grid,
-                                     axes, sinkhorn_mode)
-            Mt = reordered_tiles(Pt)
-            R = Mt - llt_t
-            per_b = jnp.sum(G_t * R, axis=(-2, -1)) \
-                + 0.5 * cfg.rho * jnp.sum(R * R, axis=(-2, -1))
-            if batch_weight is not None:
-                per_b = jnp.where(batch_weight > 0, per_b, 0.0)
-            return jnp.sum(per_b)
-
-        gT = jax.grad(theta_loss_2d)(params)
-        gT = jax.lax.psum(jax.lax.psum(gT, row_axis), col_axis)
+            gT, _ = grad_theta(params, cfg, levels, x_g, node_mask, A,
+                               L, G, kk, batch_weight)
+        if plan.all_axes:
+            gT = jax.lax.psum(gT, plan.all_axes)
         updates, opt_state = opt.update(gT, opt_state, params)
         params = apply_updates(params, updates)
 
-        # ---- recompute scores / permutations with the stepped params
+        # ---- recompute scores / permutations (lines 16-17)
         y = _predict_scores_batch(params, cfg, levels, x_g)
         kk1 = jax.vmap(lambda c: jax.random.fold_in(c, 1))(kk)
-        P_t = _soft_perm_tiles_2d(y, kk1, cfg, node_mask, grid, axes,
-                                  sinkhorn_mode)
-        M_t = reordered_tiles(P_t)
+        P = soft_perm(y, kk1)
+        M = reordered_loop(P)
 
-        # ---- dual update — tile-local, reusing this iteration's LL^T
-        G_t = G_t + cfg.rho * (M_t - llt_t)
-        return (L_t, G_t, P_t, M_t, params, opt_state)
+        # ---- dual update (lines 18-19) — tiled plans reuse this
+        # iteration's LL^T; untiled recomputes it in place (the
+        # reference graph, same bitwise-contract note as grad_theta)
+        if tiled:
+            G = G + cfg.rho * (M - llt)
+        else:
+            G = G + cfg.rho * (M - _mm(L, jnp.swapaxes(L, -1, -2),
+                                       cfg))
+        if use_bcsr:
+            Gv, Gc = bx.pack_tile(G, spec)
+            Mv, Mc = bx.pack_tile(M, spec)
+            state = (Lv, Lc, Gv, Gc, Mv, Mc)
+        else:
+            state = (L, G, P, M)
+        if track_occ:
+            return (state, occ, params, opt_state)
+        return (state, params, opt_state)
 
+    if use_bcsr:
+        Lv0, Lc0 = bx.pack_tile(L0, spec)
+        Gv0, Gc0 = bx.pack_tile(G0, spec)
+        Mv0, Mc0 = bx.pack_tile(M0, spec)
+        state0 = (Lv0, Lc0, Gv0, Gc0, Mv0, Mc0)
+    else:
+        state0 = (L0, G0, P0, M0)
     if track_occ:
-        # spec.full dense fallback of carry="bcsr": run the dense summa
-        # body VERBATIM (this is what makes full-occupancy bcsr bitwise
-        # the dense carry), only wrapping it to record the occupancy
-        # trajectory the bcsr loop would have reported.
-        def body_occ(k, c2):
-            occ, inner = c2
-            inner = body(k, inner)
-            stats = bx.census_stats(inner[0], spec, cfg.bcsr_thresh)
-            stats = tc.psum_scope(stats, row_axis, col_axis) / nmesh
-            occ = jax.lax.dynamic_update_slice(occ, stats[None], (k, 0))
-            return occ, inner
-
         occ0 = jnp.zeros((cfg.n_admm, 3), jnp.float32)
-        occ, (L_t, G_t, P_t, M_t, params, opt_state) = jax.lax.fori_loop(
-            0, cfg.n_admm, body_occ,
-            (occ0, (L0_tile, G0_tile, P0_tile, M0_tile, params,
-                    opt_state)))
-        metrics = _batch_metrics_tile(L_t, G_t, M_t, cfg, grid, axes)
+        state, occ, params, opt_state = jax.lax.fori_loop(
+            0, cfg.n_admm, body, (state0, occ0, params, opt_state))
+    else:
+        state, params, opt_state = jax.lax.fori_loop(
+            0, cfg.n_admm, body, (state0, params, opt_state))
+
+    if use_bcsr:
+        Lv, Lc, Gv, Gc, Mv, Mc = state
+        L = bx.scatter_tile(Lv, Lc, spec)
+        G = bx.scatter_tile(Gv, Gc, spec)
+        M = bx.scatter_tile(Mv, Mc, spec)
+    else:
+        L, G, P, M = state
+
+    if tiled and summa:
+        metrics = _batch_metrics_tile(L, G, M, cfg, grid, axes)
+    elif tiled:
+        L = tc.gather_full(L, row_axis, col_axis)
+        G = tc.gather_full(G, row_axis, col_axis)
+        M = tc.gather_full(M, row_axis, col_axis)
+        metrics = _batch_metrics(L, G, M, cfg)
+    else:
+        metrics = _batch_metrics(L, G, M, cfg)
+    if track_occ:
         metrics["bcsr_occupancy"] = occ
-        return params, opt_state, metrics
+    return params, opt_state, metrics
 
-    L_t, G_t, P_t, M_t, params, opt_state = jax.lax.fori_loop(
-        0, cfg.n_admm, body,
-        (L0_tile, G0_tile, P0_tile, M0_tile, params, opt_state))
 
-    if summa:
-        return params, opt_state, _batch_metrics_tile(L_t, G_t, M_t,
-                                                      cfg, grid, axes)
-    L = tc.gather_full(L_t, row_axis, col_axis)
-    G = tc.gather_full(G_t, row_axis, col_axis)
-    M = tc.gather_full(M_t, row_axis, col_axis)
-    return params, opt_state, _batch_metrics(L, G, M, cfg)
 
 
 def _resolve_2d_modes(comm_mode: str, sinkhorn_mode: str | None,
@@ -1135,23 +1105,21 @@ def _resolve_2d_modes(comm_mode: str, sinkhorn_mode: str | None,
 
 
 @_register_compile_cache
-@functools.lru_cache(maxsize=16)
-def train_2d_fn(cfg: PFMConfig, opt, mesh, axes=("row", "col"),
-                sinkhorn_mode: str | None = None,
-                comm_mode: str = "gather", carry: str = "dense"):
-    """The shard_map'd (unjitted) 2-D trainer — the jit / .lower()
-    target for live training and the train_8k dry-run. Trace under
+@functools.lru_cache(maxsize=32)
+def train_plan_fn(cfg: PFMConfig, opt, mesh, plan: MeshPlan):
+    """The (unjitted) plan trainer — the jit / .lower() target for live
+    training and the dry-runs. With no mesh axes this is the bare body
+    (jax.jit's target for the single-device bucketed path); with any
+    axis present it is the whole loop wrapped in ONE shard_map region
+    over `mesh` with the plan's spec table. Trace under
     `kops.mesh_scope(mesh)` so kernel wrappers lower to their
     shard-friendly XLA forms inside the region."""
+    fn = functools.partial(_admm_train_plan, cfg=cfg, opt=opt, plan=plan)
+    if not plan.all_axes:
+        return fn
     from repro.distributed.sharding import (get_shard_map,
-                                            pfm_train_specs_2d)
-    comm_mode, sinkhorn_mode, carry = _resolve_2d_modes(
-        comm_mode, sinkhorn_mode, carry)
-    in_specs, out_specs = pfm_train_specs_2d(axes)
-    grid = (mesh.shape[axes[0]], mesh.shape[axes[1]])
-    fn = functools.partial(_admm_train_2d, cfg=cfg, opt=opt, grid=grid,
-                           axes=tuple(axes), sinkhorn_mode=sinkhorn_mode,
-                           comm_mode=comm_mode, carry=carry)
+                                            pfm_train_specs_plan)
+    in_specs, out_specs = pfm_train_specs_plan(plan)
     # check_rep=False: replication of the P() outputs is by construction
     # (identical psum'd updates on identical replicated state), but the
     # checker cannot see through fori_loop carries.
@@ -1160,11 +1128,13 @@ def train_2d_fn(cfg: PFMConfig, opt, mesh, axes=("row", "col"),
 
 
 @_register_compile_cache
-@functools.lru_cache(maxsize=16)
-def _trainer_2d(cfg: PFMConfig, opt, mesh, axes, sinkhorn_mode,
-                comm_mode, carry):
-    jitted = jax.jit(train_2d_fn(cfg, opt, mesh, axes, sinkhorn_mode,
-                                 comm_mode, carry))
+@functools.lru_cache(maxsize=32)
+def _trainer_plan(cfg: PFMConfig, opt, mesh, plan: MeshPlan):
+    """One jitted plan trainer per (cfg, opt, mesh, plan); jax.jit then
+    caches one XLA program per bucket signature underneath."""
+    jitted = jax.jit(train_plan_fn(cfg, opt, mesh, plan))
+    if mesh is None:
+        return jitted
 
     def call(params, opt_state, A, levels_tuple, x_g, node_mask, keys,
              batch_weight):
@@ -1172,6 +1142,51 @@ def _trainer_2d(cfg: PFMConfig, opt, mesh, axes, sinkhorn_mode,
             return jitted(params, opt_state, A, levels_tuple, x_g,
                           node_mask, keys, batch_weight)
     return call
+
+
+def admm_train_plan(params, opt_state, A, levels_tuple, x_g, node_mask,
+                    keys, batch_weight, *, cfg: PFMConfig, opt, mesh,
+                    plan: MeshPlan):
+    """Bucketed ADMM under an arbitrary MeshPlan — the general entry
+    point behind `PFM.fit(mesh3d=...)` (and, through degenerate plans,
+    behind every other trainer entry). On a 3-axis plan the bucket's
+    leading B dim (a multiple of the DATA-axis extent — pad with
+    core/pfm.pad_bucket) shards over `plan.data_axis` while every
+    (n, n) of L/Γ/P/M lives as (n/R, n/C) tiles over the (row, col)
+    axes, n divisible by both tile-grid extents. θ/Adam state stay
+    replicated: per-iteration tile-and-shard-local θ-grad sums are
+    psum'd once over all present axes into one shared Adam step.
+
+    Parity contracts (tests/test_admm_3d.py): comm_mode="gather" is
+    bitwise-equal per matrix to `admm_train_batch` at lr=0 on a given
+    backend; "summa" and carry="bcsr" carry the per-backend atol
+    contracts of DESIGN.md §11/§12."""
+    return _trainer_plan(cfg, opt, mesh, plan)(
+        params, opt_state, A, levels_tuple, x_g, node_mask, keys,
+        batch_weight)
+
+
+@_register_compile_cache
+@functools.lru_cache(maxsize=16)
+def train_2d_fn(cfg: PFMConfig, opt, mesh, axes=("row", "col"),
+                sinkhorn_mode: str | None = None,
+                comm_mode: str = "gather", carry: str = "dense"):
+    """Compatibility wrapper: the 2-D (row, col)-only degenerate plan
+    of `train_plan_fn` (DESIGN.md §15)."""
+    return train_plan_fn(cfg, opt, mesh, make_mesh_plan(
+        mesh, row_axis=axes[0], col_axis=axes[1], comm_mode=comm_mode,
+        sinkhorn_mode=sinkhorn_mode, carry=carry))
+
+
+@_register_compile_cache
+@functools.lru_cache(maxsize=16)
+def _trainer_2d(cfg: PFMConfig, opt, mesh, axes, sinkhorn_mode,
+                comm_mode, carry):
+    """Compatibility wrapper onto `_trainer_plan` (2-D degenerate
+    plan)."""
+    return _trainer_plan(cfg, opt, mesh, make_mesh_plan(
+        mesh, row_axis=axes[0], col_axis=axes[1], comm_mode=comm_mode,
+        sinkhorn_mode=sinkhorn_mode, carry=carry))
 
 
 def admm_train_2d(params, opt_state, A, levels_tuple, x_g, node_mask,

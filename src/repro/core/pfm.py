@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from typing import Any, Dict, List, Sequence
 
 import numpy as np
@@ -21,6 +22,7 @@ from repro.core import admm as admm_mod
 from repro.core import encoder as enc
 from repro.core.admm import (PFMConfig, admm_train_2d, admm_train_batch,
                              admm_train_batch_sharded, admm_train_matrix,
+                             admm_train_plan, make_mesh_plan,
                              predict_scores_batch)
 from repro.core.graph import (GraphData, build_hierarchy, dense_padded,
                               stack_hierarchies)
@@ -177,7 +179,18 @@ class PFM:
             gd = build_hierarchy(A, seed=self.seed)
         levels = gd.as_jnp()
         if self.x_mode == "random":
-            key = jax.random.PRNGKey(self.seed)
+            # fold a per-matrix content salt into the key: a bare
+            # PRNGKey(seed) handed every same-n_pad matrix IDENTICAL
+            # "random" features, silently degenerating the Table 3
+            # random-features ablation. Content (not name) keyed so the
+            # same matrix reproduces across calls regardless of how it
+            # was labeled; masked to 31 bits for int32 fold_in.
+            salt = zlib.crc32(np.asarray(A.shape, np.int64).tobytes())
+            for part in (A.indptr, A.indices, A.data):
+                salt = zlib.crc32(np.ascontiguousarray(part).tobytes(),
+                                  salt)
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                     salt & 0x7FFFFFFF)
             x_g = jax.random.normal(key, (gd.n_pad, 1))
         else:
             se = self.se_params if A.shape[0] <= self.se_max_n else None
@@ -201,7 +214,7 @@ class PFM:
     # ------------------------------------------------------------ train
     def fit(self, matrices: Sequence, epochs: int = 1, verbose=False, *,
             batched: bool = True, max_batch: int = 32, mesh=None,
-            mesh2d=None, comm_mode: str = "gather",
+            mesh2d=None, mesh3d=None, comm_mode: str = "gather",
             carry: str = "dense"):
         """Algorithm 1: outer epochs over the training set, inner ADMM
         per matrix. `matrices` may be scipy matrices or (name, A) pairs.
@@ -233,21 +246,41 @@ class PFM:
         bucketed path, so with a frozen encoder the two are exactly
         equivalent per matrix (bitwise — tests/test_admm_2d.py).
 
-        comm_mode (2-D path only) selects the trainer's data-movement
-        strategy: "gather" (default — full-shape transients, bitwise
-        lr=0 parity) or "summa" (every loop transient at tile/panel
-        size, per-backend atol parity — the production mode for n
-        beyond a device's memory, DESIGN.md §11). carry (2-D summa
-        only) selects the ADMM loop-state representation: "dense"
-        tiles, or "bcsr" block-sparse slot arrays with on-device
-        densify-on-fill-in repacking (DESIGN.md §12)."""
+        mesh3d, when given (implies batched; mutually exclusive with
+        mesh and mesh2d), runs each bucket through the mesh-shape-
+        polymorphic plan trainer over a ("data", "row", "col") mesh
+        (launch/mesh.make_mesh3d, DESIGN.md §15): the batch dim is
+        padded to a multiple of the DATA-axis extent and sharded over
+        it, while every (n, n) of the dense ADMM state tiles over the
+        (row, col) axes simultaneously — the full-collection
+        (many-matrix × large-n) regime. A 3-axis mesh passed via
+        mesh= is routed here too (mesh=make_mesh3d(D, R, C) works).
+
+        comm_mode (tiled paths only) selects the trainer's
+        data-movement strategy: "gather" (default — full-shape
+        transients, bitwise lr=0 parity) or "summa" (every loop
+        transient at tile/panel size, per-backend atol parity — the
+        production mode for n beyond a device's memory, DESIGN.md
+        §11). carry (summa only) selects the ADMM loop-state
+        representation: "dense" tiles, or "bcsr" block-sparse slot
+        arrays with on-device densify-on-fill-in repacking
+        (DESIGN.md §12)."""
         prepped = self._prep_items(matrices)  # PreparedMatrix pass through
 
-        if mesh is not None and mesh2d is not None:
-            raise ValueError("fit(mesh=...) (1-D data-parallel) and "
-                             "fit(mesh2d=...) (2-D model-parallel) are "
+        if mesh is not None and mesh3d is None \
+                and {"row", "col"} <= set(mesh.axis_names):
+            mesh, mesh3d = None, mesh    # fit(mesh=make_mesh3d(...))
+        if sum(m is not None for m in (mesh, mesh2d, mesh3d)) > 1:
+            raise ValueError("fit(mesh=...) (1-D data-parallel), "
+                             "fit(mesh2d=...) (2-D model-parallel), and "
+                             "fit(mesh3d=...) (3-axis composed) are "
                              "mutually exclusive")
         key = jax.random.PRNGKey(self.seed + 1)
+        if mesh3d is not None:
+            return self._fit_3d(prepped, mesh3d, epochs=epochs,
+                                max_batch=max_batch, key=key,
+                                verbose=verbose, comm_mode=comm_mode,
+                                carry=carry)
         if mesh2d is not None:
             return self._fit_2d(prepped, mesh2d, epochs=epochs,
                                 max_batch=max_batch, key=key,
@@ -404,6 +437,88 @@ class PFM:
                     if verbose:
                         print(f"  epoch {epoch} {name} "
                               f"[2d {R}x{C}]: l1={rec['l1']:.1f} "
+                              f"res={rec['residual']:.2f}")
+        return self.history
+
+    def _fit_3d(self, prepped, mesh3d, *, epochs, max_batch, key,
+                verbose, comm_mode: str = "gather",
+                carry: str = "dense"):
+        """3-axis composed epochs (DESIGN.md §15): buckets batch-shard
+        over the data axis (B padded to the DATA-axis extent — NOT the
+        total device count — with pad rows at weight 0) while each
+        (n, n) of the dense ADMM state tiles over (row, col). Each
+        bucket is padded and placed on the mesh once; per-matrix keys
+        are identical to the single-device bucketed path, so with a
+        frozen encoder the gather comm mode is exactly equivalent per
+        matrix (bitwise — tests/test_admm_3d.py)."""
+        from repro.distributed.sharding import (pfm_batch_shardings,
+                                                pfm_bucket_shardings_3d)
+        plan = make_mesh_plan(mesh3d, comm_mode=comm_mode, carry=carry)
+        if plan.data_axis is None or plan.row_axis is None:
+            raise ValueError(
+                f"fit(mesh3d=...) needs a mesh with 'data', 'row', and "
+                f"'col' axes (launch/mesh.make_mesh3d) — got "
+                f"{mesh3d.axis_names!r}")
+        D = plan.data_size
+        R, C = plan.grid
+        buckets = pack_buckets(prepped, max_batch=max_batch)
+        placed = []
+        for bucket in buckets:
+            n_pad = bucket.A.shape[-1]
+            if n_pad % R or n_pad % C:
+                raise ValueError(
+                    f"bucket n_pad={n_pad} does not tile over the "
+                    f"{R}x{C} tile grid — n_pad must divide by both "
+                    f"tile-grid extents (power-of-two n_pad does for "
+                    f"power-of-two meshes)")
+            # pad B to the data-axis extent, place ONCE (epochs reuse
+            # the placed arrays): A batch-shards AND tiles, the
+            # hierarchy / x_g / node_mask / weight only batch-shard
+            pb, w = pad_bucket(bucket, D)
+            tree = jax.device_put(
+                {"A": pb.A},
+                pfm_bucket_shardings_3d(mesh3d, {"A": pb.A},
+                                        axes=plan.all_axes))
+            rest = {"levels": pb.levels, "x_g": pb.x_g,
+                    "node_mask": pb.node_mask, "weight": w}
+            tree.update(jax.device_put(
+                rest, pfm_batch_shardings(mesh3d, rest,
+                                          axis=plan.data_axis)))
+            placed.append((pb.size, tree))
+
+        for epoch in range(epochs):
+            for bucket, (size_p, tree) in zip(buckets, placed):
+                key, sub = jax.random.split(key)
+                # keys for the REAL matrices first (identical to the
+                # single-device path), then replicated onto pad rows
+                keys = jax.random.split(sub, bucket.size)
+                extra = size_p - bucket.size
+                if extra:
+                    keys = jnp.concatenate(
+                        [keys, keys[jnp.arange(extra) % bucket.size]])
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = admm_train_plan(
+                    self.params, self.opt_state, tree["A"],
+                    tree["levels"], tree["x_g"], tree["node_mask"],
+                    keys, tree["weight"], cfg=self.cfg, opt=self.opt,
+                    mesh=mesh3d, plan=plan)
+                metrics = {k: np.asarray(v) for k, v in metrics.items()}
+                occ = metrics.pop("bcsr_occupancy", None)
+                jax.block_until_ready(self.params)
+                wall = time.perf_counter() - t0
+                for bi, name in enumerate(bucket.names):
+                    rec = {k: float(v[bi]) for k, v in metrics.items()}
+                    if occ is not None and occ.size:
+                        rec.update(bcsr_occupied=float(occ[-1, 0]),
+                                   bcsr_captured=float(occ[-1, 1]),
+                                   bcsr_budget=float(occ[-1, 2]))
+                    rec.update(epoch=epoch, matrix=name,
+                               wall_s=wall / bucket.size,
+                               bucket_size=bucket.size)
+                    self.history.append(rec)
+                    if verbose:
+                        print(f"  epoch {epoch} {name} "
+                              f"[3d {D}x{R}x{C}]: l1={rec['l1']:.1f} "
                               f"res={rec['residual']:.2f}")
         return self.history
 

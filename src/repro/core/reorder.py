@@ -278,9 +278,9 @@ def soft_permutation_batch_2d(scores, keys, *, grid, row_axis: str,
     mode selects how the Sinkhorn normalizations run:
       * "exact" (default) — all-gather the log-space tiles to the full
         (B, n, n) and run the same dispatch the single-device path uses
-        (`kops.sinkhorn`; inside a mesh that is the scan-chunked form
-        PR 2 pinned bitwise-equal to the batched Pallas oracle), then
-        slice tiles back out. This is what keeps the 2-D trainer
+        (`kops.sinkhorn`; inside a shard_map body that is the Pallas
+        kernel itself on the local shard — see `ops._manual_axes`),
+        then slice tiles back out. This is what keeps the 2-D trainer
         bitwise-equal to the bucketed path at lr=0: the reduction runs
         at reference shape behind the same op boundary.
       * "tiled" — `kops.sinkhorn_tiled`: every normalization runs

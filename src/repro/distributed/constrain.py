@@ -287,7 +287,10 @@ def summa_matmul(a_tile, b_colpanel, grid, axes, mm=None):
         k = jax.lax.rem(c + s, C)
         b_chunk = jax.lax.dynamic_slice_in_dim(
             b_colpanel, k * tmA, tmA, axis=b_colpanel.ndim - 2)
-        return acc + mm(a_rot, b_chunk)
+        # cast into the f32 accumulator: the local product may be
+        # bf16 (default mm on bf16 tiles), and strict dtype
+        # promotion rejects the implicit f32+bf16 add
+        return acc + mm(a_rot, b_chunk).astype(acc.dtype)
 
     def step(s, carry):
         a_rot, acc = carry
@@ -341,7 +344,7 @@ def summa_matmul_bcsr(a_vals, a_cids, b_colpanel, grid, axes,
         k = jax.lax.rem(c + s, C)
         b_chunk = jax.lax.dynamic_slice_in_dim(
             b_colpanel, k * tmA, tmA, axis=b_colpanel.ndim - 2)
-        return acc + bsmm_fn(vals, cids, b_chunk)
+        return acc + bsmm_fn(vals, cids, b_chunk).astype(acc.dtype)
 
     def step(s, carry):
         a_rot, acc = carry

@@ -285,3 +285,67 @@ def pfm_batch_shardings(mesh, bucket_tree, axis: str = "data"):
             return NamedSharding(mesh, P(*([None] * ndim)))
         return NamedSharding(mesh, P(*((axis,) + (None,) * (ndim - 1))))
     return jax.tree_util.tree_map(one, bucket_tree)
+
+
+# ------------- MeshPlan-driven ADMM training specs (DESIGN.md §15) ------
+def pfm_train_specs_plan(plan):
+    """(in_specs, out_specs) for shard_map-ing the unified plan trainer
+    `core/admm._admm_train_plan(params, opt_state, A, levels, x_g,
+    node_mask, keys, batch_weight) -> (params, opt_state, metrics)`
+    under any MeshPlan (duck-typed: anything with data_axis / row_axis /
+    col_axis / carry works, so this module never imports core.admm).
+
+    The table is the union of the degenerate tables: every bucket
+    tensor's leading B dim shards over the data axis when one is
+    present (`pfm_train_specs`), A's trailing (n, n) additionally tiles
+    over the (row, col) axes when those are present
+    (`pfm_train_specs_2d`); θ and the Adam state are always replicated.
+    Metrics are (B,)-leading → data-sharded, EXCEPT carry="bcsr"'s
+    "bcsr_occupancy" trajectory, which is psum-averaged over every
+    present axis inside the body and therefore replicated — with a data
+    axis present the metrics spec must be spelled per-key (a pytree
+    prefix can't split a dict)."""
+    d = plan.data_axis
+    row, col = plan.row_axis, plan.col_axis
+    repl = P()
+    b = P(d) if d is not None else repl
+    a_spec = P(d, row, col) if row is not None else b
+    in_specs = (repl, repl, a_spec, b, b, b, b, b)
+    if plan.carry == "bcsr" and d is not None:
+        metrics_spec = {"l1": b, "residual": b, "loss": b,
+                        "bcsr_occupancy": repl}
+    else:
+        metrics_spec = b if d is not None else repl
+    out_specs = (repl, repl, metrics_spec)
+    return in_specs, out_specs
+
+
+def pfm_train_specs_3d(axes=("data", "row", "col"), carry="dense"):
+    """Named 3-axis specialization of `pfm_train_specs_plan`: buckets
+    batch-shard over axes[0] while A tiles over (axes[1], axes[2])."""
+    class _Plan:
+        data_axis, row_axis, col_axis = axes
+    _Plan.carry = carry
+    return pfm_train_specs_plan(_Plan)
+
+
+def pfm_bucket_shardings_3d(mesh, bucket_tree, axes=("data", "row", "col")):
+    """NamedShardings for placing a bucket on a 3-axis mesh before the
+    plan trainer runs: every stacked tensor batch-shards its leading dim
+    over the data axis (callers pad B to the DATA-axis extent first —
+    core/pfm.pad_bucket), and the dense A stack (ndim >= 3) additionally
+    tiles its trailing two dims over (row, col). Leaves the data axis
+    does not divide are replicated."""
+    data, row, col = axes
+    d = mesh.shape[data]
+
+    def one(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim == 0 or leaf.shape[0] % d != 0:
+            return NamedSharding(mesh, P(*([None] * ndim)))
+        if ndim >= 3 and leaf.shape[-2] % mesh.shape[row] == 0 \
+                and leaf.shape[-1] % mesh.shape[col] == 0:
+            return NamedSharding(
+                mesh, P(*((data,) + (None,) * (ndim - 3) + (row, col))))
+        return NamedSharding(mesh, P(*((data,) + (None,) * (ndim - 1))))
+    return jax.tree_util.tree_map(one, bucket_tree)

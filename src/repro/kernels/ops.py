@@ -96,6 +96,21 @@ def _force_ref() -> bool:
     return os.environ.get("REPRO_FORCE_REF", "0") == "1"
 
 
+def _manual_axes() -> bool:
+    """True while tracing inside a shard_map body (manual mesh axes
+    bound). There a pallas_call is legal — operands are already local
+    shards, so no partitioning rule is needed — and running the REAL
+    kernel is what keeps distributed numerics bitwise-equal to the
+    single-device path: the kernel's fixed per-panel op sequence is
+    immune to the context-sensitive XLA fusion that makes jnp fallbacks
+    drift by ULPs between batch layouts (DESIGN.md §8 parity pins)."""
+    try:
+        from jax._src import core as _core
+        return bool(_core.get_axis_env().axis_sizes)
+    except Exception:  # pragma: no cover - private-API drift
+        return False
+
+
 def _interpret() -> bool:
     return not _on_tpu()
 
@@ -123,15 +138,23 @@ def sinkhorn(log_p: jnp.ndarray, n_iters: int = 20) -> jnp.ndarray:
     whole bucket in one kernel launch (leading grid axis). The VMEM
     envelope is per-matrix (each grid step holds one (n, m) panel), so
     the n limit is independent of B. Under distributed dispatch
-    (`dist_mode`) the batch-scanned XLA equivalent runs instead — inside
-    shard_map this sees the *per-shard* (B/D, n, m) shape, so the same
-    per-panel envelope reasoning applies to whatever backend executes
-    the scan body."""
+    (`dist_mode`) the choice splits on the context: inside a shard_map
+    body (manual axes bound) the kernel runs as-is on the local
+    (B/D, n, m) shard — bitwise the single-device path; in a GSPMD
+    context the batch-scanned XLA equivalent runs instead, since a
+    pallas_call has no partitioning rule."""
     n, m = log_p.shape[-2:]
     if _force_ref() or log_p.ndim > 3 or n > SINKHORN_VMEM_LIMIT \
             or n % 128 != 0 or m % 128 != 0:
         return ref.sinkhorn_ref(log_p, n_iters)
-    if dist_mode():
+    if dist_mode() and not _manual_axes():
+        # GSPMD context (sharded jit operands, no manual axes): a
+        # pallas_call cannot be partitioned, fall to the scanned XLA
+        # form. Inside shard_map the kernel itself runs (see
+        # `_manual_axes`) — the chunked form's logsumexp fuses with the
+        # surrounding graph and can round differently at per-shard
+        # batch extents, breaking the bitwise sharded == single-device
+        # metrics contract on tie-boundary inputs.
         return ref.sinkhorn_chunked(log_p, n_iters)
     return _sinkhorn_cvjp(log_p, n_iters)
 

@@ -180,7 +180,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
            "n_chips": n_chips, "profile": profile}
     try:
         if arch == "pfm-paper":
-            rec.update(_run_pfm_cell(shape_name, mesh, n_chips))
+            rec.update(_run_pfm_cell(shape_name, mesh, n_chips,
+                                     mesh_kind))
         else:
             cfg = get_config(arch)
             ok, why = api.shape_applicable(cfg, shape_name)
@@ -218,10 +219,19 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     return _save(rec, save)
 
 
-def _run_pfm_cell(shape_name: str, mesh, n_chips) -> dict:
+def _run_pfm_cell(shape_name: str, mesh, n_chips,
+                  mesh_kind: str = "single") -> dict:
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core.admm import PFMConfig
+    from repro.launch.mesh import make_mesh3d
     rec = {}
+
+    shape_spec = pfm_launch.PFM_SHAPES[shape_name]
+    if shape_spec["kind"] == "train_3d":
+        # the 3-axis trainer runs on its own ("data", "row", "col")
+        # mesh over the same chips — (4, 8, 8) at 256, (8, 8, 8) at 512
+        mesh = make_mesh3d(*shape_spec["mesh3d"][mesh_kind])
+        rec["mesh3d"] = list(shape_spec["mesh3d"][mesh_kind])
 
     def lower_with(n_admm):
         cfg = PFMConfig(
@@ -232,7 +242,7 @@ def _run_pfm_cell(shape_name: str, mesh, n_chips) -> dict:
         params_shape, opt, opt_state_shape = \
             pfm_launch.pfm_params_and_opt(cfg)
         kind = pfm_launch.PFM_SHAPES[shape_name]["kind"]
-        if kind in ("train_batch", "train_2d"):
+        if kind in ("train_batch", "train_2d", "train_3d"):
             # shard_map trainers: θ / Adam state replicated (the
             # in_specs demand it); the bucket is batch-sharded (1-D
             # data-parallel, DESIGN.md §8) or (n, n)-tiled (2-D
@@ -255,6 +265,12 @@ def _run_pfm_cell(shape_name: str, mesh, n_chips) -> dict:
                 # on this 16x16 mesh — DESIGN.md §11)
                 rec["comm_mode"] = "summa"
                 step = pfm_launch.make_pfm_train_2d_step(cfg, opt, mesh)
+            elif kind == "train_3d":
+                # same rationale as train_2d: summa keeps per-device
+                # transients at tile/panel size while the bucket rides
+                # the data axis (DESIGN.md §15)
+                rec["comm_mode"] = "summa"
+                step = pfm_launch.make_pfm_train_3d_step(cfg, opt, mesh)
             else:
                 step = pfm_launch.make_pfm_train_batch_step(cfg, opt,
                                                             mesh)
@@ -275,7 +291,7 @@ def _run_pfm_cell(shape_name: str, mesh, n_chips) -> dict:
     compiled = lower_with(4).compile()
     rec["compile_s"] = time.perf_counter() - t1
     rec["memory"] = analysis.memory_analysis_dict(compiled)
-    if kind in ("train_2d", "train_batch"):
+    if kind in ("train_2d", "train_batch", "train_3d"):
         # extrapolate over ADMM iterations (fori body counted once)
         c1 = _cell_costs(lower_with(1).compile(), mesh)
         c2 = _cell_costs(lower_with(2).compile(), mesh)

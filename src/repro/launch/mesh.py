@@ -35,6 +35,18 @@ def make_mesh2d(rows: int, cols: int):
     return jax.make_mesh((rows, cols), ("row", "col"))
 
 
+def make_mesh3d(data: int, rows: int, cols: int):
+    """("data", "row", "col") mesh for the mesh-shape-polymorphic ADMM
+    trainer (PFM.fit(mesh3d=...), DESIGN.md §15): shape buckets are
+    batch-sharded over the data axis while each (n, n) of the dense
+    training state is tiled (n/rows, n/cols) over (row, col)
+    simultaneously — the full-collection (many-matrix × large-n)
+    training regime. The 256-chip production shape is (4, 8, 8). On
+    CPU, XLA_FLAGS=--xla_force_host_platform_device_count=8 simulates
+    the (2, 2, 2) case (tests/test_admm_3d.py)."""
+    return jax.make_mesh((data, rows, cols), ("data", "row", "col"))
+
+
 def make_data_mesh(n: int | None = None):
     """1-D data-parallel mesh over n (default: all) local devices — the
     mesh shape PFM.fit(mesh=...) shards its batch buckets over. On CPU,

@@ -23,6 +23,12 @@ Shapes:
   train_64x1k — B=64 matrices at n=1024: the data-parallel bucketed
                 trainer (DESIGN.md §8) shard_map'd over the mesh's data
                 axis, θ replicated, θ-grads psum'd
+  train_4x8k_3d — the full-collection shape (DESIGN.md §15): B=4
+                matrices at n=8192 through the mesh-shape-polymorphic
+                trainer on the 256-chip (4, 8, 8) ("data", "row",
+                "col") mesh — the bucket batch-sharded over data AND
+                every (n, n) tiled (n/8, n/8) over (row, col), one
+                θ-grad psum over all three axes per iteration
   infer_512k  — n=524288 inference (GNN scores + argsort only; the dense
                 path never materializes at inference, matching Table 1's
                 O(GNN) complexity claim)
@@ -46,6 +52,13 @@ PFM_SHAPES = {
     # data-parallel bucketed training (DESIGN.md §8): B matrices of the
     # same shape bucket sharded over the mesh's data axis, θ replicated
     "train_64x1k": dict(n=1024, B=64, kind="train_batch"),
+    # 3-axis full-collection training (DESIGN.md §15): batch-sharded
+    # over "data" AND (n, n)-tiled over ("row", "col") in one
+    # shard_map. mesh3d maps dryrun mesh kind -> (data, rows, cols);
+    # (4, 8, 8) is the 256-chip production shape.
+    "train_4x8k_3d": dict(n=8192, B=4, kind="train_3d",
+                          mesh3d={"single": (4, 8, 8),
+                                  "multi": (8, 8, 8)}),
     "infer_512k": dict(n=524288, kind="infer"),
 }
 
@@ -67,6 +80,8 @@ PFM_ANALYSIS_PROGRAMS = {
     "train2d_summa_bcsr": dict(kind="train_2d", n=1024, B=1,
                                mesh=(2, 2), comm_mode="summa",
                                carry="bcsr", bcsr_slots=2),
+    "train3d_summa": dict(kind="train_3d", n=512, B=4, mesh=(2, 2, 2),
+                          comm_mode="summa", carry="dense"),
     "train_batch_sharded": dict(kind="train_batch", n=256, B=8,
                                 devices=8),
     "infer_bucket": dict(kind="infer", n=256, B=4),
@@ -104,13 +119,19 @@ def pfm_input_specs(shape_name: str, mesh):
     repl = NamedSharding(mesh, P())
     row = NamedSharding(mesh, P("data"))
 
-    if sh["kind"] in ("train_batch", "train_2d"):
+    if sh["kind"] in ("train_batch", "train_2d", "train_3d"):
         B = sh["B"]
         if sh["kind"] == "train_batch":
             # batch-sharded bucket (DESIGN.md §8): every tensor leads
             # with B split over the data axis; trailing dims local
             lead = NamedSharding(mesh, P("data"))
             a_shard = lead
+        elif sh["kind"] == "train_3d":
+            # 3-axis (DESIGN.md §15): every tensor leads with B split
+            # over "data"; the dense A stack is additionally tiled over
+            # ("row", "col") on its trailing two dims
+            lead = NamedSharding(mesh, P("data"))
+            a_shard = NamedSharding(mesh, P("data", "row", "col"))
         else:
             # 2-D model-parallel (DESIGN.md §10): only the dense A stack
             # is sharded — tiled over its trailing two dims; the batch
@@ -160,6 +181,20 @@ def make_pfm_train_2d_step(cfg: PFMConfig, opt, mesh,
     to their chunked-XLA forms."""
     return admm_mod.train_2d_fn(cfg, opt, mesh, tuple(axes),
                                 comm_mode=comm_mode, carry=carry)
+
+
+def make_pfm_train_3d_step(cfg: PFMConfig, opt, mesh,
+                           comm_mode: str = "summa",
+                           carry: str = "dense"):
+    """The mesh-shape-polymorphic trainer (DESIGN.md §15) on a 3-axis
+    ("data", "row", "col") mesh: the bucket batch-sharded over data,
+    every (n, n) of the dense state tiled over (row, col), θ
+    replicated, one θ-grad psum over all three axes per ADMM
+    iteration. Trace under kops.mesh_scope(mesh) so kernels lower to
+    their chunked-XLA forms."""
+    plan = admm_mod.make_mesh_plan(mesh, comm_mode=comm_mode,
+                                   carry=carry)
+    return admm_mod.train_plan_fn(cfg, opt, mesh, plan)
 
 
 def make_pfm_train_batch_step(cfg: PFMConfig, opt, mesh,

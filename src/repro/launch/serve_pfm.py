@@ -155,6 +155,32 @@ def serve(pfm: PFM, stream, max_batch: int = 8, max_queue: int = 64):
     return results, report
 
 
+def flush_stats(out: pathlib.Path, report: dict) -> dict:
+    """Merge the run's report into the stats file instead of
+    clobbering it (same pattern as benchmarks/run.py ->
+    bench_results.json): runs are keyed by their serve config, so a
+    re-run with the same config updates its row in place while rows
+    from other configs survive. Tolerates the pre-merge single-report
+    layout (and corrupt files) by starting fresh. Returns the
+    combined runs dict."""
+    cfg = report.get("config", {})
+    key = "|".join(f"{k}={cfg[k]}" for k in sorted(cfg))
+    combined = {}
+    if out.exists():
+        try:
+            prev = json.loads(out.read_text())
+            runs = prev.get("runs") if isinstance(prev, dict) else None
+            if isinstance(runs, dict):
+                combined = runs
+        except json.JSONDecodeError:
+            pass
+    combined[key] = report
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({"time": time.time(), "runs": combined},
+                              indent=2))
+    return combined
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--ckpt", default=None,
@@ -189,6 +215,11 @@ def main(argv=None):
     stream = synthetic_stream(n_stream, seed=args.seed, small=args.smoke)
     results, report = serve(pfm, stream, max_batch=args.max_batch,
                             max_queue=args.max_queue)
+    report["config"] = {"requests": n_stream, "seed": args.seed,
+                        "max_batch": args.max_batch,
+                        "max_queue": args.max_queue,
+                        "smoke": bool(args.smoke),
+                        "ckpt": args.ckpt or ""}
     for req_id, perm in sorted(results.items()):
         n = len(perm)
         assert sorted(perm.tolist()) == list(range(n)), \
@@ -208,9 +239,8 @@ def main(argv=None):
 
     out = pathlib.Path(args.stats_out) if args.stats_out \
         else OUT / "serve_pfm_stats.json"
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(report, indent=2))
-    print(f"[serve_pfm] wrote {out}")
+    combined = flush_stats(out, report)
+    print(f"[serve_pfm] wrote {out} ({len(combined)} run(s))")
     return report
 
 

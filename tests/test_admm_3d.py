@@ -1,0 +1,262 @@
+"""3-axis (data, row, col) mesh-shape-polymorphic ADMM parity suite
+(DESIGN.md §15).
+
+The in-process tests need 8 simulated devices and are marked
+`multidevice` (the tier1-3d CI leg runs exactly this configuration);
+`test_3d_parity_subprocess_smoke` is the always-runnable tier-1 pin.
+
+Parity contract (the acceptance criterion of PR 9): on a (2, 2, 2)
+("data", "row", "col") mesh — buckets batch-sharded over the data axis
+AND every (n, n) of L/Γ/P/M tiled over (row, col) simultaneously —
+`PFM.fit(mesh3d=...)`
+
+  * comm_mode="gather": bitwise-equal per matrix to the single-device
+    bucketed path at lr=0 (metrics AND every θ leaf), on ragged buckets
+    whose B the data axis does not divide (pad rows at weight 0);
+  * comm_mode="summa": per-backend rtol vs the single-device path
+    (psums reassociate f32 sums, DESIGN.md §11), and rtol-tight vs the
+    2-D summa path (same tile algebra, one extra psum axis);
+  * carry="bcsr": rtol-tight vs the 2-D bcsr path at the same slot
+    budget (the budget's truncation is identical on both), and bitwise
+    equal to the dense summa body at full occupancy.
+
+The wrappers' degenerate-plan semantics (fit(mesh=1-D),
+fit(mesh2d=2-D)) stay pinned by the existing suites
+(tests/test_sharded_pfm.py, tests/test_admm_2d.py) — this file only
+adds the composed case, plus the B-pad-multiple pin: the bucket pads to
+the DATA-axis extent, not the total device count.
+"""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.pfm as pfm_mod
+from repro.core.admm import PFMConfig
+from repro.core.pfm import PFM
+from repro.data import delaunay_like
+
+_NDEV = len(jax.devices())
+
+
+def _NEEDS(n):
+    def deco(fn):
+        fn = pytest.mark.multidevice(fn)
+        return pytest.mark.skipif(
+            _NDEV < n,
+            reason=f"needs >= {n} simulated devices (XLA_FLAGS="
+                   f"--xla_force_host_platform_device_count=8 before "
+                   f"jax initializes)")(fn)
+    return deco
+
+
+def _mesh3d(d, r, c):
+    from repro.launch.mesh import make_mesh3d
+    return make_mesh3d(d, r, c)
+
+
+def _mats(sizes, seed0=11):
+    return [(f"m{i}", delaunay_like(n, "gradel", seed=seed0 + i))
+            for i, n in enumerate(sizes)]
+
+
+def _fit_ref(cfg, mats, *, epochs=1):
+    ref = PFM(cfg, seed=0, x_mode="random")
+    return ref, ref.fit(mats, epochs=epochs)
+
+
+def _fit_3d(cfg, mats, mesh3d, *, epochs=1, **kw):
+    shd = PFM(cfg, seed=0, x_mode="random")
+    return shd, shd.fit(mats, epochs=epochs, mesh3d=mesh3d, **kw)
+
+
+def _assert_bitwise(h_ref, h_shd, ref, shd):
+    assert [h["matrix"] for h in h_ref] == [h["matrix"] for h in h_shd]
+    for a, b in zip(h_ref, h_shd):
+        for k in ("l1", "residual", "loss"):
+            assert a[k] == b[k], \
+                f"{a['matrix']}/{k}: {a[k]!r} != {b[k]!r}"
+    for pa, pb in zip(jax.tree_util.tree_leaves(ref.params),
+                     jax.tree_util.tree_leaves(shd.params)):
+        assert (np.asarray(pa) == np.asarray(pb)).all()
+
+
+def _assert_close(h_a, h_b, tol):
+    assert [h["matrix"] for h in h_a] == [h["matrix"] for h in h_b]
+    for a, b in zip(h_a, h_b):
+        for k in ("l1", "residual", "loss"):
+            np.testing.assert_allclose(a[k], b[k], rtol=tol, atol=tol,
+                                       err_msg=f"{a['matrix']}/{k}")
+
+
+@pytest.mark.tier1
+@_NEEDS(8)
+def test_fit3d_gather_lr0_bitwise_parity_2x2x2():
+    """lr=0, ragged bucket (B=3, which the data axis pads to 4), two
+    epochs: every recorded per-matrix metric and every θ leaf bitwise
+    equal to the single-device bucketed path — no tolerance. The pad
+    row rides the data axis at weight 0 and must contribute nothing."""
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0)
+    mats = _mats([100, 107, 114])
+    ref, h_ref = _fit_ref(cfg, mats, epochs=2)
+    shd, h_shd = _fit_3d(cfg, mats, _mesh3d(2, 2, 2), epochs=2)
+    _assert_bitwise(h_ref, h_shd, ref, shd)
+
+
+@pytest.mark.tier1
+@_NEEDS(8)
+def test_fit3d_mesh_kwarg_routes_3axis_mesh():
+    """The tentpole surface: fit(mesh=make_mesh3d(...)) routes to the
+    3-axis plan trainer and matches fit(mesh3d=...) bitwise."""
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0)
+    mats = _mats([100, 107])
+    a = PFM(cfg, seed=0, x_mode="random")
+    ha = a.fit(mats, epochs=1, mesh=_mesh3d(2, 2, 2))
+    b = PFM(cfg, seed=0, x_mode="random")
+    hb = b.fit(mats, epochs=1, mesh3d=_mesh3d(2, 2, 2))
+    _assert_bitwise(ha, hb, a, b)
+
+
+@pytest.mark.tier1
+@_NEEDS(8)
+def test_fit3d_summa_lr0_parity_2x2x2():
+    """summa over the composed mesh: per-backend rtol vs single-device
+    (reassociated f32 psums), rtol-tight vs the 2-D summa path."""
+    from repro.launch.mesh import make_mesh2d
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0)
+    mats = _mats([100, 107, 114])
+    _, h_ref = _fit_ref(cfg, mats)
+    _, h_3d = _fit_3d(cfg, mats, _mesh3d(2, 2, 2), comm_mode="summa")
+    _assert_close(h_ref, h_3d, 2e-4)
+    b = PFM(cfg, seed=0, x_mode="random")
+    h_2d = b.fit(mats, epochs=1, mesh2d=make_mesh2d(2, 2),
+                 comm_mode="summa")
+    _assert_close(h_2d, h_3d, 2e-5)
+
+
+@pytest.mark.tier1
+@_NEEDS(8)
+def test_fit3d_bcsr_parity_2x2x2():
+    """carry="bcsr" on the composed mesh: the slot budget's truncation
+    is identical to the 2-D bcsr path (rtol-tight), and the occupancy
+    columns land in the history."""
+    from repro.launch.mesh import make_mesh2d
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0, bcsr_block=32)
+    mats = _mats([100, 107, 114])
+    a = PFM(cfg, seed=0, x_mode="random")
+    h_2d = a.fit(mats, epochs=1, mesh2d=make_mesh2d(2, 2),
+                 comm_mode="summa", carry="bcsr")
+    _, h_3d = _fit_3d(cfg, mats, _mesh3d(2, 2, 2), comm_mode="summa",
+                      carry="bcsr")
+    _assert_close(h_2d, h_3d, 2e-5)
+    assert {"bcsr_occupied", "bcsr_captured",
+            "bcsr_budget"} <= set(h_3d[0])
+
+
+@pytest.mark.tier1
+@_NEEDS(8)
+def test_fit3d_bcsr_full_occupancy_bitwise_dense():
+    """slots >= nbc resolves spec.full: the bcsr carry must run the
+    dense summa body verbatim — bitwise equal output."""
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0, bcsr_block=32,
+                    bcsr_slots=2)
+    mats = _mats([100, 107])
+    a, hd = _fit_3d(cfg, mats, _mesh3d(2, 2, 2), comm_mode="summa")
+    b, hb = _fit_3d(cfg, mats, _mesh3d(2, 2, 2), comm_mode="summa",
+                    carry="bcsr")
+    assert [h["matrix"] for h in hd] == [h["matrix"] for h in hb]
+    for x, y in zip(hd, hb):
+        for k in ("l1", "residual", "loss"):
+            assert x[k] == y[k], (x["matrix"], k, x[k], y[k])
+
+
+@pytest.mark.tier1
+@_NEEDS(8)
+def test_fit3d_small_lr_close():
+    """lr > 0: the 3-axis path differs from single-device only in
+    θ-grad summation order (one tuple-axis psum vs a flat sum) and must
+    stay close over two epochs."""
+    cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=1e-4)
+    mats = _mats([100, 107, 114])
+    _, h_ref = _fit_ref(cfg, mats, epochs=2)
+    _, h_shd = _fit_3d(cfg, mats, _mesh3d(2, 2, 2), epochs=2)
+    _assert_close(h_ref, h_shd, 5e-2)
+
+
+@pytest.mark.tier1
+@_NEEDS(8)
+def test_fit3d_pads_to_data_extent_not_device_count(monkeypatch):
+    """THE B-padding pin: on a (2, 2, 2) mesh (8 devices) the bucket
+    pads its batch to a multiple of the DATA-axis extent (2), not the
+    device count (8) — tiling the (row, col) axes must not inflate the
+    batch. A wrong multiple silently wastes a 4x compute factor on
+    duplicated pad rows, so pin the exact value."""
+    seen = []
+    real_pad = pfm_mod.pad_bucket
+
+    def spy(bucket, multiple):
+        seen.append(multiple)
+        return real_pad(bucket, multiple)
+
+    monkeypatch.setattr(pfm_mod, "pad_bucket", spy)
+    cfg = PFMConfig(n_admm=1, n_sinkhorn=2, lr=0.0)
+    shd = PFM(cfg, seed=0, x_mode="random")
+    shd.fit(_mats([100, 107, 114]), epochs=1, mesh3d=_mesh3d(2, 2, 2))
+    assert seen == [2], seen
+
+
+@pytest.mark.tier1
+@_NEEDS(8)
+def test_fit3d_mesh_exclusivity_and_axis_validation():
+    cfg = PFMConfig(n_admm=1, n_sinkhorn=2, lr=0.0)
+    mats = _mats([100])
+    p = PFM(cfg, seed=0, x_mode="random")
+    from repro.launch.mesh import make_mesh2d
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        p.fit(mats, mesh2d=make_mesh2d(2, 2),
+              mesh3d=_mesh3d(2, 2, 2))
+    with pytest.raises(ValueError, match="'data', 'row', and 'col'"):
+        p.fit(mats, mesh3d=make_mesh2d(2, 2))
+
+
+@pytest.mark.slow
+@pytest.mark.tier1
+def test_3d_parity_subprocess_smoke():
+    """Always-runnable pin: fresh interpreter, 8 simulated CPU devices,
+    lr=0 bitwise parity of PFM.fit(mesh3d=2x2x2) vs the bucketed
+    path."""
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, {str(pathlib.Path("src").resolve())!r})
+        import jax, numpy as np
+        from repro.core.admm import PFMConfig
+        from repro.core.pfm import PFM
+        from repro.data import delaunay_like
+        from repro.launch.mesh import make_mesh3d
+
+        assert len(jax.devices()) == 8
+        cfg = PFMConfig(n_admm=2, n_sinkhorn=4, lr=0.0)
+        mats = [(f"m{{i}}", delaunay_like(100 + 7 * i, "gradel",
+                                          seed=11 + i))
+                for i in range(3)]
+        a = PFM(cfg, seed=0, x_mode="random")
+        ha = a.fit(mats, epochs=1)
+        b = PFM(cfg, seed=0, x_mode="random")
+        hb = b.fit(mats, epochs=1, mesh3d=make_mesh3d(2, 2, 2))
+        for x, y in zip(ha, hb):
+            assert x["matrix"] == y["matrix"]
+            for k in ("l1", "residual", "loss"):
+                assert x[k] == y[k], (x["matrix"], k, x[k], y[k])
+        print("ADMM_3D_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600)
+    assert "ADMM_3D_OK" in res.stdout, res.stderr[-3000:]

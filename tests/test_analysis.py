@@ -280,11 +280,11 @@ def test_cli_rejects_unknown_program(tmp_path):
 # to bcsr_slots — the loop STRUCTURE is what they pin, so the golden
 # compiles run at the cheapest sizes that exercise each mode.
 GOLDEN_COUNTS = {
-    "gather": {"all-gather": 10, "all-reduce": 58,
+    "gather": {"all-gather": 10, "all-reduce": 29,
                "reduce-scatter": 3},
-    "summa": {"all-gather": 6, "all-reduce": 146,
+    "summa": {"all-gather": 6, "all-reduce": 117,
               "reduce-scatter": 1, "collective-permute": 12},
-    "bcsr": {"all-gather": 5, "all-reduce": 147,
+    "bcsr": {"all-gather": 5, "all-reduce": 118,
              "reduce-scatter": 1, "collective-permute": 22},
 }
 

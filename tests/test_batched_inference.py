@@ -141,3 +141,41 @@ def test_microbatcher_bounded_queue_and_completeness():
         assert sorted(results[i].tolist()) == list(range(A.shape[0]))
         np.testing.assert_array_equal(results[i], pfm.permutation(A))
     assert sum(f["batch"] for f in batcher.flush_stats) == 7
+
+
+# ------------------------------------------------- stats persistence
+def test_serve_stats_merge_not_clobber(tmp_path):
+    """Back-to-back flushes with different configs must both survive in
+    serve_pfm_stats.json (the bare write_text used to clobber the
+    file); a re-run with the same config updates its row in place."""
+    import json
+    from repro.launch.serve_pfm import flush_stats
+    out = tmp_path / "serve_pfm_stats.json"
+    r1 = {"requests": 10, "throughput_rps": 5.0,
+          "config": {"requests": 10, "max_batch": 4, "smoke": True}}
+    r2 = {"requests": 32, "throughput_rps": 9.0,
+          "config": {"requests": 32, "max_batch": 8, "smoke": False}}
+    flush_stats(out, r1)
+    combined = flush_stats(out, r2)
+    assert len(combined) == 2
+    on_disk = json.loads(out.read_text())["runs"]
+    assert {r["requests"] for r in on_disk.values()} == {10, 32}
+    # same config again: row updated in place, no duplicate key
+    combined = flush_stats(out, dict(r2, throughput_rps=11.0))
+    assert len(combined) == 2
+    on_disk = json.loads(out.read_text())["runs"]
+    assert any(r["throughput_rps"] == 11.0 for r in on_disk.values())
+
+
+def test_serve_stats_tolerates_legacy_single_report(tmp_path):
+    """Files written by the pre-merge layout (one bare report dict)
+    must not break the new flush — it starts a fresh keyed store."""
+    import json
+    from repro.launch.serve_pfm import flush_stats
+    out = tmp_path / "serve_pfm_stats.json"
+    out.write_text(json.dumps({"requests": 5, "wall_s": 1.0}))
+    combined = flush_stats(
+        out, {"requests": 7, "config": {"max_batch": 2}})
+    assert len(combined) == 1
+    assert json.loads(out.read_text())["runs"]["max_batch=2"][
+        "requests"] == 7

@@ -48,6 +48,43 @@ def test_no_tmp_dirs_after_commit(tmp_path):
     assert not any(p.name.endswith(".tmp") for p in tmp_path.iterdir())
 
 
+def test_foreign_entries_survive_and_dont_crash(tmp_path):
+    """Retention/latest_step must parse only exactly-conforming
+    step_<10 digits> dirs: foreign entries next to them (step_backup/,
+    a notes file) used to crash the int(...) parse."""
+    tree = _tree()
+    (tmp_path / "step_backup").mkdir(parents=True)
+    (tmp_path / "step_backup" / "keep.txt").write_text("mine")
+    (tmp_path / "NOTES.md").write_text("not a checkpoint")
+    for s in (1, 2, 3):
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    assert latest_step(tmp_path) == 3
+    # foreign dir neither counted for retention nor deleted by it
+    assert (tmp_path / "step_backup" / "keep.txt").read_text() == "mine"
+    steps = sorted(p.name for p in tmp_path.iterdir()
+                   if p.name.startswith("step_0"))
+    assert steps == ["step_0000000002", "step_0000000003"]
+
+
+def test_crashed_save_tmp_dir_gcd_and_ignored(tmp_path):
+    """A crash mid-save leaves step_<n>.tmp behind; it must never be
+    counted as a checkpoint and the next successful save GCs it."""
+    tree = _tree()
+    save_checkpoint(tmp_path, 1, tree)
+    # simulate a crashed save at a later step: partial tmp, no commit
+    orphan = tmp_path / "step_0000000099.tmp"
+    orphan.mkdir()
+    (orphan / "data.bin").write_bytes(b"partial")
+    assert latest_step(tmp_path) == 1  # tmp is not a checkpoint
+    save_checkpoint(tmp_path, 2, tree)
+    assert not orphan.exists()  # orphan GC'd by the next save
+    assert latest_step(tmp_path) == 2
+    restored = restore_checkpoint(tmp_path, 2, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
 def test_corruption_detected(tmp_path):
     tree = _tree()
     save_checkpoint(tmp_path, 3, tree)

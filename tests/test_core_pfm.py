@@ -233,6 +233,30 @@ def test_admm_batch_close_to_sequential_small_lr():
                                        seq[nm]["residual"], rtol=0.25)
 
 
+def test_prepare_random_features_salted_per_matrix():
+    """x_mode="random" used to build PRNGKey(seed) fresh per prepare()
+    call, so every matrix with the same n_pad got IDENTICAL "random"
+    features. The key must be salted by matrix content: different
+    matrices differ, the same matrix reproduces across calls (and
+    across names), and the draw stays seed-deterministic."""
+    pfm = PFM(PFMConfig(n_admm=2, n_sinkhorn=4), seed=0,
+              x_mode="random")
+    A1 = delaunay_like(100, "gradel", seed=3)
+    A2 = delaunay_like(100, "gradel", seed=4)
+    p1, p2 = pfm.prepare(A1, "a"), pfm.prepare(A2, "b")
+    assert p1.gd.n_pad == p2.gd.n_pad  # same bucket, the bug's trigger
+    assert not np.array_equal(np.asarray(p1.x_g), np.asarray(p2.x_g))
+    # same matrix: reproducible across calls, independent of the label
+    again = pfm.prepare(A1, "relabeled")
+    np.testing.assert_array_equal(np.asarray(p1.x_g),
+                                  np.asarray(again.x_g))
+    # still seeded: a different PFM seed moves the features
+    other = PFM(PFMConfig(n_admm=2, n_sinkhorn=4), seed=1,
+                x_mode="random")
+    assert not np.array_equal(np.asarray(other.prepare(A1, "a").x_g),
+                              np.asarray(p1.x_g))
+
+
 def test_pfm_state_dict_roundtrip():
     pfm = PFM(PFMConfig(n_admm=2, n_sinkhorn=4), seed=0)
     A = delaunay_like(90, "gradel", seed=7)
